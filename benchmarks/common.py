@@ -1,0 +1,76 @@
+"""Shared benchmark helpers: engine construction per system, key/value
+generation matching the paper's methodology (16 B keys; 4–64 KiB values),
+and result formatting."""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import DB, DBConfig
+
+SYSTEMS = {
+    "rocksdb": "none",  # coupled KV — RocksDB baseline
+    "blobdb": "flush",  # flush-time separation — BlobDB/WiscKey baseline
+    "bvlsm": "wal",  # WAL-time separation — the paper
+}
+
+WAL_MODES = ["off", "async", "sync"]
+KEY_SIZE = 16
+
+
+def make_db(system: str, wal_mode: str, workdir: str | None = None, **overrides) -> tuple[DB, str]:
+    path = workdir or tempfile.mkdtemp(prefix=f"bench_{system}_{wal_mode}_")
+    kw = dict(
+        separation_mode=SYSTEMS[system],
+        wal_mode=wal_mode,
+        value_threshold=4096,
+        memtable_size=8 << 20,
+        level1_max_bytes=32 << 20,
+        num_bvalue_queues=4,
+        bvcache_bytes=8 << 20,
+    )
+    kw.update(overrides)
+    return DB(path, DBConfig(**kw)), path
+
+
+def gen_keys(n: int, pattern: str, seed: int = 0) -> list[bytes]:
+    if pattern == "seq":
+        return [f"{i:016d}".encode() for i in range(n)]
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(n)
+    return [f"{i:016d}".encode() for i in ids]
+
+
+def gen_value(size: int, seed: int) -> bytes:
+    # mildly compressible payload, deterministic
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 64, size=size, dtype=np.uint8).tobytes()
+
+
+def run_fill(db: DB, keys: list[bytes], value_size: int) -> dict:
+    val = gen_value(value_size, 7)
+    t0 = time.monotonic()
+    for i, k in enumerate(keys):
+        db.put(k, val)
+    db.flush()
+    dt = time.monotonic() - t0
+    user_mb = len(keys) * (KEY_SIZE + value_size) / 1e6
+    st = db.stats.snapshot()
+    return {
+        "seconds": dt,
+        "mb_per_s": user_mb / dt,
+        "ops_per_s": len(keys) / dt,
+        "write_amp": st["write_amp"],
+        "stall_s": st["stall_seconds"],
+        "device_mb": st["device_bytes"] / 1e6,
+    }
+
+
+def cleanup(db: DB, path: str) -> None:
+    try:
+        db.close()
+    finally:
+        shutil.rmtree(path, ignore_errors=True)

@@ -1,0 +1,60 @@
+"""Paper Fig. 6 + Fig. 7 — db_bench fill{random,seq} across the six
+workloads (R-WO/R-WA/R-WS/S-WO/S-WA/S-WS) × value sizes 4–64 KiB ×
+{rocksdb, blobdb, bvlsm}.
+
+Scaled to this container (--mb controls user bytes per cell, default 48 MB
+— enough to trigger flushes and L0→L1 compactions at the scaled MemTable
+size); same key size (16 B), same value grid, same systems as the paper.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from .common import KEY_SIZE, SYSTEMS, cleanup, gen_keys, make_db, run_fill
+
+
+def run(pattern: str = "random", mb: int = 48, value_sizes=(4096, 16384, 65536),
+        wal_modes=("off", "async", "sync"), systems=("rocksdb", "blobdb", "bvlsm")) -> list[dict]:
+    out = []
+    for vs in value_sizes:
+        n = max(64, int(mb * 1e6 / (vs + KEY_SIZE)))
+        keys = gen_keys(n, pattern)
+        for wal in wal_modes:
+            for system in systems:
+                db, path = make_db(system, wal)
+                try:
+                    r = run_fill(db, keys, vs)
+                finally:
+                    cleanup(db, path)
+                rec = {
+                    "bench": f"fill{pattern}",
+                    "system": system,
+                    "wal": wal,
+                    "value_size": vs,
+                    "n": n,
+                    **r,
+                }
+                out.append(rec)
+                print(
+                    f"fill{pattern:6s} {system:8s} wal={wal:5s} v={vs//1024:3d}K: "
+                    f"{r['mb_per_s']:8.1f} MB/s  wamp={r['write_amp']:.2f}  "
+                    f"stall={r['stall_s']:.2f}s",
+                    flush=True,
+                )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="random", choices=["random", "seq"])
+    ap.add_argument("--mb", type=int, default=48)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(args.pattern, args.mb)
+    if args.out:
+        json.dump(res, open(args.out, "w"), indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Render the §Roofline table from the dry-run JSON artifacts
+(artifacts/dryrun/*.json) — per (arch × shape × mesh): the three terms,
+dominant bottleneck, MODEL_FLOPS/HLO ratio, memory fit."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_LIMIT = 16 * 2**30
+
+
+def load(art_dir: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def render(recs: list[dict], mesh: str | None = None) -> str:
+    rows = []
+    hdr = (
+        f"{'arch':24s} {'shape':12s} {'mesh':10s} {'variant':18s} {'st':4s} "
+        f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} {'dominant':>12s} "
+        f"{'useful%':>8s} {'mem/dev':>9s} {'fits':>5s}"
+    )
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in sorted(
+        recs, key=lambda r: (r["mesh"], r["arch"], r["shape"], r.get("variant", ""))
+    ):
+        if mesh and r["mesh"] != mesh:
+            continue
+        var = r.get("variant", "baseline") or "baseline"
+        if r.get("status") == "skip":
+            rows.append(
+                f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} {var:18s} skip  {r['reason']}"
+            )
+            continue
+        if r.get("status") != "ok":
+            rows.append(
+                f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} {var:18s} ERR   {r.get('error','')[:60]}"
+            )
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]
+        fits = "yes" if mem <= HBM_LIMIT else "NO"
+        rows.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} {var:18s} ok   "
+            f"{rf['compute_s']:10.4f} {rf['memory_s']:10.4f} {rf['collective_s']:10.4f} "
+            f"{rf['dominant'].replace('_s',''):>12s} "
+            f"{100*r['cost'].get('useful_flops_ratio',0):7.1f}% "
+            f"{mem/2**30:8.2f}G {fits:>5s}"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    print(render(load(args.dir), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

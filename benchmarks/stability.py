@@ -1,0 +1,120 @@
+"""Paper Fig. 9 — sustained-write I/O stability.
+
+Engine layer: continuous random 4 KiB-value writes for --seconds per
+system; report per-interval instant throughput, mean, and σ (the paper's
+claim: BVLSM has the smallest σ; RocksDB oscillates with compaction; BlobDB
+collapses after its in-memory absorption phase).
+
+Framework layer (the DESIGN.md §3 jitter mapping): train-step wall-time
+jitter with synchronous vs BVLSM-async checkpointing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from .common import cleanup, gen_value, make_db
+
+
+def engine_stability(seconds: float = 20.0, value_size: int = 4096,
+                     interval: float = 1.0, systems=("rocksdb", "blobdb", "bvlsm")) -> list[dict]:
+    out = []
+    val = gen_value(value_size, 5)
+    for system in systems:
+        db, path = make_db(system, "async")
+        try:
+            t_end = time.monotonic() + seconds
+            i = 0
+            while time.monotonic() < t_end:
+                db.put(f"{i:016d}".encode(), val)
+                i += 1
+            series = db.stats.interval_throughput(interval)
+        finally:
+            cleanup(db, path)
+        rates = np.array([r for _, r in series if r > 0] or [0.0])
+        rec = {
+            "bench": "stability",
+            "system": system,
+            "intervals": len(rates),
+            "mean_mb_s": float(rates.mean()),
+            "std_mb_s": float(rates.std()),
+            "min_mb_s": float(rates.min()),
+            "max_mb_s": float(rates.max()),
+            "cv": float(rates.std() / rates.mean()) if rates.mean() else 0.0,
+            "series": [(round(t, 1), round(r, 2)) for t, r in series],
+        }
+        out.append(rec)
+        print(
+            f"stability {system:8s}: mean={rec['mean_mb_s']:7.1f} MB/s "
+            f"σ={rec['std_mb_s']:6.1f} cv={rec['cv']:.3f} "
+            f"[{rec['min_mb_s']:.0f}..{rec['max_mb_s']:.0f}]",
+            flush=True,
+        )
+    return out
+
+
+def checkpoint_jitter(steps: int = 60, ckpt_interval: int = 10) -> list[dict]:
+    """Train-step jitter: sync vs async BVLSM checkpointing."""
+    import shutil
+
+    from repro.configs import get_config
+    from repro.training.optimizer import OptimizerConfig
+    from repro.training.train_step import TrainConfig
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    out = []
+    for mode in ("sync", "bvlsm_async"):
+        ckpt_dir = f"/tmp/jitter_{mode}"
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+        cfg = get_config("llama3-8b").reduced(d_model=128, n_layers=4)
+        tcfg = TrainerConfig(
+            steps=steps,
+            global_batch=4,
+            seq_len=128,
+            ckpt_dir=ckpt_dir,
+            ckpt_interval=ckpt_interval,
+            ckpt_async=(mode == "bvlsm_async"),
+            log_every=10_000,
+            train=TrainConfig(opt=OptimizerConfig(warmup_steps=10, total_steps=1000)),
+        )
+        tr = Trainer(cfg, tcfg)
+        try:
+            tr.run()
+            times = np.array(tr.step_times[2:])  # drop compile step
+            rec = {
+                "bench": "ckpt_jitter",
+                "mode": mode,
+                "mean_ms": float(times.mean() * 1e3),
+                "std_ms": float(times.std() * 1e3),
+                "p99_ms": float(np.percentile(times, 99) * 1e3),
+                "max_ms": float(times.max() * 1e3),
+                "loop_stall_s": tr.ckpt.stall_seconds,
+            }
+        finally:
+            tr.close()
+            shutil.rmtree(ckpt_dir, ignore_errors=True)
+        out.append(rec)
+        print(
+            f"ckpt_jitter {mode:12s}: mean={rec['mean_ms']:6.1f}ms "
+            f"p99={rec['p99_ms']:7.1f}ms max={rec['max_ms']:7.1f}ms "
+            f"loop_stall={rec['loop_stall_s']:.2f}s",
+            flush=True,
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=20.0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = engine_stability(args.seconds) + checkpoint_jitter()
+    if args.out:
+        json.dump(res, open(args.out, "w"), indent=2)
+
+
+if __name__ == "__main__":
+    main()

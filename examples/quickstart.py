@@ -1,0 +1,63 @@
+"""Quickstart: the BVLSM key-value store in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the public API (put/get/scan/delete), then the paper's core effect:
+identical workload through the three systems, with write amplification and
+the Key-ValueOffset separation visible in the engine stats.
+"""
+import shutil
+import tempfile
+
+from repro.core import DB, DBConfig
+
+# --- 1. basic API ----------------------------------------------------------
+d = tempfile.mkdtemp(prefix="bvlsm_quickstart_")
+db = DB(d, DBConfig.bvlsm(wal_mode="sync", value_threshold=4096))
+
+db.put(b"user/1", b"small value")  # < threshold: stays inline
+db.put(b"user/2", b"B" * 65536)  # 64 KiB: separated at WAL time
+db.put(b"user/3", b"C" * 16384)
+print("get user/1:", db.get(b"user/1"))
+print("get user/2:", len(db.get(b"user/2")), "bytes (via BValue store)")
+db.delete(b"user/1")
+print("after delete:", db.get(b"user/1"))
+print("scan user/:", [(k, len(v)) for k, v in db.scan(b"user/", 10)])
+
+db.flush()
+print("\nengine stats:", {k: v for k, v in db.stats.snapshot().items() if "bytes" in k})
+print("BVCache:", db.bvcache.stats())
+db.close()
+
+# crash-safety: reopen and read back
+db2 = DB(d, DBConfig.bvlsm(wal_mode="sync"))
+assert db2.get(b"user/2") == b"B" * 65536
+print("\nreopened after close — data intact")
+db2.close()
+shutil.rmtree(d)
+
+# --- 2. the paper's effect: one workload, three systems ---------------------
+print("\nwrite amplification, 200 × 32 KiB random puts:")
+import numpy as np
+
+val = np.random.default_rng(0).bytes(32768)
+for name, cfg in [
+    ("rocksdb (none)", DBConfig.rocksdb_like(wal_mode="sync", memtable_size=1 << 20)),
+    ("blobdb (flush)", DBConfig.blobdb_like(wal_mode="sync", memtable_size=1 << 20)),
+    ("bvlsm (wal)   ", DBConfig.bvlsm(wal_mode="sync", memtable_size=1 << 20)),
+]:
+    d = tempfile.mkdtemp()
+    db = DB(d, cfg)
+    keys = [f"{i:08d}".encode() for i in np.random.default_rng(1).permutation(200)]
+    for k in keys:
+        db.put(k, val)
+    db.flush()
+    db.compact_all()
+    st = db.stats.snapshot()
+    print(
+        f"  {name}: write_amp={st['write_amp']:.2f} "
+        f"(wal={st['wal_bytes']>>10}KiB flush={st['flush_bytes']>>10}KiB "
+        f"compact={st['compaction_bytes']>>10}KiB bvalue={st['bvalue_bytes']>>10}KiB)"
+    )
+    db.close()
+    shutil.rmtree(d)

@@ -1,0 +1,85 @@
+"""End-to-end training driver: an LM trained for a few hundred steps with
+BVLSM-backed fault-tolerant checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~8M params, CPU-friendly
+    PYTHONPATH=src python examples/train_lm.py --large         # ~100M params (accelerator-scale)
+    PYTHONPATH=src python examples/train_lm.py --simulate-preemption
+
+Demonstrates: data pipeline → jit'd train step (AdamW, remat, grad clip) →
+async BVLSM checkpoints → kill/restart resume (exact data cursor).
+"""
+import argparse
+import shutil
+
+from repro.configs import get_config
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import TrainConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--large", action="store_true", help="~100M params")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fresh", action="store_true")
+    ap.add_argument("--simulate-preemption", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.fresh:
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    base = get_config("llama3-8b")
+    if args.large:  # ~100M
+        cfg = base.reduced(d_model=640, n_layers=10, n_heads=10, n_kv_heads=5,
+                           head_dim=64, d_ff=2560, vocab=32000, vocab_pad_multiple=128)
+        batch, seq = 8, 512
+    else:  # ~8M — a few hundred steps run in minutes on this CPU container
+        cfg = base.reduced(d_model=256, n_layers=4, n_heads=8, n_kv_heads=4,
+                           head_dim=32, d_ff=1024, vocab=8192, vocab_pad_multiple=128)
+        batch, seq = 4, 128
+    print(f"model: {cfg.params_count()/1e6:.1f}M params, {args.steps} steps")
+
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        global_batch=batch,
+        seq_len=seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_interval=50,
+        ckpt_async=True,
+        log_every=20,
+        train=TrainConfig(
+            opt=OptimizerConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps)
+        ),
+    )
+    trainer = Trainer(cfg, tcfg)
+    if args.simulate_preemption:
+        orig_cb = trainer.pipeline.next_batch
+        count = {"n": 0}
+
+        def wrapped():
+            count["n"] += 1
+            if count["n"] == args.steps // 2:
+                trainer._preempted = True  # as if SIGTERM arrived
+            return orig_cb()
+
+        trainer.pipeline.next_batch = wrapped
+
+    try:
+        result = trainer.run()
+        ms = result["metrics"]
+        if ms:
+            print(f"\nstatus={result['status']} steps={result['step']}")
+            print(f"loss {ms[0]['loss']:.4f} → {ms[-1]['loss']:.4f}")
+            print(f"checkpoint loop-stall total: {trainer.ckpt.stall_seconds:.2f}s "
+                  f"({trainer.ckpt.save_count} saves)")
+            print("storage engine:", {k: v for k, v in trainer.store.stats().items()
+                                      if k in ("write_amp", "wal_bytes", "bvalue_bytes")})
+        if result["status"] == "preempted":
+            print("\nre-run the same command to resume from the preemption checkpoint.")
+    finally:
+        trainer.close()
+
+
+if __name__ == "__main__":
+    main()

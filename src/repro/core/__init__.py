@@ -1,0 +1,12 @@
+"""BVLSM core — the paper's contribution: an LSM-tree KV store with WAL-time
+key-value separation, multi-queue BValue store, and BVCache.
+
+``DBConfig.separation_mode`` selects the three systems the paper compares:
+``"none"`` (RocksDB baseline), ``"flush"`` (BlobDB/WiscKey), ``"wal"``
+(BVLSM).
+"""
+from .config import DBConfig
+from .db import DB
+from .record import ValueOffset
+
+__all__ = ["DB", "DBConfig", "ValueOffset"]

@@ -1,0 +1,56 @@
+"""Bloom filter for SSTable key lookups (Kirsch–Mitzenmacher double hashing),
+matching LevelDB's ~10 bits/key default. Serialized form:
+``[k u8][nbits u32][bitmap bytes]``.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+
+
+def _hash2(key: bytes) -> tuple[int, int]:
+    h1 = zlib.crc32(key) & 0xFFFFFFFF
+    h2 = zlib.adler32(key) & 0xFFFFFFFF
+    # adler32 is weak for short keys; mix.
+    h2 = (h2 * 0x9E3779B1 + 0x7F4A7C15) & 0xFFFFFFFF
+    return h1, h2 | 1
+
+
+class BloomFilter:
+    __slots__ = ("k", "nbits", "bits")
+
+    def __init__(self, k: int, nbits: int, bits: bytearray):
+        self.k = k
+        self.nbits = nbits
+        self.bits = bits
+
+    @classmethod
+    def build(cls, keys: list[bytes], bits_per_key: int = 10) -> "BloomFilter":
+        n = max(1, len(keys))
+        nbits = max(64, n * bits_per_key)
+        k = max(1, min(30, int(bits_per_key * 0.69)))  # ln2 * bits/key
+        bits = bytearray((nbits + 7) // 8)
+        for key in keys:
+            h1, h2 = _hash2(key)
+            for i in range(k):
+                b = (h1 + i * h2) % nbits
+                bits[b >> 3] |= 1 << (b & 7)
+        return cls(k, nbits, bits)
+
+    def may_contain(self, key: bytes) -> bool:
+        h1, h2 = _hash2(key)
+        nbits = self.nbits
+        bits = self.bits
+        for i in range(self.k):
+            b = (h1 + i * h2) % nbits
+            if not bits[b >> 3] & (1 << (b & 7)):
+                return False
+        return True
+
+    def encode(self) -> bytes:
+        return struct.pack("<BI", self.k, self.nbits) + bytes(self.bits)
+
+    @staticmethod
+    def decode(buf: bytes) -> "BloomFilter":
+        k, nbits = struct.unpack_from("<BI", buf, 0)
+        return BloomFilter(k, nbits, bytearray(buf[5:]))

@@ -1,0 +1,289 @@
+"""BValue store — the paper's multi-queue parallel big-value log (§III-C).
+
+Each *queue* owns a dedicated append-only BValue file and (in async mode) a
+dedicated writer thread: the userspace realization of "one NVMe submission
+queue per BValue file" (see DESIGN.md §3 for the hardware-adaptation note).
+Offsets are **reserved synchronously** at dispatch time — this is what makes
+WAL-time separation possible: the ``ValueOffset`` must be known before the
+Key-ValueOffset record is appended to the WAL.
+
+Write modes:
+
+* ``put_sync``  — caller pwrites at its reserved offset and fsyncs before
+  returning (WAL-enabled strong-consistency path: value durable before the
+  WAL record that references it). Concurrent callers on different queues
+  proceed in parallel (pwrite/fsync release the GIL).
+* ``put_async`` — reservation returns immediately; the queue's writer thread
+  batches contiguous runs to page multiples, pwrites, fsyncs, then unpins
+  the corresponding BVCache entries (which held the only copy meanwhile).
+
+Dispatch across queues is round-robin or least-loaded (pending bytes),
+matching the paper's "hash or round-robin" scheduler.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import zlib
+from dataclasses import dataclass
+
+from .record import ValueOffset
+
+_SENTINEL = object()
+
+
+@dataclass(slots=True)
+class _Pending:
+    file_id: int
+    offset: int
+    value: bytes
+    key: bytes  # for BVCache unpin on completion
+
+
+class _BValueQueue:
+    """One writer queue bound to one (rolling) BValue file."""
+
+    def __init__(self, mgr: "BValueManager", qid: int):
+        self.mgr = mgr
+        self.qid = qid
+        self.file_id = mgr._alloc_file_id(qid)
+        self.tail = 0
+        self.pending_bytes = 0
+        self._fd = self._open(self.file_id)
+        self._lock = threading.Lock()
+        self._q: queue.Queue = queue.Queue()
+        self._thread: threading.Thread | None = None
+        if mgr.async_writes:
+            self._thread = threading.Thread(
+                target=self._writer_loop, name=f"bvalue-q{qid}", daemon=True
+            )
+            self._thread.start()
+
+    def _open(self, file_id: int) -> int:
+        path = self.mgr.file_path(file_id)
+        fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        # append-only file but we pwrite at reserved offsets:
+        os.close(fd)
+        return os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
+
+    def reserve(self, size: int) -> tuple[int, int]:
+        """Reserve [offset, offset+size) — returns (file_id, offset)."""
+        with self._lock:
+            if self.tail + size > self.mgr.max_file_bytes and self.tail > 0:
+                os.fsync(self._fd)
+                os.close(self._fd)
+                self.file_id = self.mgr._alloc_file_id(self.qid)
+                self._fd = self._open(self.file_id)
+                self.tail = 0
+            off = self.tail
+            self.tail += size
+            return self.file_id, off
+
+    # -- sync path ------------------------------------------------------
+    def write_sync(self, file_id: int, offset: int, value: bytes) -> None:
+        os.pwrite(self._fd_for(file_id), value, offset)
+        os.fsync(self._fd_for(file_id))
+        self.mgr._account(len(value))
+
+    def _fd_for(self, file_id: int) -> int:
+        # the queue only ever writes to its current file; rolls are fsynced.
+        return self._fd
+
+    # -- async path -------------------------------------------------------
+    def submit(self, item: _Pending) -> None:
+        with self._lock:
+            self.pending_bytes += len(item.value)
+        self._q.put(item)
+
+    def _writer_loop(self) -> None:
+        import time
+
+        gather_s = self.mgr.gather_window_s
+        while True:
+            item = self._q.get()
+            if item is _SENTINEL:
+                return
+            batch = [item]
+            nbytes = len(item.value)
+            # "aggregate small-to-medium writes into full pages": gather
+            # within a short window so a slow producer still yields large
+            # batches — one fsync per BATCH, not per value (the paper's
+            # async page-aligned submission).
+            deadline = time.monotonic() + gather_s
+            while nbytes < self.mgr.batch_bytes:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=timeout)
+                except queue.Empty:
+                    break
+                if nxt is _SENTINEL:
+                    self._flush_batch(batch)
+                    return
+                batch.append(nxt)
+                nbytes += len(nxt.value)
+            self._flush_batch(batch)
+
+    def _flush_batch(self, batch: list[_Pending]) -> None:
+        if not batch:
+            return
+        # contiguous-run coalescing: reservations on this queue are ordered,
+        # so adjacent pendings usually form one pwrite.
+        runs: list[list[_Pending]] = [[batch[0]]]
+        for it in batch[1:]:
+            last = runs[-1][-1]
+            if it.file_id == last.file_id and it.offset == last.offset + len(last.value):
+                runs[-1].append(it)
+            else:
+                runs.append([it])
+        total = 0
+        for run in runs:
+            blob = b"".join(p.value for p in run)
+            os.pwrite(self._fd_for(run[0].file_id), blob, run[0].offset)
+            total += len(blob)
+        os.fsync(self._fd)
+        self.mgr._account(total)
+        with self._lock:
+            self.pending_bytes -= total
+        if self.mgr.on_persisted_many is not None:
+            self.mgr.on_persisted_many(
+                [(p.key, ValueOffset(p.file_id, p.offset, len(p.value))) for p in batch]
+            )
+        elif self.mgr.on_persisted is not None:
+            for p in batch:
+                self.mgr.on_persisted(p.key, ValueOffset(p.file_id, p.offset, len(p.value)))
+
+    def drain(self) -> None:
+        if self._thread is not None:
+            self._q.put(_SENTINEL)
+            self._thread.join(timeout=30)
+            self._thread = None
+
+    def close(self) -> None:
+        self.drain()
+        try:
+            os.fsync(self._fd)
+        except OSError:
+            pass
+        os.close(self._fd)
+
+
+class BValueManager:
+    """Dispatches separated big values across N parallel queues."""
+
+    def __init__(
+        self,
+        directory: str,
+        num_queues: int = 4,
+        async_writes: bool = True,
+        dispatch: str = "round_robin",
+        page_size: int = 4096,
+        batch_bytes: int = 1 << 18,
+        max_file_bytes: int = 256 << 20,
+        gather_window_s: float = 0.02,
+        stats=None,
+        on_persisted=None,
+        on_persisted_many=None,
+        next_file_id: int = 0,
+    ):
+        assert dispatch in ("round_robin", "least_loaded")
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self.async_writes = async_writes
+        self.dispatch = dispatch
+        self.page_size = page_size
+        self.batch_bytes = batch_bytes
+        self.max_file_bytes = max_file_bytes
+        self.gather_window_s = gather_window_s
+        self.stats = stats
+        self.on_persisted = on_persisted
+        self.on_persisted_many = on_persisted_many
+        self._file_lock = threading.Lock()
+        self._next_file_id = next_file_id
+        self._rr = 0
+        self.queues = [_BValueQueue(self, q) for q in range(num_queues)]
+        self._read_fds: dict[int, int] = {}
+        self._read_lock = threading.Lock()
+
+    # -- file naming / ids --------------------------------------------------
+    def file_path(self, file_id: int) -> str:
+        return os.path.join(self.dir, f"bv_{file_id:06d}.val")
+
+    def _alloc_file_id(self, qid: int) -> int:
+        with self._file_lock:
+            fid = self._next_file_id
+            self._next_file_id += 1
+            return fid
+
+    def _account(self, n: int) -> None:
+        if self.stats:
+            self.stats.add("bvalue_bytes", n)
+
+    # -- write path -----------------------------------------------------------
+    def _pick_queue(self) -> _BValueQueue:
+        if self.dispatch == "least_loaded":
+            return min(self.queues, key=lambda q: q.pending_bytes)
+        q = self.queues[self._rr % len(self.queues)]
+        self._rr += 1
+        return q
+
+    def put(self, key: bytes, value: bytes, sync: bool) -> ValueOffset:
+        q = self._pick_queue()
+        file_id, off = q.reserve(len(value))
+        voff = ValueOffset(file_id, off, len(value), zlib.crc32(value) & 0xFFFFFFFF)
+        if sync or not self.async_writes:
+            q.write_sync(file_id, off, value)
+        else:
+            q.submit(_Pending(file_id, off, value, key))
+        return voff
+
+    # -- read path ------------------------------------------------------------
+    def get(self, voff: ValueOffset, verify: bool = False) -> bytes:
+        fd = self._reader_fd(voff.file_id)
+        buf = os.pread(fd, voff.size, voff.offset)
+        if len(buf) != voff.size:
+            raise IOError(
+                f"short BValue read: file {voff.file_id} off {voff.offset} "
+                f"want {voff.size} got {len(buf)}"
+            )
+        if verify and voff.crc and (zlib.crc32(buf) & 0xFFFFFFFF) != voff.crc:
+            raise IOError(f"BValue CRC mismatch at file {voff.file_id}+{voff.offset}")
+        return buf
+
+    def drop_reader(self, file_id: int) -> None:
+        with self._read_lock:
+            fd = self._read_fds.pop(file_id, None)
+            if fd is not None:
+                os.close(fd)
+
+    def _reader_fd(self, file_id: int) -> int:
+        with self._read_lock:
+            fd = self._read_fds.get(file_id)
+            if fd is None:
+                fd = os.open(self.file_path(file_id), os.O_RDONLY)
+                self._read_fds[file_id] = fd
+            return fd
+
+    # -- lifecycle -------------------------------------------------------------
+    def flush(self) -> None:
+        """Barrier: wait for all pending async writes to hit disk."""
+        for q in self.queues:
+            while q.pending_bytes > 0 or not q._q.empty():
+                import time
+
+                time.sleep(0.001)
+
+    @property
+    def next_file_id(self) -> int:
+        with self._file_lock:
+            return self._next_file_id
+
+    def close(self) -> None:
+        for q in self.queues:
+            q.close()
+        with self._read_lock:
+            for fd in self._read_fds.values():
+                os.close(fd)
+            self._read_fds.clear()

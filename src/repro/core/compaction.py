@@ -1,0 +1,251 @@
+"""Flush + leveled compaction, run by a background worker thread.
+
+The write-amplification mechanics the paper targets live here: with
+``separation_mode="none"`` every compaction rewrites full values across
+levels; with ``"flush"`` (BlobDB) values leave the pipeline at flush time;
+with ``"wal"`` (BVLSM) they never enter it. All three modes share this exact
+code — the benchmark deltas isolate the separation stage.
+
+Stall behaviour mirrors RocksDB: L0 at ``slowdown_trigger`` delays writers,
+at ``stop_trigger`` blocks them — the source of the I/O jitter in the
+paper's Fig. 2/9.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import traceback
+
+from .record import ValueOffset, kTypeDeletion, kTypeValue, kTypeValuePtr
+from .sstable import SSTableWriter, table_path
+
+
+def _merge_iters(iters):
+    """Heap-merge (key, seq, type, value) streams; newest version first per
+    key; yields every version (caller dedups)."""
+    heap = []
+    for i, it in enumerate(iters):
+        it = iter(it)
+        for key, seq, type_, value in it:
+            heapq.heappush(heap, (key, -seq, i, type_, value, it))
+            break
+    while heap:
+        key, nseq, i, type_, value, it = heapq.heappop(heap)
+        yield key, -nseq, type_, value
+        for k2, s2, t2, v2 in it:
+            heapq.heappush(heap, (k2, -s2, i, t2, v2, it))
+            break
+
+
+class Compactor:
+    def __init__(self, db):
+        self.db = db  # back-reference; uses db.versions, db.cfg, db.stats
+
+    # ------------------------------------------------------------------
+    # flush
+    # ------------------------------------------------------------------
+    def flush_memtable(self, mem) -> None:
+        db = self.db
+        cfg = db.cfg
+        file_no = db.versions.new_file_no()
+        writer = SSTableWriter(table_path(db.path, file_no), cfg.block_size, cfg.compression)
+        n_written = 0
+        for key, seq, type_, value in mem.sorted_items():
+            if (
+                cfg.separation_mode == "flush"
+                and type_ == kTypeValue
+                and len(value) >= cfg.value_threshold
+            ):
+                # BlobDB/WiscKey: separate at flush — value goes to the value
+                # log now; only the pointer reaches L0.
+                voff = db.bvalue.put(key, value, sync=cfg.sync_flush_io)
+                writer.add(key, seq, kTypeValuePtr, voff.encode())
+            else:
+                writer.add(key, seq, type_, value)
+            n_written += 1
+        if n_written == 0:
+            writer.abandon()
+            return
+        meta = writer.finish(file_no)
+        db.stats.add("flush_bytes", meta.size)
+        db.stats.add("flush_count")
+        db.versions.log_and_apply(
+            {
+                "add": [(0, meta.to_wire())],
+                "last_seq": mem.last_seq,
+                "bvalue_next_file_id": db.bvalue.next_file_id,
+            }
+        )
+        # this memtable's WAL is now redundant — delete it
+        if getattr(mem, "wal_no", None) is not None:
+            try:
+                import os
+
+                os.unlink(db._wal_path(mem.wal_no))
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------------
+    # compaction picking
+    # ------------------------------------------------------------------
+    def pick(self):
+        """Returns (level, [input files Ln], [input files Ln+1]) or None."""
+        db = self.db
+        cfg = db.cfg
+        v = db.versions.current
+        # L0 score by file count; deeper levels by byte ratio.
+        best_level, best_score = -1, 1.0
+        score0 = len(v.levels[0]) / cfg.l0_compaction_trigger
+        if score0 >= best_score:
+            best_level, best_score = 0, score0
+        for level in range(1, cfg.num_levels - 1):
+            score = v.level_bytes(level) / cfg.level_max_bytes(level)
+            if score > best_score:
+                best_level, best_score = level, score
+        if best_level < 0:
+            return None
+        level = best_level
+        if level == 0:
+            inputs = list(v.levels[0])
+            if not inputs:
+                return None
+            smallest = min(f.smallest for f in inputs)
+            largest = max(f.largest for f in inputs)
+        else:
+            # round-robin pointer within the level (LevelDB style)
+            ptr = db.versions.compaction_ptr.get(level, b"")
+            files = v.levels[level]
+            pick_file = next((f for f in files if f.smallest > ptr), files[0])
+            db.versions.compaction_ptr[level] = pick_file.smallest
+            inputs = [pick_file]
+            smallest, largest = pick_file.smallest, pick_file.largest
+        overlaps = v.files_touching(level + 1, smallest, largest)
+        total = sum(f.size for f in inputs) + sum(f.size for f in overlaps)
+        if level > 0 and total > cfg.max_compaction_input_bytes and len(overlaps) > 1:
+            overlaps = overlaps[: max(1, len(overlaps) // 2)]
+        return level, inputs, overlaps
+
+    # ------------------------------------------------------------------
+    # compaction run
+    # ------------------------------------------------------------------
+    def run(self, level: int, inputs, overlaps) -> None:
+        db = self.db
+        cfg = db.cfg
+        out_level = level + 1
+        v = db.versions.current
+        bottom = all(not v.levels[l] for l in range(out_level + 1, cfg.num_levels))
+        iters = [db.versions.reader(f.file_no) for f in inputs + overlaps]
+        read_bytes = sum(f.size for f in inputs + overlaps)
+
+        target = max(cfg.memtable_size, 4 << 20)
+        writer = None
+        file_no = None
+        metas = []
+
+        def roll():
+            nonlocal writer, file_no
+            if writer is not None and writer._count > 0:
+                metas.append(writer.finish(file_no))
+                writer = None
+            elif writer is not None:
+                writer.abandon()
+                writer = None
+
+        last_key = None
+        for key, seq, type_, value in _merge_iters(iters):
+            if key == last_key:
+                if type_ == kTypeValuePtr:  # shadowed big value → dead
+                    db.dead_tracker.on_dead(ValueOffset.decode(value))
+                continue  # older version shadowed (no snapshots)
+            last_key = key
+            if type_ == kTypeDeletion and bottom:
+                continue  # tombstone reached the bottom — drop it
+            if writer is None:
+                file_no = db.versions.new_file_no()
+                writer = SSTableWriter(
+                    table_path(db.path, file_no), cfg.block_size, cfg.compression
+                )
+            writer.add(key, seq, type_, value)
+            if writer._offset >= target:
+                roll()
+        roll()
+
+        written = sum(m.size for m in metas)
+        db.stats.add("compaction_bytes", written)
+        db.stats.add("compaction_read_bytes", read_bytes)
+        db.stats.add("compaction_count")
+        edit = {
+            "add": [(out_level, m.to_wire()) for m in metas],
+            "delete": [(level, f.file_no) for f in inputs]
+            + [(out_level, f.file_no) for f in overlaps],
+        }
+        db.versions.log_and_apply(edit)
+        for f in inputs + overlaps:
+            db.versions.drop_reader(f.file_no)
+            try:
+                import os
+
+                os.unlink(table_path(db.path, f.file_no))
+            except OSError:
+                pass
+
+
+class BackgroundWorker(threading.Thread):
+    """Single background thread servicing flushes then compactions,
+    mirroring a 1-thread RocksDB pool (container has 1 vCPU)."""
+
+    def __init__(self, db):
+        super().__init__(name="lsm-background", daemon=True)
+        self.db = db
+        self.cv = threading.Condition()
+        self._stop = False
+        self.error: Exception | None = None
+        self.compactor = Compactor(db)
+
+    def signal(self) -> None:
+        with self.cv:
+            self.cv.notify()
+
+    def stop(self) -> None:
+        with self.cv:
+            self._stop = True
+            self.cv.notify()
+        self.join(timeout=60)
+
+    def _work_available(self) -> bool:
+        db = self.db
+        if db.immutables:
+            return True
+        return self.compactor.pick() is not None
+
+    def run(self) -> None:
+        db = self.db
+        try:
+            while True:
+                with self.cv:
+                    while not self._stop and not self._work_available():
+                        self.cv.wait(timeout=0.2)
+                    if self._stop and not self._work_available():
+                        return
+                # 1) flushes take priority (unblock writers)
+                mem = None
+                with db.mutex:
+                    if db.immutables:
+                        mem = db.immutables[0]
+                if mem is not None:
+                    self.compactor.flush_memtable(mem)
+                    with db.mutex:
+                        db.immutables.pop(0)
+                        db.writer_cv.notify_all()
+                    continue
+                # 2) one compaction step
+                picked = self.compactor.pick()
+                if picked is not None:
+                    self.compactor.run(*picked)
+                    with db.mutex:
+                        db.writer_cv.notify_all()
+        except Exception as e:  # surface to foreground instead of dying silently
+            self.error = e
+            traceback.print_exc()
+            with db.mutex:
+                db.writer_cv.notify_all()

@@ -1,0 +1,75 @@
+"""DBConfig — one config selects among the paper's three systems.
+
+``separation_mode``:
+
+* ``"none"``  — RocksDB baseline: values ride WAL → MemTable → every level.
+* ``"flush"`` — BlobDB/WiscKey baseline: separation at MemTable→L0 flush
+  (full value still in WAL + MemTable).
+* ``"wal"``   — **BVLSM**: separation before the WAL append; only
+  Key-ValueOffset goes downstream.
+
+``wal_mode``: ``"sync" | "async" | "off"`` — the paper's R-WS/R-WA/R-WO axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(slots=True)
+class DBConfig:
+    # --- the paper's variable ---
+    separation_mode: str = "wal"  # none | flush | wal
+    value_threshold: int = 4096  # bytes; >= threshold → separated
+    # --- durability ---
+    wal_mode: str = "sync"  # sync | async | off
+    wal_flush_interval_s: float = 0.05
+    wal_flush_bytes: int = 1 << 20
+    # --- memtable ---
+    memtable_size: int = 8 << 20  # paper: 128 MiB; scaled default for tests
+    max_immutables: int = 2  # paper setup: 1 immutable (+5 mutable pool)
+    # --- levels / compaction ---
+    num_levels: int = 7
+    l0_compaction_trigger: int = 4
+    l0_slowdown_trigger: int = 8
+    l0_stop_trigger: int = 12
+    level1_max_bytes: int = 64 << 20
+    level_size_multiplier: int = 10
+    max_compaction_input_bytes: int = 256 << 20
+    # --- sstable ---
+    block_size: int = 4096
+    compression: bool = False
+    # --- BValue multi-queue store (paper §III-C) ---
+    num_bvalue_queues: int = 4
+    bvalue_dispatch: str = "round_robin"  # round_robin | least_loaded
+    bvalue_page_size: int = 4096
+    bvalue_batch_bytes: int = 1 << 20
+    bvalue_max_file_bytes: int = 256 << 20
+    bvalue_gather_window_s: float = 0.02
+    # --- BVCache (paper §III-D) ---
+    bvcache_bytes: int = 8 << 20  # paper: equal to MemTable capacity
+    bvcache_policy: str = "lru"  # lru | lfu
+    bvcache_enabled: bool = True  # ablation: False bypasses optimization
+    # hits (pinned/unpersisted entries are still consulted — correctness)
+    # --- misc ---
+    paranoid_checks: bool = False  # CRC-verify BValue reads
+    sync_flush_io: bool = True
+
+    def level_max_bytes(self, level: int) -> int:
+        if level <= 0:
+            return self.l0_compaction_trigger * self.memtable_size
+        b = self.level1_max_bytes
+        for _ in range(level - 1):
+            b *= self.level_size_multiplier
+        return b
+
+    @staticmethod
+    def rocksdb_like(**kw) -> "DBConfig":
+        return DBConfig(separation_mode="none", **kw)
+
+    @staticmethod
+    def blobdb_like(**kw) -> "DBConfig":
+        return DBConfig(separation_mode="flush", **kw)
+
+    @staticmethod
+    def bvlsm(**kw) -> "DBConfig":
+        return DBConfig(separation_mode="wal", **kw)

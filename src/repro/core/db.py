@@ -1,0 +1,314 @@
+"""BVLSM DB facade — put/get/delete/scan + recovery.
+
+One engine, three systems (see :mod:`.config`): ``separation_mode`` selects
+where key–value separation happens. The BVLSM path (§III-B of the paper):
+
+WAL-enabled::
+
+    value --fsync--> BValue file            (multi-queue, parallel)
+    Key-ValueOffset --append/fsync--> WAL   (tiny record)
+    Key-ValueOffset --> MemTable --> SSTable
+
+WAL-disabled / async::
+
+    value --> BVCache (pinned) --> background batch write --> BValue file
+    Key-ValueOffset --> MemTable (--> buffered WAL in async mode)
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+from .bvalue import BValueManager
+from .bvcache import BVCache
+from .gc import BValueGC, DeadValueTracker
+from .compaction import BackgroundWorker, _merge_iters
+from .config import DBConfig
+from .manifest import VersionSet
+from .memtable import MemTable
+from .record import (
+    ValueOffset,
+    decode_entries,
+    encode_entries,
+    kTypeDeletion,
+    kTypeValue,
+    kTypeValuePtr,
+)
+from .stats import EngineStats
+from .wal import WALWriter, replay_wal
+
+
+class DB:
+    def __init__(self, path: str, cfg: DBConfig | None = None):
+        self.path = path
+        self.cfg = cfg or DBConfig()
+        os.makedirs(path, exist_ok=True)
+        self.stats = EngineStats()
+        self.mutex = threading.RLock()
+        self.writer_cv = threading.Condition(self.mutex)
+
+        self.versions = VersionSet(path, self.cfg.num_levels)
+        self.versions.open()
+        self._seq = self.versions.last_seq
+
+        self.bvcache = BVCache(self.cfg.bvcache_bytes, self.cfg.bvcache_policy)
+        self.dead_tracker = DeadValueTracker()
+        self.bvalue = BValueManager(
+            os.path.join(path, "bvalue"),
+            num_queues=self.cfg.num_bvalue_queues,
+            async_writes=True,
+            dispatch=self.cfg.bvalue_dispatch,
+            page_size=self.cfg.bvalue_page_size,
+            batch_bytes=self.cfg.bvalue_batch_bytes,
+            max_file_bytes=self.cfg.bvalue_max_file_bytes,
+            gather_window_s=self.cfg.bvalue_gather_window_s,
+            stats=self.stats,
+            on_persisted=self.bvcache.unpin,
+            on_persisted_many=self.bvcache.unpin_many,
+            next_file_id=self.versions.bvalue_next_file_id,
+        )
+
+        self.mem = MemTable()
+        self.immutables: list[MemTable] = []
+        self._wal_no = 0
+        self.wal: WALWriter | None = None
+        self._recover()
+        self._open_wal()
+
+        self.worker = BackgroundWorker(self)
+        self.worker.start()
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # recovery
+    # ------------------------------------------------------------------
+    def _wal_path(self, no: int) -> str:
+        return os.path.join(self.path, f"wal_{no:06d}.log")
+
+    def _recover(self) -> None:
+        logs = sorted(
+            f for f in os.listdir(self.path) if f.startswith("wal_") and f.endswith(".log")
+        )
+        for name in logs:
+            no = int(name[4:-4])
+            self._wal_no = max(self._wal_no, no + 1)
+            for payload in replay_wal(os.path.join(self.path, name)):
+                seq, entries = decode_entries(payload)
+                for type_, key, val in entries:
+                    self.mem.add(seq, type_, key, val)
+                    self._seq = max(self._seq, seq)
+            os.unlink(os.path.join(self.path, name))
+
+    def _open_wal(self) -> None:
+        if self.cfg.wal_mode == "off":
+            self.wal = None
+            return
+        self.wal = WALWriter(
+            self._wal_path(self._wal_no),
+            mode=self.cfg.wal_mode,
+            flush_interval_s=self.cfg.wal_flush_interval_s,
+            flush_bytes=self.cfg.wal_flush_bytes,
+            stats=self.stats,
+        )
+        self.mem.wal_no = self._wal_no  # type: ignore[attr-defined]
+        self._wal_no += 1
+
+    # ------------------------------------------------------------------
+    # write path
+    # ------------------------------------------------------------------
+    def put(self, key: bytes, value: bytes) -> None:
+        self._write(kTypeValue, key, value)
+
+    def delete(self, key: bytes) -> None:
+        self._write(kTypeDeletion, key, b"")
+
+    def _write(self, type_: int, key: bytes, value: bytes) -> None:
+        cfg = self.cfg
+        separate = (
+            type_ == kTypeValue
+            and cfg.separation_mode == "wal"
+            and len(value) >= cfg.value_threshold
+        )
+        # --- WAL-time separation happens OUTSIDE the DB mutex: parallel
+        # callers stream values onto different queues concurrently. ---
+        if separate:
+            sync_value = cfg.wal_mode == "sync"
+            voff = self.bvalue.put(key, value, sync=sync_value)
+            self.bvcache.insert(key, voff, value, pinned=not sync_value)
+            self.dead_tracker.on_write(voff)
+            mem_type, mem_val = kTypeValuePtr, voff.encode()
+        else:
+            mem_type, mem_val = type_, value
+
+        with self.mutex:
+            if self.worker.error is not None:
+                raise RuntimeError("background worker failed") from self.worker.error
+            self._maybe_stall_locked()
+            self._seq += 1
+            seq = self._seq
+            if self.wal is not None:
+                self.wal.append(encode_entries(seq, [(mem_type, key, mem_val)]))
+            prev = self.mem.add(seq, mem_type, key, mem_val)
+            if prev is not None and prev[1] == kTypeValuePtr:
+                self.dead_tracker.on_dead(ValueOffset.decode(prev[2]))
+            self.stats.mark_user_write(len(key) + len(value))
+            if self.mem.approximate_size >= cfg.memtable_size:
+                self._rotate_memtable_locked()
+
+    def _maybe_stall_locked(self) -> None:
+        cfg = self.cfg
+        t0 = None
+        while (
+            len(self.immutables) >= cfg.max_immutables
+            or len(self.versions.current.levels[0]) >= cfg.l0_stop_trigger
+        ):
+            if self.worker.error is not None:
+                raise RuntimeError("background worker failed") from self.worker.error
+            if t0 is None:
+                t0 = time.monotonic()
+            self.worker.signal()
+            self.writer_cv.wait(timeout=0.05)
+        if t0 is not None:
+            self.stats.add_stall(time.monotonic() - t0)
+        l0 = len(self.versions.current.levels[0])
+        if l0 >= cfg.l0_slowdown_trigger:
+            # RocksDB delayed-write: back off proportionally to L0 excess.
+            delay = min(0.001 * (l0 - cfg.l0_slowdown_trigger + 1), 0.01)
+            self.stats.add_stall(delay)
+            time.sleep(delay)
+
+    def _rotate_memtable_locked(self) -> None:
+        if self.wal is not None:
+            self.wal.flush()
+            self.wal.close()
+        self.immutables.append(self.mem)
+        self.mem = MemTable()
+        self._open_wal()
+        self.worker.signal()
+
+    # ------------------------------------------------------------------
+    # read path
+    # ------------------------------------------------------------------
+    def get(self, key: bytes) -> bytes | None:
+        with self.mutex:
+            tables = [self.mem, *reversed(self.immutables)]
+            version = self.versions.current
+        for t in tables:
+            found, type_, value = t.get(key)
+            if found:
+                return self._resolve(key, type_, value)
+        for _level, fmeta in version.candidates_for_get(key):
+            reader = self.versions.reader(fmeta.file_no)
+            found, _seq, type_, value = reader.get(key)
+            if found:
+                return self._resolve(key, type_, value)
+        return None
+
+    def _resolve(self, key: bytes, type_: int, value: bytes) -> bytes | None:
+        if type_ == kTypeDeletion:
+            return None
+        if type_ == kTypeValue:
+            return value
+        voff = ValueOffset.decode(value)
+        cached = self.bvcache.get_if_unpersisted(
+            key, voff, pinned_only=not self.cfg.bvcache_enabled
+        )
+        if cached is not None:
+            self.bvcache.hits += 1
+            return cached
+        self.bvcache.misses += 1
+        return self.bvalue.get(voff, verify=self.cfg.paranoid_checks)
+
+    def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
+        """Range scan: merged view across memtables + all levels."""
+        with self.mutex:
+            mems = [self.mem, *reversed(self.immutables)]
+            version = self.versions.current
+        iters = [m.range_items(start, None) for m in mems]
+        for f in version.levels[0]:
+            if f.largest >= start:
+                iters.append(self.versions.reader(f.file_no).iter_from(start))
+        for level in range(1, len(version.levels)):
+            for f in version.levels[level]:
+                if f.largest >= start:
+                    iters.append(self.versions.reader(f.file_no).iter_from(start))
+        out: list[tuple[bytes, bytes]] = []
+        last = None
+        for key, _seq, type_, value in _merge_iters(iters):
+            if key == last:
+                continue
+            last = key
+            resolved = self._resolve(key, type_, value)
+            if resolved is None:
+                continue
+            out.append((key, resolved))
+            if len(out) >= count:
+                break
+        return out
+
+    # ------------------------------------------------------------------
+    # maintenance / lifecycle
+    # ------------------------------------------------------------------
+    def flush(self) -> None:
+        """Rotate + flush all memtables; barrier on value/WAL persistence."""
+        with self.mutex:
+            if len(self.mem):
+                self._rotate_memtable_locked()
+        self.wait_idle(compactions=False)
+        self.bvalue.flush()
+        if self.wal is not None:
+            self.wal.flush()
+
+    def wait_idle(self, compactions: bool = True, timeout: float = 120.0) -> None:
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            if self.worker.error is not None:
+                raise RuntimeError("background worker failed") from self.worker.error
+            with self.mutex:
+                busy = bool(self.immutables)
+            if not busy and compactions:
+                busy = self.worker.compactor.pick() is not None
+            if not busy:
+                return
+            self.worker.signal()
+            time.sleep(0.005)
+        raise TimeoutError("wait_idle timed out")
+
+    def gc_collect(self, threshold: float = 0.5) -> dict:
+        """Reclaim BValue files whose dead ratio ≥ threshold (beyond-paper
+        extension — see core/gc.py)."""
+        return BValueGC(self, threshold).collect()
+
+    def compact_all(self) -> None:
+        """Drive compaction to quiescence (test/benchmark helper)."""
+        self.wait_idle(compactions=True)
+
+    def close(self, crash: bool = False) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if not crash:
+            self.bvalue.flush()
+        self.worker.stop() if not crash else self._crash_stop_worker()
+        if self.wal is not None:
+            self.wal.close(drop_buffered=crash)
+        self.bvalue.close()
+        self.versions.close()
+
+    def _crash_stop_worker(self) -> None:
+        # crash simulation: stop the worker without flushing memtables
+        with self.worker.cv:
+            self.worker._stop = True
+            self.worker.cv.notify()
+        # prevent the "stop" path from seeing pending work
+        with self.mutex:
+            self.immutables.clear()
+        self.worker.join(timeout=30)
+
+    # convenience --------------------------------------------------------
+    def __enter__(self) -> "DB":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,144 @@
+"""Manifest: versioned level metadata + edit log (RocksDB MANIFEST analogue).
+
+A *Version* is the immutable set of live SSTables per level. Mutations are
+*VersionEdits* appended to a CRC-framed msgpack log; recovery replays the
+log. Tracked alongside the file layout: ``last_seq``, ``next_file_no``, and
+``bvalue_next_file_id`` so BValue files never collide across restarts.
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import msgpack
+
+from .record import frame_record, iter_framed_records
+from .sstable import FileMetadata, SSTableReader, table_path
+
+MANIFEST_NAME = "MANIFEST"
+
+
+class Version:
+    """Immutable snapshot of the LSM level structure."""
+
+    __slots__ = ("levels",)
+
+    def __init__(self, num_levels: int, levels=None):
+        self.levels: list[list[FileMetadata]] = (
+            levels if levels is not None else [[] for _ in range(num_levels)]
+        )
+
+    def clone(self) -> "Version":
+        return Version(len(self.levels), [list(lv) for lv in self.levels])
+
+    def level_bytes(self, level: int) -> int:
+        return sum(f.size for f in self.levels[level])
+
+    def files_touching(self, level: int, smallest: bytes, largest: bytes):
+        out = []
+        for f in self.levels[level]:
+            if f.largest >= smallest and f.smallest <= largest:
+                out.append(f)
+        return out
+
+    def candidates_for_get(self, key: bytes):
+        """Yield (level, FileMetadata) newest-first for a point lookup."""
+        # L0 files may overlap — newest first (we append newest at index 0).
+        for f in self.levels[0]:
+            if f.smallest <= key <= f.largest:
+                yield 0, f
+        for level in range(1, len(self.levels)):
+            files = self.levels[level]
+            lo, hi = 0, len(files) - 1
+            while lo <= hi:
+                mid = (lo + hi) // 2
+                if files[mid].largest < key:
+                    lo = mid + 1
+                elif files[mid].smallest > key:
+                    hi = mid - 1
+                else:
+                    yield level, files[mid]
+                    break
+
+
+class VersionSet:
+    def __init__(self, directory: str, num_levels: int):
+        self.dir = directory
+        self.num_levels = num_levels
+        self.current = Version(num_levels)
+        self.last_seq = 0
+        self.next_file_no = 1
+        self.bvalue_next_file_id = 0
+        self._manifest = None
+        self._lock = threading.Lock()
+        self._readers: dict[int, SSTableReader] = {}
+        self.compaction_ptr: dict[int, bytes] = {}
+
+    # -- manifest log -----------------------------------------------------
+    def _manifest_path(self) -> str:
+        return os.path.join(self.dir, MANIFEST_NAME)
+
+    def open(self) -> None:
+        path = self._manifest_path()
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                buf = f.read()
+            for payload in iter_framed_records(buf):
+                self._apply(msgpack.unpackb(payload))
+        self._manifest = open(path, "ab", buffering=0)
+
+    def _apply(self, edit: dict) -> None:
+        v = self.current.clone()
+        for level, meta in edit.get(b"add", edit.get("add", [])):
+            fm = FileMetadata.from_wire(meta)
+            if level == 0:
+                v.levels[level].insert(0, fm)  # newest first
+            else:
+                v.levels[level].append(fm)
+                v.levels[level].sort(key=lambda f: f.smallest)
+        for level, file_no in edit.get(b"delete", edit.get("delete", [])):
+            v.levels[level] = [f for f in v.levels[level] if f.file_no != file_no]
+        self.current = v
+        for k_raw in (b"last_seq", "last_seq"):
+            if k_raw in edit:
+                self.last_seq = max(self.last_seq, edit[k_raw])
+        for k_raw in (b"next_file_no", "next_file_no"):
+            if k_raw in edit:
+                self.next_file_no = max(self.next_file_no, edit[k_raw])
+        for k_raw in (b"bvalue_next_file_id", "bvalue_next_file_id"):
+            if k_raw in edit:
+                self.bvalue_next_file_id = max(self.bvalue_next_file_id, edit[k_raw])
+
+    def log_and_apply(self, edit: dict) -> None:
+        with self._lock:
+            edit.setdefault("next_file_no", self.next_file_no)
+            payload = msgpack.packb(edit, use_bin_type=True)
+            self._manifest.write(frame_record(payload))
+            os.fsync(self._manifest.fileno())
+            self._apply(edit)
+
+    # -- file number / reader management -------------------------------------
+    def new_file_no(self) -> int:
+        with self._lock:
+            no = self.next_file_no
+            self.next_file_no += 1
+            return no
+
+    def reader(self, file_no: int) -> SSTableReader:
+        r = self._readers.get(file_no)
+        if r is None:
+            r = SSTableReader(table_path(self.dir, file_no))
+            self._readers[file_no] = r
+        return r
+
+    def drop_reader(self, file_no: int) -> None:
+        r = self._readers.pop(file_no, None)
+        if r is not None:
+            r.close()
+
+    def close(self) -> None:
+        if self._manifest is not None:
+            self._manifest.close()
+        for r in self._readers.values():
+            r.close()
+        self._readers.clear()

@@ -1,0 +1,212 @@
+"""Block-based SSTable (LevelDB-style layout, simplified).
+
+File layout::
+
+    [data block 0] ... [data block N-1] [filter block] [index block] [footer]
+
+* data block — entries sorted by user key:
+  ``varint(klen) key varint(seq) type(1B) varint(vlen) value``;
+  1-byte compression flag + optional zstd per block.
+* filter block — :class:`~repro.core.bloom.BloomFilter` over user keys.
+* index block — msgpack list of ``(last_key, offset, length)``.
+* footer — fixed 40 B: filter_off, filter_len, index_off, index_len, magic.
+
+Within a table every user key appears at most once (the engine has no
+snapshot support; MemTable dedups and compaction keeps the newest version),
+which keeps point lookups single-probe.
+"""
+from __future__ import annotations
+
+import os
+import struct
+from dataclasses import dataclass
+
+import msgpack
+import zstandard
+
+from .bloom import BloomFilter
+from .record import decode_varint, encode_varint
+
+_FOOTER = struct.Struct("<QQQQQ")
+_MAGIC = 0xB7_15_3D_CA_FE_10_57_01
+_ZCTX = zstandard.ZstdCompressor(level=1)
+_DCTX = zstandard.ZstdDecompressor()
+
+
+@dataclass(slots=True)
+class FileMetadata:
+    file_no: int
+    size: int
+    smallest: bytes
+    largest: bytes
+    entries: int
+
+    def to_wire(self):
+        return [self.file_no, self.size, self.smallest, self.largest, self.entries]
+
+    @staticmethod
+    def from_wire(w) -> "FileMetadata":
+        return FileMetadata(w[0], w[1], bytes(w[2]), bytes(w[3]), w[4])
+
+
+def table_path(directory: str, file_no: int) -> str:
+    return os.path.join(directory, f"{file_no:06d}.sst")
+
+
+class SSTableWriter:
+    def __init__(self, path: str, block_size: int = 4096, compression: bool = False):
+        self.path = path
+        self.block_size = block_size
+        self.compression = compression
+        self._f = open(path, "wb")
+        self._block: list[bytes] = []
+        self._block_bytes = 0
+        self._index: list[tuple[bytes, int, int]] = []
+        self._keys: list[bytes] = []
+        self._offset = 0
+        self._count = 0
+        self.smallest: bytes | None = None
+        self.largest: bytes | None = None
+
+    def add(self, key: bytes, seq: int, type_: int, value: bytes) -> None:
+        assert self.largest is None or key > self.largest, "keys must be added in order"
+        if self.smallest is None:
+            self.smallest = key
+        self.largest = key
+        ent = b"".join(
+            (
+                encode_varint(len(key)),
+                key,
+                encode_varint(seq),
+                bytes([type_]),
+                encode_varint(len(value)),
+                value,
+            )
+        )
+        self._block.append(ent)
+        self._block_bytes += len(ent)
+        self._keys.append(key)
+        self._count += 1
+        if self._block_bytes >= self.block_size:
+            self._flush_block(key)
+
+    def _flush_block(self, last_key: bytes) -> None:
+        if not self._block:
+            return
+        raw = b"".join(self._block)
+        if self.compression:
+            comp = _ZCTX.compress(raw)
+            blob = b"\x01" + comp if len(comp) < len(raw) else b"\x00" + raw
+        else:
+            blob = b"\x00" + raw
+        self._f.write(blob)
+        self._index.append((last_key, self._offset, len(blob)))
+        self._offset += len(blob)
+        self._block = []
+        self._block_bytes = 0
+
+    def finish(self, file_no: int) -> FileMetadata:
+        if self._block:
+            self._flush_block(self._keys[-1])
+        bloom = BloomFilter.build(self._keys).encode()
+        filter_off = self._offset
+        self._f.write(bloom)
+        index = msgpack.packb([[k, o, l] for k, o, l in self._index])
+        index_off = filter_off + len(bloom)
+        self._f.write(index)
+        self._f.write(_FOOTER.pack(filter_off, len(bloom), index_off, len(index), _MAGIC))
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+        size = index_off + len(index) + _FOOTER.size
+        return FileMetadata(file_no, size, self.smallest or b"", self.largest or b"", self._count)
+
+    def abandon(self) -> None:
+        self._f.close()
+        os.unlink(self.path)
+
+
+def _decode_block(blob: bytes) -> bytes:
+    if blob[0] == 1:
+        return _DCTX.decompress(blob[1:])
+    return blob[1:]
+
+
+def _iter_block(raw: bytes):
+    pos = 0
+    n = len(raw)
+    while pos < n:
+        klen, pos = decode_varint(raw, pos)
+        key = raw[pos : pos + klen]
+        pos += klen
+        seq, pos = decode_varint(raw, pos)
+        type_ = raw[pos]
+        pos += 1
+        vlen, pos = decode_varint(raw, pos)
+        value = raw[pos : pos + vlen]
+        pos += vlen
+        yield key, seq, type_, value
+
+
+class SSTableReader:
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "rb")
+        self._f.seek(-_FOOTER.size, os.SEEK_END)
+        filter_off, filter_len, index_off, index_len, magic = _FOOTER.unpack(
+            self._f.read(_FOOTER.size)
+        )
+        if magic != _MAGIC:
+            raise IOError(f"bad SSTable magic in {path}")
+        self._f.seek(filter_off)
+        self.bloom = BloomFilter.decode(self._f.read(filter_len))
+        self._f.seek(index_off)
+        self.index = [
+            (bytes(k), o, l) for k, o, l in msgpack.unpackb(self._f.read(index_len))
+        ]
+
+    def _read_block(self, idx: int) -> bytes:
+        _, off, length = self.index[idx]
+        self._f.seek(off)
+        return _decode_block(self._f.read(length))
+
+    def get(self, key: bytes):
+        """Returns (found, seq, type, value)."""
+        if not self.bloom.may_contain(key):
+            return False, 0, 0, b""
+        lo, hi = 0, len(self.index) - 1
+        # first block whose last_key >= key
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.index[mid][0] < key:
+                lo = mid + 1
+            else:
+                hi = mid
+        if lo >= len(self.index) or self.index[lo][0] < key:
+            return False, 0, 0, b""
+        for k, seq, type_, value in _iter_block(self._read_block(lo)):
+            if k == key:
+                return True, seq, type_, value
+            if k > key:
+                break
+        return False, 0, 0, b""
+
+    def __iter__(self):
+        for i in range(len(self.index)):
+            yield from _iter_block(self._read_block(i))
+
+    def iter_from(self, start: bytes):
+        lo, hi = 0, len(self.index) - 1
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.index[mid][0] < start:
+                lo = mid + 1
+            else:
+                hi = mid
+        for i in range(lo, len(self.index)):
+            for item in _iter_block(self._read_block(i)):
+                if item[0] >= start:
+                    yield item
+
+    def close(self) -> None:
+        self._f.close()

@@ -1,0 +1,80 @@
+"""Engine statistics: byte counters per I/O class (wal / flush / compaction /
+bvalue), stall accounting, and a throughput timeline recorder used to
+reproduce the paper's Fig. 2 / Fig. 9 instant-vs-average plots.
+
+``write_amp`` = total device bytes / user payload bytes — the paper's core
+metric.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+
+
+class EngineStats:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.counters: dict[str, int] = defaultdict(int)
+        self.stall_seconds = 0.0
+        self.stall_events = 0
+        self._t0 = time.monotonic()
+        self.timeline: list[tuple[float, int]] = []  # (t, user_bytes_acked)
+
+    def add(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self.counters[name] += n
+
+    def add_stall(self, seconds: float) -> None:
+        with self._lock:
+            self.stall_seconds += seconds
+            self.stall_events += 1
+
+    def mark_user_write(self, nbytes: int) -> None:
+        with self._lock:
+            self.counters["user_bytes"] += nbytes
+            self.timeline.append((time.monotonic() - self._t0, self.counters["user_bytes"]))
+
+    @property
+    def device_bytes(self) -> int:
+        c = self.counters
+        return (
+            c["wal_bytes"]
+            + c["flush_bytes"]
+            + c["compaction_bytes"]
+            + c["bvalue_bytes"]
+        )
+
+    @property
+    def write_amp(self) -> float:
+        user = self.counters["user_bytes"]
+        return self.device_bytes / user if user else 0.0
+
+    def interval_throughput(self, interval_s: float = 10.0) -> list[tuple[float, float]]:
+        """(t_end, MB/s) per interval — the paper's 10-second instant curve."""
+        out = []
+        if not self.timeline:
+            return out
+        t_end = interval_s
+        prev_bytes = 0
+        i = 0
+        last_t = self.timeline[-1][0]
+        while t_end <= last_t + interval_s:
+            while i < len(self.timeline) and self.timeline[i][0] <= t_end:
+                i += 1
+            cur = self.timeline[i - 1][1] if i > 0 else 0
+            out.append((t_end, (cur - prev_bytes) / interval_s / 1e6))
+            prev_bytes = cur
+            t_end += interval_s
+        return out
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            d = dict(self.counters)
+        for k in ("wal_bytes", "flush_bytes", "compaction_bytes", "bvalue_bytes", "user_bytes"):
+            d.setdefault(k, 0)
+        d["device_bytes"] = self.device_bytes
+        d["write_amp"] = self.write_amp
+        d["stall_seconds"] = self.stall_seconds
+        d["stall_events"] = self.stall_events
+        return d

@@ -1,0 +1,132 @@
+"""Paged flash-decode Pallas TPU kernel — the BVLSM read path on TPU.
+
+This is the paper's pointer-dereference read path mapped onto the TPU
+memory hierarchy (DESIGN.md §3): the per-sequence **page table** is the
+lightweight Key→ValueOffset metadata (kept in SMEM via scalar prefetch);
+the **KV pages** are the big values living in a paged HBM arena; each grid
+step dereferences one page id and DMAs that page into VMEM, accumulating
+online-softmax partials — never materializing the gathered cache.
+
+Grid = (batch, kv_head, num_pages). BlockSpec index maps use the prefetched
+page table to pick the HBM page per step (Pallas TPU's scalar-prefetch
+mechanism), so the gather happens in the DMA engine, not as an XLA gather.
+
+Validated in interpret mode against ``ref.paged_decode_reference``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    page_table_ref,  # scalar prefetch: (B, maxp) int32
+    lengths_ref,  # scalar prefetch: (B,) int32
+    q_ref,  # (1, 1, G, hd)      — this (batch, kv head)'s query group
+    k_ref,  # (1, page, hd)      — the dereferenced page
+    v_ref,  # (1, page, hd)
+    o_ref,  # (1, 1, G, hd)
+    m_scr,  # (G, 1) f32
+    l_scr,  # (G, 1) f32
+    acc_scr,  # (G, hd) f32
+    *,
+    page_size: int,
+    sm_scale: float,
+):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    page_start = pi * page_size
+
+    @pl.when(page_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (G, hd)
+        k = k_ref[0].astype(jnp.float32)  # (page, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, page)
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < length
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(pi == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, ...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, H, hd)
+    pages_k: jax.Array,  # (P, page, K, hd) — the paged KV arena
+    pages_v: jax.Array,
+    page_table: jax.Array,  # (B, maxp) int32 page ids per sequence
+    lengths: jax.Array,  # (B,) int32 valid token count per sequence
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    P, page, K, _ = pages_k.shape
+    maxp = page_table.shape[1]
+    G = H // K
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(B, K, G, hd)
+    # (P, K, page, hd) so one (page id, kv head) indexes a (page, hd) block
+    kf = pages_k.transpose(0, 2, 1, 3).reshape(P * K, page, hd)
+    vf = pages_v.transpose(0, 2, 1, 3).reshape(P * K, page, hd)
+
+    grid = (B, K, maxp)
+
+    def kv_index(b, h, pi, page_table_ref, lengths_ref):
+        pid = page_table_ref[b, pi]
+        return (pid * K + h, 0, 0)
+
+    kernel = functools.partial(_decode_kernel, page_size=page, sm_scale=sm_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, pi, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, page, hd), kv_index),
+                pl.BlockSpec((1, page, hd), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, pi, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, qf, kf, vf)
+
+    return out.reshape(B, H, hd)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode sweeps in tests/test_kernels.py assert against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal=True, window=None):
+    """q (B,T,H,hd); k/v (B,S,K,hd) — exact softmax attention in fp32."""
+    B, T, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(T)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def paged_decode_reference(q, pages_k, pages_v, page_table, lengths):
+    """q (B,H,hd); pages_* (P, page, K, hd); page_table (B, maxp) int32;
+    lengths (B,) int32 — exact paged decode attention."""
+    B, H, hd = q.shape
+    P, page, K, _ = pages_k.shape
+    maxp = page_table.shape[1]
+    G = H // K
+    # gather each sequence's pages: (B, maxp, page, K, hd) → (B, maxp*page, K, hd)
+    kg = pages_k[page_table].reshape(B, maxp * page, K, hd)
+    vg = pages_v[page_table].reshape(B, maxp * page, K, hd)
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg.astype(jnp.float32))
+    valid = jnp.arange(maxp * page)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vg.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_chunk_reference(x, dA, B_, C_):
+    """Sequential SSD oracle. x (b,t,h,p); dA (b,t,h) log decay;
+    B_/C_ (b,t,g,n). Returns (y, final_state (b,h,p,n))."""
+    b, t, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    hpg = h // g
+    st = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    xg = x.astype(jnp.float32)
+    for i in range(t):
+        dec = jnp.exp(dA[:, i].astype(jnp.float32))  # (b,h)
+        Bx = jnp.einsum(
+            "bgn,bghp->bghpn",
+            B_[:, i].astype(jnp.float32),
+            xg[:, i].reshape(b, g, hpg, p),
+        ).reshape(b, h, p, n)
+        st = st * dec[:, :, None, None] + Bx
+        y = jnp.einsum(
+            "bgn,bghpn->bghp", C_[:, i].astype(jnp.float32), st.reshape(b, g, hpg, p, n)
+        )
+        ys.append(y.reshape(b, h, p))
+    return jnp.stack(ys, axis=1).astype(x.dtype), st
+
+
+def rglru_reference(x, r, i, lam, h0=None):
+    """Sequential RG-LRU oracle. x/r/i (B,T,W); lam (W,)."""
+    Bb, T, W = x.shape
+    c = 8.0
+    log_a_base = -c * jax.nn.softplus(lam.astype(jnp.float32))
+    h = jnp.zeros((Bb, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    for t in range(T):
+        log_a = r[:, t].astype(jnp.float32) * log_a_base
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h = a * h + beta * (i[:, t].astype(jnp.float32) * x[:, t].astype(jnp.float32))
+        ys.append(h)
+    return jnp.stack(ys, axis=1).astype(x.dtype), h

@@ -1,0 +1,267 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+512 placeholder host devices, record memory/cost/collective analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+
+Each cell writes ``<out>/<arch>__<shape>__<mesh>.json`` with:
+  memory_analysis (bytes/device), cost_analysis (per-device FLOPs/bytes),
+  collective wire-traffic estimates (ICI vs DCN), and the roofline terms.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.dist import default_rules, mesh_context
+from repro.dist.perf import PerfConfig, perf_context
+from repro.launch.analytic import analytic_memory_bytes, model_flops
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.hlo_stats import hlo_op_histogram
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.specs import auto_accum_steps, build_cell
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import TrainConfig
+
+
+def analyze_compiled(compiled, mesh, kind: str, cfg=None, cell=None, accum: int = 1) -> dict:
+    """Roofline terms from the compiled artifact.
+
+    ``cost_analysis()`` (XLA built-in) counts while bodies ONCE — useless for
+    scanned models — so the primary numbers come from the loop-attributed
+    static analyzer in :mod:`.hlo_cost`. Both are recorded. CPU-backend
+    caveat: bf16 is emulated via f32, inflating byte counts ~2×; FLOPs and
+    collective bytes are unaffected (collective buffers keep their dtype).
+    """
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    stats = hlo_analyze(txt, pod_size=256)
+    flops = stats["flops"]
+    bytes_accessed = stats["bytes"]
+    compute_s = flops / HW["peak_flops_bf16"]
+    memory_s_hlo = bytes_accessed / HW["hbm_bw"]
+    coll_s = stats["wire_ici"] / HW["ici_bw"] + stats["wire_dcn"] / HW["dcn_bw"]
+    # TPU adjustment: XLA:CPU promotes bf16 reduction collectives to f32
+    # (its bf16-AR path aborts outright); on TPU those lanes are 2-byte.
+    coll_s_bf16adj = coll_s - 0.5 * stats.get("wire_f32", 0.0) / HW["ici_bw"]
+    mesh_shape = dict(mesh.shape)
+    if cfg is not None and cell is not None:
+        mem_bytes = analytic_memory_bytes(cfg, cell, mesh_shape, accum=accum)
+        mflops = model_flops(cfg, cell)
+        n_chips = mesh.size
+        useful_ratio = mflops / max(flops * n_chips, 1.0)
+    else:
+        mem_bytes, mflops, useful_ratio, n_chips = bytes_accessed, 0.0, 0.0, mesh.size
+    memory_s = mem_bytes / HW["hbm_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "total_per_device": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_device": flops,
+            "hlo_bytes_per_device": bytes_accessed,
+            "analytic_bytes_per_device": mem_bytes,
+            "model_flops_global": mflops,
+            "useful_flops_ratio": useful_ratio,
+            "memory_s_hlo_upper_bound": memory_s_hlo,
+            "xla_flops_unattributed": float(ca.get("flops", 0.0)),
+            "xla_bytes_unattributed": float(ca.get("bytes accessed", 0.0)),
+            "collective_s_bf16adj": coll_s_bf16adj,
+        },
+        "collectives": {
+            "wire_ici": stats["wire_ici"],
+            "wire_dcn": stats["wire_dcn"],
+            "per_op": stats["per_coll"],
+        },
+        "roofline": {**terms, "dominant": dominant},
+        "hlo_ops": hlo_op_histogram(txt, top=15),
+    }
+
+
+# each variant: (PerfConfig, logical-rule overrides or None)
+RULE_OVERRIDES = {
+    # V7: attention fully data-parallel — attention is sequence-local once
+    # batch shards over `data`, so TP on heads only buys activation
+    # all-reduces; replicate attn weights over `model` instead.
+    "v7_attn_dp": {"heads": [], "kv": [], "act_heads": [], "act_kv": []},
+    # V5: decode weight-stationary layout — activations shard over `data` on
+    # the EMBED dim (batch replicated); weight matmuls become local partials
+    # + tiny psums instead of per-layer FSDP weight gathers.
+    "v5_decode_layout": {"batch": [], "embed": [("data",)], "act_vocab": [("model",)]},
+    # V8: pure FSDP data parallelism — batch shards over BOTH mesh axes
+    # (1 seq/chip at train_4k → accum=1), weights stay 2D-sharded (ZeRO-3),
+    # activations carry no TP at all.
+    "v8_fsdp_dp": {
+        "batch": [("pod", "data", "model"), ("data", "model"), ("pod", "data"), ("data",)],
+        "act_heads": [], "act_kv": [], "act_mlp": [], "act_vocab": [],
+    },
+}
+
+VARIANTS = {
+    "baseline": PerfConfig(),
+    "v1_save_ar": PerfConfig(save_dot_outputs=True),
+    "v2_moe_local": PerfConfig(moe_local_dispatch=True),
+    "v3_sharded_decode": PerfConfig(sharded_decode_attn=True),
+    "v4_causal_chunks": PerfConfig(causal_chunk_growth=True),
+    "v6_cast_early": PerfConfig(cast_weights_early=True),
+    "v1_v6": PerfConfig(save_dot_outputs=True, cast_weights_early=True),
+    # NOTE: cast_weights_early is excluded — refuted (XLA re-sinks the cast,
+    # no HLO delta) and its bf16 grad-psum aborts XLA:CPU under shard_map.
+    "optimized": PerfConfig(
+        sharded_decode_attn=True, causal_chunk_growth=True, moe_local_dispatch=True,
+    ),
+    "optimized_v1": PerfConfig(
+        sharded_decode_attn=True, causal_chunk_growth=True, moe_local_dispatch=True,
+        save_dot_outputs=True,
+    ),
+    "v7_attn_dp": PerfConfig(),
+    "v5_decode_layout": PerfConfig(sharded_decode_attn=True),
+    "v1_v7": PerfConfig(save_dot_outputs=True),
+    "v5_v3": PerfConfig(sharded_decode_attn=True),
+    "v8_fsdp_dp": PerfConfig(cast_weights_early=True),
+    "v8_noearly": PerfConfig(),
+    "v9_bf16_rowpar": PerfConfig(bf16_rowparallel=True),
+    "v9_v1": PerfConfig(bf16_rowparallel=True, save_dot_outputs=True),
+}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str, rules=None,
+             variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "kind": cell.kind,
+        "variant": variant,
+        "params": cfg.params_count(),
+        "active_params": cfg.active_params_count(),
+    }
+    ok, why = cfg.shape_supported(cell)
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    accum = auto_accum_steps(mesh, cell.global_batch, cell.seq_len, cfg=cfg) if cell.kind == "train" else 1
+    if rules is None and variant in RULE_OVERRIDES or variant.replace("v1_", "").replace("v5_", "v5_decode_layout") in RULE_OVERRIDES:
+        pass
+    if rules is None:
+        ov = {}
+        if variant in ("v7_attn_dp", "v1_v7"):
+            ov.update(RULE_OVERRIDES["v7_attn_dp"])
+        if variant in ("v5_decode_layout", "v5_v3"):
+            ov.update(RULE_OVERRIDES["v5_decode_layout"])
+        if variant in ("v8_fsdp_dp", "v8_noearly"):
+            ov.update(RULE_OVERRIDES["v8_fsdp_dp"])
+        if ov:
+            rules = default_rules().override(**ov)
+    t0 = time.time()
+    with perf_context(VARIANTS[variant]), mesh_context(mesh, rules):
+        recipe = build_cell(
+            cfg, cell, mesh, TrainConfig(opt=OptimizerConfig(), accum_steps=0), rules
+        )
+        jitted = jax.jit(
+            recipe.fn,
+            in_shardings=recipe.in_shardings,
+            donate_argnums=recipe.donate_argnums,
+        )
+        lowered = jitted.lower(*recipe.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    rec["accum_steps"] = accum
+    rec.update(analyze_compiled(compiled, mesh, cell.kind, cfg=cfg, cell=cell, accum=accum))
+    rec["status"] = "ok"
+    rec["t_lower_s"] = round(t_lower, 2)
+    rec["t_compile_s"] = round(t_compile, 2)
+    # the dry-run contract: print the proofs
+    mem = rec["memory"]
+    print(
+        f"[{arch} × {shape} × {mesh_name} × {variant}] OK  "
+        f"args={mem['argument_bytes']/2**30:.2f}GiB temp={mem['temp_bytes']/2**30:.2f}GiB "
+        f"flops/dev={rec['cost']['flops_per_device']:.3e} "
+        f"dominant={rec['roofline']['dominant']} "
+        f"(c={rec['roofline']['compute_s']*1e3:.1f}ms m={rec['roofline']['memory_s']*1e3:.1f}ms "
+        f"coll={rec['roofline']['collective_s']*1e3:.1f}ms)",
+        flush=True,
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+                suffix = "" if args.variant == "baseline" else f"__{args.variant}"
+                path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[{arch} × {shape} × {mesh_name}] cached", flush=True)
+                    continue
+                try:
+                    rec = run_cell(arch, shape, multi_pod, args.out, variant=args.variant)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": mesh_name,
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                    failures.append((arch, shape, mesh_name))
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2, default=str)
+    if failures:
+        print(f"\nFAILURES ({len(failures)}):")
+        for f_ in failures:
+            print("  ", f_)
+        raise SystemExit(1)
+    print("\nAll requested dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+``collective_stats`` sums, per collective kind, the per-device buffer bytes
+and converts them to estimated per-chip *wire* traffic using ring-algorithm
+corrections:
+
+    all-gather         (n-1)/n · output_bytes   received per chip
+    reduce-scatter     (n-1)/n · input_bytes    sent per chip
+    all-reduce         2·(n-1)/n · buffer_bytes (RS + AG phases)
+    all-to-all         (n-1)/n · buffer_bytes
+    collective-permute buffer_bytes
+
+Groups whose device ids span more than one pod (id // pod_size differs) are
+charged to DCN instead of ICI. Shapes in compiled HLO are already
+per-partition, so buffer sizes are per-chip.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "f8e5m2": 1,
+    "f8e4m3fn": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^=]*\}|\[[\d,]+\]<=\[[\d,]+\][^,\s]*)")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_info(line: str, pod_size: int) -> tuple[int, bool]:
+    """Returns (group_size, crosses_pod)."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        spec = m.group(1)
+        if spec.startswith("{{"):
+            first = spec[2:].split("}", 1)[0]
+            ids = [int(x) for x in first.split(",") if x.strip()]
+            size = len(ids)
+            crosses = len({i // pod_size for i in ids}) > 1
+            return max(size, 1), crosses
+        # iota format: [g,n]<=[...]  → groups of size n
+        m2 = re.match(r"\[(\d+),(\d+)\]<=\[([\d,]+)\](T\([\d,]+\))?", spec)
+        if m2:
+            g, n = int(m2.group(1)), int(m2.group(2))
+            dims = [int(x) for x in m2.group(3).split(",")]
+            total = 1
+            for d in dims:
+                total *= d
+            # conservative: group crosses pods iff contiguous blocks of n ids
+            # would span a pod boundary under the (possibly transposed) iota.
+            trans = m2.group(4)
+            if trans:
+                # reconstruct the permuted id list and check the first group
+                perm = [int(x) for x in trans[2:-1].split(",")]
+                import numpy as np
+
+                ids = np.arange(total).reshape(dims).transpose(perm).reshape(-1)
+                first = ids[:n]
+                crosses = len({int(i) // pod_size for i in first}) > 1
+            else:
+                crosses = n > pod_size or (total > pod_size and n > 1 and total // n < total / pod_size)
+                # contiguous ids: group spans pods only if n > pod_size
+                crosses = n > pod_size
+            return n, crosses
+    m = _SRC_TGT_RE.search(line)
+    if m:
+        pairs = m.group(1)
+        crosses = False
+        for pair in re.findall(r"\{(\d+),(\d+)\}", pairs):
+            if int(pair[0]) // pod_size != int(pair[1]) // pod_size:
+                crosses = True
+        return 2, crosses
+    return 1, False
+
+
+def collective_stats(hlo_text: str, pod_size: int = 256) -> dict:
+    out = {
+        "per_op": defaultdict(lambda: {"count": 0, "bytes": 0, "wire_ici": 0.0, "wire_dcn": 0.0}),
+        "total_bytes": 0,
+        "wire_ici": 0.0,
+        "wire_dcn": 0.0,
+    }
+    seen_start: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        # avoid double counting async start/done pairs: only count -start or sync
+        if "-done(" in line:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        n, crosses = _group_info(line, pod_size)
+        if n <= 1:
+            continue
+        ring = (n - 1) / n
+        if op == "all-gather":
+            wire = ring * nbytes  # output is the gathered buffer
+        elif op == "reduce-scatter":
+            # HLO shows the scattered OUTPUT; per-chip input = n·out, and a
+            # ring sends (n-1)/n of the input → (n-1)·out bytes on the wire.
+            wire = (n - 1) * nbytes
+        elif op == "all-reduce":
+            wire = 2 * ring * nbytes
+        elif op == "all-to-all":
+            wire = ring * nbytes
+        else:  # collective-permute
+            wire = nbytes
+        rec = out["per_op"][op]
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+        if crosses:
+            rec["wire_dcn"] += wire
+            out["wire_dcn"] += wire
+        else:
+            rec["wire_ici"] += wire
+            out["wire_ici"] += wire
+        out["total_bytes"] += nbytes
+    out["per_op"] = {k: dict(v) for k, v in out["per_op"].items()}
+    return out
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 25) -> list[tuple[str, int]]:
+    counts: dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s*(?:\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+([a-z][\w-]*)\(", hlo_text):
+        counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

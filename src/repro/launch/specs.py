@@ -1,0 +1,154 @@
+"""Per-(arch × shape-cell) input specs and lowering recipes.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation);
+``build_cell`` packages (step_fn, abstract args, shardings, donation) for
+``jax.jit(...).lower(...)`` — used by both the dry-run and the roofline
+harness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist import Axes, tree_shardings
+from repro.models import build_model
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import (
+    TrainConfig,
+    abstract_cache,
+    abstract_params,
+    abstract_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    state_axes,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> tuple[dict, dict]:
+    """(ShapeDtypeStructs, logical Axes) for the data batch of a cell."""
+    B, S = cell.global_batch, cell.seq_len
+    sds = {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+    axes = {
+        "tokens": Axes("batch", "seq"),
+        "labels": Axes("batch", "seq"),
+    }
+    if cfg.family == "vlm":
+        sds["vision_embeds"] = SDS((B, cfg.n_vision_patches, cfg.d_model), jnp.bfloat16)
+        axes["vision_embeds"] = Axes("batch", None, "embed")
+    if cfg.family == "audio":
+        sds["enc_embeds"] = SDS((B, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+        axes["enc_embeds"] = Axes("batch", None, "embed")
+    return sds, axes
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Public helper: all abstract inputs for this cell (dry-run contract)."""
+    sds, _ = batch_specs(cfg, cell)
+    if cell.kind == "decode":
+        sds = {"tokens": SDS((cell.global_batch, 1), jnp.int32)}
+    return sds
+
+
+@dataclass
+class CellRecipe:
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    donate_argnums: tuple
+    kind: str
+    static_info: dict = field(default_factory=dict)
+
+
+def _batch_shards(mesh, B: int) -> int:
+    """How many ways the batch dim will actually shard under the rules."""
+    for axes in (("pod", "data"), ("data",), ("pod",)):
+        if all(a in mesh.shape for a in axes):
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if B % n == 0:
+                return n
+    return 1
+
+
+def auto_accum_steps(mesh, B: int, S: int, target_tokens: int = 8192, cfg=None) -> int:
+    """Pick gradient-accumulation steps so each microstep's per-chip token
+    count stays ≈ target (bounds the L×(b,T,d) remat carry stack). With a
+    model config, the target shrinks so the bf16 carry stack stays ≤ ~3 GiB
+    (104B-scale models need 1-seq microsteps)."""
+    if cfg is not None and cfg.n_layers and cfg.d_model:
+        carry_budget = 3 << 30
+        by_bytes = carry_budget // (cfg.n_layers * cfg.d_model * 2)
+        target_tokens = max(min(target_tokens, by_bytes), 1024)
+    local = B // _batch_shards(mesh, B)
+    for cand in range(1, local + 1):  # smallest accumulation that fits
+        if local % cand == 0 and (local // cand) * S <= target_tokens:
+            return cand
+    return local
+
+
+def build_cell(
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    mesh,
+    train_cfg: TrainConfig | None = None,
+    rules=None,
+) -> CellRecipe:
+    model = build_model(cfg)
+    train_cfg = train_cfg or TrainConfig()
+    B, S = cell.global_batch, cell.seq_len
+    q_chunk = 2048 if S > 8192 else max(S, 128)
+
+    if cell.kind == "train":
+        if train_cfg.accum_steps == 0:  # auto
+            from dataclasses import replace
+
+            train_cfg = replace(train_cfg, accum_steps=auto_accum_steps(mesh, B, S, cfg=cfg))
+        step = make_train_step(model, train_cfg)
+        st_sds = abstract_state(model, train_cfg.opt)
+        st_ax = state_axes(model, train_cfg.opt, st_sds)
+        b_sds, b_ax = batch_specs(cfg, cell)
+        in_sh = (
+            tree_shardings(mesh, st_sds, st_ax, rules),
+            tree_shardings(mesh, b_sds, b_ax, rules),
+        )
+        return CellRecipe(step, (st_sds, b_sds), in_sh, (0,), "train")
+
+    if cell.kind == "prefill":
+        step = make_prefill_step(model, q_chunk=q_chunk)
+        p_sds = abstract_params(model)
+        p_ax = model.param_axes()
+        b_sds, b_ax = batch_specs(cfg, cell)
+        b_sds.pop("labels")
+        b_ax.pop("labels")
+        in_sh = (
+            tree_shardings(mesh, p_sds, p_ax, rules),
+            tree_shardings(mesh, b_sds, b_ax, rules),
+        )
+        return CellRecipe(step, (p_sds, b_sds), in_sh, (), "prefill")
+
+    # decode: one new token against a cache of seq_len
+    step = make_decode_step(model)
+    p_sds = abstract_params(model)
+    p_ax = model.param_axes()
+    c_sds = abstract_cache(model, B, S)
+    c_ax = model.cache_axes()
+    t_sds = SDS((B, 1), jnp.int32)
+    t_ax = Axes("batch", None)
+    in_sh = (
+        tree_shardings(mesh, p_sds, p_ax, rules),
+        tree_shardings(mesh, c_sds, c_ax, rules),
+        tree_shardings(mesh, {"t": t_sds}, {"t": t_ax}, rules)["t"],
+    )
+    return CellRecipe(step, (p_sds, c_sds, t_sds), in_sh, (1,), "decode")

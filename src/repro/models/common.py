@@ -1,0 +1,129 @@
+"""Shared model components: norms, RoPE, activations, initializers, losses.
+
+Pure-functional style: every module is an ``init(key, ...) -> params`` plus
+an ``apply(params, x, ...)``; params are nested dicts of arrays, with a
+parallel pytree of :class:`repro.dist.Axes` logical-axis annotations used by
+the sharding rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import Axes, constrain
+
+
+def truncated_normal(key, shape, std: float, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def norm(x: jax.Array, scale: jax.Array, eps: float, kind: str) -> jax.Array:
+    return rmsnorm(x, scale, eps) if kind == "rmsnorm" else layernorm(x, scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (...,) int — returns (sin, cos) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., T, H, D); sin/cos: (..., T, D//2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def glu_activation(gate: jax.Array, up: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# embeddings + logits + loss
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg):
+    V, d = cfg.padded_vocab, cfg.d_model
+    emb = truncated_normal(key, (V, d), std=d**-0.5)
+    # zero the padding rows so tied-logit rows stay inert
+    emb = emb.at[cfg.vocab :].set(0.0)
+    return emb
+
+
+def embed_axes() -> Axes:
+    return Axes("vocab", "param_embed")
+
+
+def embed_tokens(emb: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    x = jnp.take(emb, tokens, axis=0).astype(dtype)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def logits_from_hidden(x: jax.Array, out_emb: jax.Array, vocab: int) -> jax.Array:
+    """x: (B, T, d), out_emb: (V, d) → fp32 logits with padded vocab masked."""
+    logits = jnp.einsum("btd,vd->btv", x, out_emb.astype(x.dtype)).astype(jnp.float32)
+    logits = constrain(logits, ("batch", "seq", "act_vocab"))
+    V = out_emb.shape[0]
+    if V != vocab:
+        mask = jnp.arange(V) < vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None):
+    """logits: (B, T, V) fp32; labels: (B, T) int. Returns (loss, metrics).
+
+    Sharding-friendly: the label logit is extracted with a masked reduction
+    (``take_along_axis`` over a vocab-sharded dim would force GSPMD to
+    all-gather the full fp32 logits — tens of GiB per device at 128k vocab).
+    """
+    V = logits.shape[-1]
+    mx = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx), axis=-1)) + mx[..., 0]
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2)
+    label_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(logits, axis=-1) == labels) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}

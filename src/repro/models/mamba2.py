@@ -1,0 +1,370 @@
+"""Mamba-2 (SSD — state-space duality), attention-free LM.
+
+Chunked SSD per the paper's Listing 1 (arXiv:2405.21060): within a chunk the
+recurrence is computed as an attention-like quadratic block (MXU-friendly);
+across chunks a small (H, P, N) state is carried by a scan. Decode is an
+O(1) recurrent state update — seq_len-independent, which is why this arch
+runs the ``long_500k`` cell (see DESIGN.md §Arch-applicability).
+
+Layout: x (B, T, H, P) heads; B/C (B, T, G, N) groups (G=1 for mamba2-1.3b);
+state (B, H, P, N).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import Axes, constrain, constrain_tree
+from .common import (
+    embed_axes,
+    embed_tokens,
+    init_embedding,
+    logits_from_hidden,
+    rmsnorm,
+    softmax_cross_entropy,
+    truncated_normal,
+)
+
+NEG_INF = -1e30
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_in, nh, conv_dim
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dA, B, C, chunk: int, h0=None):
+    """x (b,t,h,p); dA (b,t,h) log-decay (≤0); B,C (b,t,g,n).
+    Returns (y (b,t,h,p), final_state (b,h,p,n))."""
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    t_orig = t
+    if t % chunk:
+        # pad with identity steps: dA=0 (decay 1), B·x=0 — state unaffected
+        pad = chunk - t % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = x.shape[1]
+    nc = t // chunk
+
+    xc = x.reshape(b, nc, chunk, g, hpg, p)
+    Ac = dA.reshape(b, nc, chunk, g, hpg)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    cum = jnp.cumsum(Ac, axis=2)  # (b,nc,cs,g,hpg)
+
+    # --- intra-chunk (diagonal blocks) ---
+    seg = cum[:, :, :, None] - cum[:, :, None, :]  # (b,nc,i,j,g,hpg)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None, None], seg, NEG_INF))
+    CB = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc, preferred_element_type=jnp.float32)
+    scores = CB[..., None] * L  # (b,nc,i,j,g,hpg)
+    y_diag = jnp.einsum("bcijgh,bcjghp->bcighp", scores.astype(x.dtype), xc)
+
+    # --- chunk states ---
+    decay_states = jnp.exp(cum[:, :, -1:] - cum)  # (b,nc,cs,g,hpg)
+    S = jnp.einsum("bcjgn,bcjgh,bcjghp->bcghpn", Bc, decay_states.astype(x.dtype), xc)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1])  # (b,nc,g,hpg)
+    if h0 is None:
+        h0 = jnp.zeros((b, g, hpg, p, n), x.dtype)
+
+    def step(Hprev, inp):
+        S_c, dec_c = inp  # (b,g,hpg,p,n), (b,g,hpg)
+        H_new = dec_c[..., None, None].astype(x.dtype) * Hprev + S_c
+        return H_new, Hprev  # emit state ENTERING this chunk
+
+    S_sw = jnp.moveaxis(S, 1, 0)  # (nc,b,g,hpg,p,n)
+    dec_sw = jnp.moveaxis(chunk_decay, 1, 0)
+    H_last, H_in = jax.lax.scan(step, h0, (S_sw, dec_sw))
+    H_in = jnp.moveaxis(H_in, 0, 1)  # (b,nc,g,hpg,p,n)
+
+    # --- off-diagonal contribution from carried state ---
+    state_decay = jnp.exp(cum)  # (b,nc,cs,g,hpg)
+    y_off = jnp.einsum(
+        "bcign,bcghpn,bcigh->bcighp", Cc, H_in, state_decay.astype(x.dtype)
+    )
+
+    y = (y_diag + y_off).reshape(b, t, h, p)[:, :t_orig]
+    return y, H_last.reshape(b, h, p, n)
+
+
+def ssd_decode_step(state, x, dA, B, C):
+    """One-token update (fp32 state). state (b,h,p,n); x (b,h,p); dA (b,h);
+    B,C (b,g,n)."""
+    b, h, p, n = state.shape
+    g = B.shape[1]
+    hpg = h // g
+    st = state.reshape(b, g, hpg, p, n).astype(jnp.float32)
+    xg = x.reshape(b, g, hpg, p).astype(jnp.float32)
+    dAg = jnp.exp(dA).reshape(b, g, hpg)
+    st = st * dAg[..., None, None] + jnp.einsum(
+        "bgn,bghp->bghpn", B.astype(jnp.float32), xg
+    )
+    y = jnp.einsum("bgn,bghpn->bghp", C.astype(jnp.float32), st)
+    return y.reshape(b, h, p).astype(x.dtype), st.reshape(b, h, p, n)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+class Mamba2LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        d = cfg.d_model
+        L = cfg.n_layers
+        d_in, nh, conv_dim = _dims(cfg)
+        proj_out = 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + nh
+        ks = jax.random.split(key, 5)
+        p = {
+            "embed": init_embedding(ks[0], cfg),
+            "ln": jnp.zeros((L, d)),
+            "ln_f": jnp.zeros((d,)),
+            "in_proj": truncated_normal(ks[1], (L, d, proj_out), std=d**-0.5),
+            "conv_w": truncated_normal(ks[2], (L, conv_dim, cfg.conv_kernel), std=0.2),
+            "conv_b": jnp.zeros((L, conv_dim)),
+            "A_log": jnp.log(
+                jnp.tile(jnp.linspace(1.0, 16.0, nh)[None, :], (L, 1))
+            ),
+            "dt_bias": jnp.full((L, nh), -2.0),
+            "D": jnp.ones((L, nh)),
+            "norm": jnp.zeros((L, d_in)),
+            "out_proj": truncated_normal(ks[3], (L, d_in, d), std=d_in**-0.5),
+        }
+        if not cfg.tie_embeddings:
+            p["out_embed"] = init_embedding(ks[4], cfg)
+        return p
+
+    def param_axes(self):
+        cfg = self.cfg
+        p = {
+            "embed": embed_axes(),
+            "ln": Axes("layers", "param_embed"),
+            "ln_f": Axes("param_embed"),
+            "in_proj": Axes("layers", "param_embed", "rnn_width"),
+            "conv_w": Axes("layers", "conv_dim", None),
+            "conv_b": Axes("layers", "conv_dim"),
+            "A_log": Axes("layers", "ssm_heads"),
+            "dt_bias": Axes("layers", "ssm_heads"),
+            "D": Axes("layers", "ssm_heads"),
+            "norm": Axes("layers", "rnn_width"),
+            "out_proj": Axes("layers", "rnn_width", "param_embed"),
+        }
+        if not cfg.tie_embeddings:
+            p["out_embed"] = embed_axes()
+        return p
+
+    # -- per-layer pieces --------------------------------------------------
+    def _split_proj(self, zxbcdt):
+        cfg = self.cfg
+        d_in, nh, _ = _dims(cfg)
+        gn = cfg.ssm_groups * cfg.ssm_state
+        z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + d_in + 2 * gn], axis=-1)
+        return z, xBC, dt
+
+    def _conv(self, lp, xBC, conv_state=None):
+        """Causal depthwise conv along T. xBC (B,T,conv_dim)."""
+        k = self.cfg.conv_kernel
+        w = lp["conv_w"].astype(xBC.dtype)  # (conv_dim, k)
+        if conv_state is None:
+            pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+        else:
+            pad = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+        out = sum(
+            pad[:, i : i + xBC.shape[1], :] * w[:, i][None, None, :] for i in range(k)
+        )
+        return jax.nn.silu(out + lp["conv_b"].astype(xBC.dtype))
+
+    def _layer(self, x, lp, *, decode_state=None):
+        cfg = self.cfg
+        d_in, nh, conv_dim = _dims(cfg)
+        hd = cfg.ssm_head_dim
+        g, n = cfg.ssm_groups, cfg.ssm_state
+        B_, T, _ = x.shape
+        h = rmsnorm(x, lp["ln"], cfg.rms_eps)
+        zxbcdt = jnp.einsum("btd,dk->btk", h, lp["in_proj"].astype(h.dtype))
+        z, xBC, dt = self._split_proj(zxbcdt)
+
+        new_conv_state = None
+        if decode_state is not None:
+            conv_state, ssm_state = decode_state
+            new_conv_state = jnp.concatenate([conv_state[:, 1:], xBC], axis=1)
+            xBC = self._conv(lp, xBC, conv_state)
+        else:
+            xBC = self._conv(lp, xBC)
+        xBC = constrain(xBC, ("batch", "seq", "conv_dim"))
+
+        xs, Bc, Cc = jnp.split(xBC, [d_in, d_in + g * n], axis=-1)
+        xs = xs.reshape(B_, T, nh, hd)
+        Bc = Bc.reshape(B_, T, g, n)
+        Cc = Cc.reshape(B_, T, g, n)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(lp["A_log"].astype(jnp.float32))  # (nh,)
+        dA = dt * A  # (B,T,nh) log-decay
+        x_in = xs * dt.astype(xs.dtype)[..., None]
+
+        if decode_state is not None:
+            y, new_ssm = ssd_decode_step(
+                ssm_state, x_in[:, 0], dA[:, 0], Bc[:, 0], Cc[:, 0]
+            )
+            y = y[:, None]
+            new_state = (new_conv_state, new_ssm)
+        else:
+            y, _ = ssd_chunked(x_in, dA, Bc, Cc, min(cfg.ssm_chunk, T))
+            new_state = None
+        y = y + lp["D"].astype(y.dtype)[None, None, :, None] * xs
+        y = y.reshape(B_, T, d_in)
+        y = rmsnorm(y * jax.nn.silu(z), lp["norm"], cfg.rms_eps)
+        y = constrain(y, ("batch", "seq", "rnn_width"))
+        out = jnp.einsum("btk,kd->btd", y, lp["out_proj"].astype(y.dtype))
+        return constrain(x + out, ("batch", "seq", "embed")), new_state
+
+    def _stacked_axes(self):
+        ax = self.param_axes()
+        return {k: ax[k] for k in (
+            "ln", "in_proj", "conv_w", "conv_b", "A_log", "dt_bias", "D", "norm", "out_proj")}
+
+    def _stacked(self, params):
+        return {
+            k: params[k]
+            for k in (
+                "ln",
+                "in_proj",
+                "conv_w",
+                "conv_b",
+                "A_log",
+                "dt_bias",
+                "D",
+                "norm",
+                "out_proj",
+            )
+        }
+
+    # -- public api ---------------------------------------------------------
+    def forward(self, params, tokens, vision_embeds=None, *, remat=False, q_chunk=0):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        body = self._layer
+        if remat:
+            body = jax.checkpoint(
+                lambda x, lp: self._layer(x, lp),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+
+        stacked_axes = self._stacked_axes()
+
+        def scan_fn(x, lp):
+            lp = constrain_tree(lp, stacked_axes, drop_leading=1)
+            x, _ = body(x, lp)
+            return x, None
+
+        x, _ = jax.lax.scan(scan_fn, x, self._stacked(params))
+        x = rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        out_emb = params["embed"] if cfg.tie_embeddings else params["out_embed"]
+        return logits_from_hidden(x, out_emb, cfg.vocab), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, *, remat=True, q_chunk=0):
+        logits, _ = self.forward(params, batch["tokens"], remat=remat)
+        loss, metrics = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return loss, metrics
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        d_in, nh, conv_dim = _dims(cfg)
+        L = cfg.n_layers
+        return {
+            "conv": jnp.zeros((L, batch, cfg.conv_kernel - 1, conv_dim), jnp.bfloat16),
+            "ssm": jnp.zeros((L, batch, nh, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {
+            "conv": Axes("layers", "cache_batch", None, "conv_dim"),
+            "ssm": Axes("layers", "cache_batch", "ssm_heads", None, "ssm_state"),
+            "length": Axes(),
+        }
+
+    def prefill(self, params, tokens, *, pad_to=None, q_chunk=0):
+        """Sequential state build via per-layer full scan, emitting final states."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        d_in, nh, conv_dim = _dims(cfg)
+        k = cfg.conv_kernel
+
+        stacked_axes = self._stacked_axes()
+
+        def scan_fn(x, lp):
+            # replicate _layer but emit (conv_state, ssm_state)
+            lp = constrain_tree(lp, stacked_axes, drop_leading=1)
+            B_, T, _ = x.shape
+            h = rmsnorm(x, lp["ln"], cfg.rms_eps)
+            zxbcdt = jnp.einsum("btd,dk->btk", h, lp["in_proj"].astype(h.dtype))
+            z, xBC, dt = self._split_proj(zxbcdt)
+            conv_tail = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1) :, :]
+            xBC = self._conv(lp, xBC)
+            xs, Bc, Cc = jnp.split(
+                xBC, [d_in, d_in + cfg.ssm_groups * cfg.ssm_state], axis=-1
+            )
+            xs = xs.reshape(B_, T, nh, cfg.ssm_head_dim)
+            Bc = Bc.reshape(B_, T, cfg.ssm_groups, cfg.ssm_state)
+            Cc = Cc.reshape(B_, T, cfg.ssm_groups, cfg.ssm_state)
+            dtf = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+            A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+            x_in = xs * dtf.astype(xs.dtype)[..., None]
+            y, ssm_state = ssd_chunked(x_in, dtf * A, Bc, Cc, min(cfg.ssm_chunk, T))
+            y = y + lp["D"].astype(y.dtype)[None, None, :, None] * xs
+            y = y.reshape(B_, T, d_in)
+            y = rmsnorm(y * jax.nn.silu(z), lp["norm"], cfg.rms_eps)
+            out = jnp.einsum("btk,kd->btd", y, lp["out_proj"].astype(y.dtype))
+            return x + out, (conv_tail.astype(jnp.bfloat16), ssm_state.astype(jnp.float32))
+
+        x, (conv_states, ssm_states) = jax.lax.scan(scan_fn, x, self._stacked(params))
+        x = rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        out_emb = params["embed"] if cfg.tie_embeddings else params["out_embed"]
+        logits = logits_from_hidden(x[:, -1:], out_emb, cfg.vocab)[:, 0]
+        cache = {
+            "conv": conv_states,
+            "ssm": ssm_states,
+            "length": jnp.asarray(tokens.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+        stacked_axes = self._stacked_axes()
+
+        def scan_fn(x, inputs):
+            lp, conv_s, ssm_s = inputs
+            lp = constrain_tree(lp, stacked_axes, drop_leading=1)
+            x, (conv_s, ssm_s) = self._layer(x, lp, decode_state=(conv_s, ssm_s))
+            return x, (conv_s.astype(jnp.bfloat16), ssm_s.astype(jnp.float32))
+
+        x, (conv_new, ssm_new) = jax.lax.scan(
+            scan_fn, x, (self._stacked(params), cache["conv"], cache["ssm"])
+        )
+        x = rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        out_emb = params["embed"] if cfg.tie_embeddings else params["out_embed"]
+        logits = logits_from_hidden(x, out_emb, cfg.vocab)[:, 0]
+        return logits, {"conv": conv_new, "ssm": ssm_new, "length": cache["length"] + 1}

@@ -1,0 +1,17 @@
+"""Model registry: config → model instance."""
+from __future__ import annotations
+
+from .mamba2 import Mamba2LM
+from .rglru import GriffinLM
+from .transformer import TransformerLM
+from .whisper import WhisperModel
+
+
+def build_model(cfg):
+    if cfg.family == "ssm":
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        return GriffinLM(cfg)
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    return TransformerLM(cfg)  # dense | moe | vlm

@@ -1,0 +1,442 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local sliding
+window attention, cyclic layer pattern (default R,R,A).
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t)            (recurrence gate)
+    i_t = sigmoid(W_x x_t)            (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t) (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Train uses an associative scan over T (linear-diagonal recurrence); decode
+is O(1). Local attention uses a ring-buffer KV cache of ``window`` slots —
+O(window) decode memory, which is why this arch runs ``long_500k``.
+
+Because the two layer kinds have different param trees, depth is organized
+as ``n_groups`` repetitions of the pattern, scanned with ``lax.scan`` (one
+stacked param set per *slot* of the pattern), plus an unrolled remainder
+(38 = 12×(R,R,A) + R,R for the 9b config).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import Axes, constrain, constrain_tree
+from . import attention as attn_lib
+from .common import (
+    embed_axes,
+    embed_tokens,
+    init_embedding,
+    logits_from_hidden,
+    rmsnorm,
+    rope_tables,
+    softmax_cross_entropy,
+    truncated_normal,
+)
+from .transformer import apply_mlp, attn_axes, init_attn, init_mlp, mlp_axes, qkv
+
+_C = 8.0  # RG-LRU temperature
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def rglru_scan(x, r, i, lam, h0=None):
+    """x, r, i: (B, T, W); lam: (W,). Returns (y (B,T,W), h_last (B,W) fp32)."""
+    log_a_base = -_C * jax.nn.softplus(lam.astype(jnp.float32))  # (W,) ≤ 0
+    log_a = r.astype(jnp.float32) * log_a_base
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, u1 * a2 + u2
+
+    aT = jnp.moveaxis(a, 1, 0)
+    uT = jnp.moveaxis(u, 1, 0)
+    a_acc, u_acc = jax.lax.associative_scan(combine, (aT, uT), axis=0)
+    h = a_acc * h0[None] + u_acc  # (T,B,W)
+    y = jnp.moveaxis(h, 0, 1)
+    return y.astype(x.dtype), y[:, -1].astype(jnp.float32)
+
+
+def rglru_step(h, x, r, i, lam):
+    """One decode step. h (B,W) fp32; x,r,i (B,W)."""
+    log_a = r.astype(jnp.float32) * (-_C * jax.nn.softplus(lam.astype(jnp.float32)))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * h + beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return h.astype(x.dtype), h
+
+
+def _causal_conv(xw, conv_w, conv_b, state=None):
+    """Depthwise causal conv along T. xw (B,T,W); conv_w (W,k);
+    state (B,k-1,W) holds the previous inputs for decode."""
+    k = conv_w.shape[-1]
+    w = conv_w.astype(xw.dtype)
+    if state is None:
+        pad = jnp.pad(xw, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(xw.dtype), xw], axis=1)
+    out = sum(pad[:, i : i + xw.shape[1], :] * w[:, i][None, None, :] for i in range(k))
+    return out + conv_b.astype(xw.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_rec_block(key, cfg, L: int):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": truncated_normal(ks[0], (L, d, w), std=d**-0.5),
+        "w_gate_branch": truncated_normal(ks[1], (L, d, w), std=d**-0.5),
+        "conv_w": truncated_normal(ks[2], (L, w, cfg.conv_kernel), std=0.2),
+        "conv_b": jnp.zeros((L, w)),
+        "w_a": truncated_normal(ks[3], (L, w, w), std=w**-0.5),
+        "w_x": truncated_normal(ks[4], (L, w, w), std=w**-0.5),
+        "lam": jnp.tile(jnp.linspace(0.5, 4.0, w)[None], (L, 1)),
+        "w_out": truncated_normal(ks[5], (L, w, d), std=w**-0.5),
+    }
+
+
+def rec_block_axes() -> dict:
+    return {
+        "w_in": Axes("layers", "param_embed", "rnn_width"),
+        "w_gate_branch": Axes("layers", "param_embed", "rnn_width"),
+        "conv_w": Axes("layers", "rnn_width", None),
+        "conv_b": Axes("layers", "rnn_width"),
+        "w_a": Axes("layers", "param_embed", "rnn_width"),
+        "w_x": Axes("layers", "param_embed", "rnn_width"),
+        "lam": Axes("layers", "rnn_width"),
+        "w_out": Axes("layers", "rnn_width", "param_embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class GriffinLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.pattern = cfg.layer_pattern or "A"
+        self.plen = len(self.pattern)
+        self.n_groups = cfg.n_layers // self.plen
+        self.rem = self.pattern[: cfg.n_layers - self.n_groups * self.plen]
+
+    # -- slots -----------------------------------------------------------------
+    def _init_slot(self, key, kind: str, L: int) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        slot = {
+            "ln1": jnp.zeros((L, cfg.d_model)),
+            "ln2": jnp.zeros((L, cfg.d_model)),
+            "mlp": init_mlp(k2, cfg, L),
+        }
+        slot["mix"] = init_rec_block(k1, cfg, L) if kind == "R" else init_attn(k1, cfg, L)
+        return slot
+
+    def _slot_axes(self, kind: str) -> dict:
+        cfg = self.cfg
+        return {
+            "ln1": Axes("layers", "param_embed"),
+            "ln2": Axes("layers", "param_embed"),
+            "mlp": mlp_axes(cfg),
+            "mix": rec_block_axes() if kind == "R" else attn_axes(cfg),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3 + self.plen + len(self.rem))
+        p = {
+            "embed": init_embedding(ks[0], cfg),
+            "ln_f": jnp.zeros((cfg.d_model,)),
+            "slots": [
+                self._init_slot(ks[2 + s], kind, self.n_groups)
+                for s, kind in enumerate(self.pattern)
+            ],
+            "rem": [
+                self._init_slot(ks[2 + self.plen + s], kind, 1)
+                for s, kind in enumerate(self.rem)
+            ],
+        }
+        if not cfg.tie_embeddings:
+            p["out_embed"] = init_embedding(ks[1], cfg)
+        return p
+
+    def param_axes(self):
+        p = {
+            "embed": embed_axes(),
+            "ln_f": Axes("param_embed"),
+            "slots": [self._slot_axes(k) for k in self.pattern],
+            "rem": [self._slot_axes(k) for k in self.rem],
+        }
+        if not self.cfg.tie_embeddings:
+            p["out_embed"] = embed_axes()
+        return p
+
+    # -- one layer ------------------------------------------------------------
+    def _apply_layer(self, x, lp, kind, sin, cos, cache=None, pos=None):
+        """cache: None (train) or dict for this layer. Returns (x, new_cache)."""
+        cfg = self.cfg
+        h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        new_cache = {}
+        if kind == "R":
+            xw = jnp.einsum("btd,dw->btw", h, lp["mix"]["w_in"].astype(h.dtype))
+            gate = jax.nn.gelu(
+                jnp.einsum("btd,dw->btw", h, lp["mix"]["w_gate_branch"].astype(h.dtype)),
+                approximate=True,
+            )
+            k = cfg.conv_kernel
+            if cache is None:
+                conv_in, h0 = None, None
+            else:
+                conv_in, h0 = cache["conv"], cache["h"]
+            tail_src = (
+                xw if cache is None else jnp.concatenate([conv_in.astype(xw.dtype), xw], 1)
+            )
+            conv_tail = jnp.pad(tail_src, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1) :]
+            xc = _causal_conv(xw, lp["mix"]["conv_w"], lp["mix"]["conv_b"], conv_in)
+            xc = constrain(xc, ("batch", "seq", "rnn_width"))
+            r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xc, lp["mix"]["w_a"].astype(xc.dtype)))
+            i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xc, lp["mix"]["w_x"].astype(xc.dtype)))
+            if cache is None:
+                y, h_last = rglru_scan(xc, r, i, lp["mix"]["lam"])
+            else:
+                y1, h_last = rglru_step(h0, xc[:, 0], r[:, 0], i[:, 0], lp["mix"]["lam"])
+                y = y1[:, None]
+            y = y * gate
+            mix_out = jnp.einsum("btw,wd->btd", y, lp["mix"]["w_out"].astype(y.dtype))
+            new_cache = {"conv": conv_tail.astype(jnp.bfloat16), "h": h_last}
+        else:  # local attention
+            q, kk, vv = qkv(lp["mix"], h, cfg, sin, cos)
+            if cache is None:
+                ao = attn_lib.full_attention(
+                    q, kk, vv, causal=True, window=cfg.window, q_chunk=2048
+                )
+            else:
+                kc = attn_lib.update_cache(cache["k"], kk, pos, ring=True)
+                vc = attn_lib.update_cache(cache["v"], vv, pos, ring=True)
+                valid = jnp.minimum(pos + 1, cfg.window)
+                ao = attn_lib.decode_attention(q, kc, vc, valid)
+                new_cache = {"k": kc, "v": vc}
+            mix_out = jnp.einsum(
+                "bth,hd->btd",
+                ao.reshape(ao.shape[0], ao.shape[1], -1),
+                lp["mix"]["wo"].astype(x.dtype),
+            )
+        x = x + mix_out
+        h2 = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        x = x + apply_mlp(lp["mlp"], h2, cfg)
+        return constrain(x, ("batch", "seq", "embed")), new_cache
+
+    # -- forward ----------------------------------------------------------------
+    def forward(self, params, tokens, vision_embeds=None, *, remat=False, q_chunk=0):
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = embed_tokens(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        sin, cos = rope_tables(jnp.arange(T), cfg.resolved_head_dim, cfg.rope_theta)
+
+        slot_axes = [self._slot_axes(k) for k in self.pattern]
+
+        def group_body(x, slot_params):
+            for s, kind in enumerate(self.pattern):
+                lp = constrain_tree(slot_params[s], slot_axes[s], drop_leading=1)
+                x, _ = self._apply_layer(x, lp, kind, sin, cos)
+            return x
+
+        body = group_body
+        if remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        if self.n_groups:
+            x, _ = jax.lax.scan(lambda c, xs: (body(c, xs), None), x, params["slots"])
+        for s, kind in enumerate(self.rem):
+            lp = jax.tree.map(lambda a: a[0], params["rem"][s])
+            x, _ = self._apply_layer(x, lp, kind, sin, cos)
+        x = rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        out_emb = params["embed"] if cfg.tie_embeddings else params["out_embed"]
+        return logits_from_hidden(x, out_emb, cfg.vocab), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, *, remat=True, q_chunk=0):
+        logits, _ = self.forward(params, batch["tokens"], remat=remat)
+        loss, metrics = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return loss, metrics
+
+    # -- serving -------------------------------------------------------------
+    def _empty_caches(self, batch: int, G: int) -> list:
+        """Per-slot stacked caches with leading group dim G."""
+        cfg = self.cfg
+        w = cfg.rnn_width or cfg.d_model
+        K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        caches = []
+        for kind in self.pattern:
+            if kind == "R":
+                caches.append(
+                    {
+                        "conv": jnp.zeros((G, batch, cfg.conv_kernel - 1, w), jnp.bfloat16),
+                        "h": jnp.zeros((G, batch, w), jnp.float32),
+                    }
+                )
+            else:
+                caches.append(
+                    {
+                        "k": jnp.zeros((G, batch, cfg.window, K, hd), jnp.bfloat16),
+                        "v": jnp.zeros((G, batch, cfg.window, K, hd), jnp.bfloat16),
+                    }
+                )
+        return caches
+
+    def init_cache(self, batch: int, max_len: int):
+        rem_caches = [
+            jax.tree.map(lambda a: a[0], self._empty_caches(batch, 1)[s])
+            for s, kind in enumerate(self.rem)
+        ]
+        return {
+            "slots": self._empty_caches(batch, self.n_groups),
+            "rem": rem_caches,
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        def slot_ax(kind):
+            if kind == "R":
+                return {
+                    "conv": Axes("layers", "batch", None, "rnn_width"),
+                    "h": Axes("layers", "cache_batch", "rnn_width"),
+                }
+            return {
+                "k": Axes("layers", "cache_batch", "kv_seq", "act_kv", None),
+                "v": Axes("layers", "cache_batch", "kv_seq", "act_kv", None),
+            }
+
+        def rem_ax(kind):
+            return jax.tree.map(lambda ax: Axes(*ax.t[1:]), slot_ax(kind))
+
+        return {
+            "slots": [slot_ax(k) for k in self.pattern],
+            "rem": [rem_ax(k) for k in self.rem],
+            "length": Axes(),
+        }
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        pos = cache["length"]
+        x = embed_tokens(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        sin, cos = rope_tables(pos[None], cfg.resolved_head_dim, cfg.rope_theta)
+
+        slot_axes = [self._slot_axes(k) for k in self.pattern]
+
+        def group_body(x, xs):
+            slot_params, slot_caches = xs
+            new_caches = []
+            for s, kind in enumerate(self.pattern):
+                lp = constrain_tree(slot_params[s], slot_axes[s], drop_leading=1)
+                x, nc = self._apply_layer(
+                    x, lp, kind, sin, cos, cache=slot_caches[s], pos=pos
+                )
+                new_caches.append(nc)
+            return x, new_caches
+
+        if self.n_groups:
+            x, new_slot_caches = jax.lax.scan(
+                group_body, x, (params["slots"], cache["slots"])
+            )
+        else:
+            new_slot_caches = cache["slots"]
+        new_rem = []
+        for s, kind in enumerate(self.rem):
+            lp = jax.tree.map(lambda a: a[0], params["rem"][s])
+            x, nc = self._apply_layer(x, lp, kind, sin, cos, cache=cache["rem"][s], pos=pos)
+            new_rem.append(nc)
+        x = rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        out_emb = params["embed"] if cfg.tie_embeddings else params["out_embed"]
+        logits = logits_from_hidden(x, out_emb, cfg.vocab)[:, 0]
+        return logits, {"slots": new_slot_caches, "rem": new_rem, "length": pos + 1}
+
+    def prefill(self, params, tokens, *, pad_to=None, q_chunk=0):
+        """Run the prompt and build decode caches (ring KV for A slots,
+        conv tail + RG-LRU state for R slots)."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = embed_tokens(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        sin, cos = rope_tables(jnp.arange(T), cfg.resolved_head_dim, cfg.rope_theta)
+        W = cfg.window
+
+        def ring_from_full(kv):  # (B,T,K,hd) → (B,W,K,hd) ring layout
+            n = min(T, W)
+            start = T - n
+            idx = (start + jnp.arange(n)) % W
+            ring = jnp.zeros((B, W) + kv.shape[2:], jnp.bfloat16)
+            return ring.at[:, idx].set(kv[:, start:].astype(jnp.bfloat16))
+
+        def layer_with_cache(x, lp, kind):
+            cfg_ = self.cfg
+            h = rmsnorm(x, lp["ln1"], cfg_.rms_eps)
+            if kind == "R":
+                xw = jnp.einsum("btd,dw->btw", h, lp["mix"]["w_in"].astype(h.dtype))
+                gate = jax.nn.gelu(
+                    jnp.einsum("btd,dw->btw", h, lp["mix"]["w_gate_branch"].astype(h.dtype)),
+                    approximate=True,
+                )
+                k = cfg_.conv_kernel
+                conv_tail = jnp.pad(xw, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1) :]
+                xc = _causal_conv(xw, lp["mix"]["conv_w"], lp["mix"]["conv_b"])
+                r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xc, lp["mix"]["w_a"].astype(xc.dtype)))
+                i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xc, lp["mix"]["w_x"].astype(xc.dtype)))
+                y, h_last = rglru_scan(xc, r, i, lp["mix"]["lam"])
+                y = y * gate
+                mix_out = jnp.einsum("btw,wd->btd", y, lp["mix"]["w_out"].astype(y.dtype))
+                nc = {"conv": conv_tail.astype(jnp.bfloat16), "h": h_last}
+            else:
+                q, kk, vv = qkv(lp["mix"], h, cfg_, sin, cos)
+                ao = attn_lib.full_attention(q, kk, vv, causal=True, window=W, q_chunk=2048)
+                mix_out = jnp.einsum(
+                    "bth,hd->btd",
+                    ao.reshape(ao.shape[0], ao.shape[1], -1),
+                    lp["mix"]["wo"].astype(x.dtype),
+                )
+                nc = {"k": ring_from_full(kk), "v": ring_from_full(vv)}
+            x = x + mix_out
+            h2 = rmsnorm(x, lp["ln2"], cfg_.rms_eps)
+            x = x + apply_mlp(lp["mlp"], h2, cfg_)
+            return constrain(x, ("batch", "seq", "embed")), nc
+
+        slot_axes = [self._slot_axes(k) for k in self.pattern]
+
+        def group_body(x, slot_params):
+            ncs = []
+            for s, kind in enumerate(self.pattern):
+                lp = constrain_tree(slot_params[s], slot_axes[s], drop_leading=1)
+                x, nc = layer_with_cache(x, lp, kind)
+                ncs.append(nc)
+            return x, ncs
+
+        if self.n_groups:
+            x, slot_caches = jax.lax.scan(group_body, x, params["slots"])
+        else:
+            slot_caches = self._empty_caches(B, 0)
+        rem_caches = []
+        for s, kind in enumerate(self.rem):
+            lp = jax.tree.map(lambda a: a[0], params["rem"][s])
+            x, nc = layer_with_cache(x, lp, kind)
+            rem_caches.append(nc)
+        x = rmsnorm(x, params["ln_f"], cfg.rms_eps)
+        out_emb = params["embed"] if cfg.tie_embeddings else params["out_embed"]
+        logits = logits_from_hidden(x[:, -1:], out_emb, cfg.vocab)[:, 0]
+        cache = {
+            "slots": slot_caches,
+            "rem": rem_caches,
+            "length": jnp.asarray(T, jnp.int32),
+        }
+        return logits, cache

@@ -1,0 +1,451 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+One parameterized implementation: GQA attention (+qk-norm for qwen3,
++parallel attn/FFN residual block for command-r, +bias for qwen2-moe),
+GLU or GELU FFN, optional MoE FFN, optional vision-embedding merge (vlm,
+frontend stubbed per the assignment), learned or rotary positions.
+
+Layers are stacked along a leading ``L`` axis and applied with
+``lax.scan`` (keeps HLO size O(1) in depth — essential for the 512-device
+dry-run compiles) with optional remat.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.dist import Axes, constrain, constrain_tree
+from . import attention as attn_lib
+from .common import (
+    apply_rope,
+    embed_axes,
+    embed_tokens,
+    glu_activation,
+    init_embedding,
+    logits_from_hidden,
+    norm,
+    rope_tables,
+    softmax_cross_entropy,
+    truncated_normal,
+)
+from .moe import init_moe, moe_axes, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg, L: int):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 7)
+    p = {
+        "wq": truncated_normal(ks[0], (L, d, H * hd), std=d**-0.5),
+        "wk": truncated_normal(ks[1], (L, d, K * hd), std=d**-0.5),
+        "wv": truncated_normal(ks[2], (L, d, K * hd), std=d**-0.5),
+        "wo": truncated_normal(ks[3], (L, H * hd, d), std=(H * hd) ** -0.5),
+    }
+    if cfg.attention_bias:
+        p["bq"] = jnp.zeros((L, H * hd))
+        p["bk"] = jnp.zeros((L, K * hd))
+        p["bv"] = jnp.zeros((L, K * hd))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((L, hd))
+        p["k_norm"] = jnp.zeros((L, hd))
+    return p
+
+
+def attn_axes(cfg) -> dict:
+    p = {
+        "wq": Axes("layers", "param_embed", "heads"),
+        "wk": Axes("layers", "param_embed", "kv"),
+        "wv": Axes("layers", "param_embed", "kv"),
+        "wo": Axes("layers", "heads", "param_embed"),
+    }
+    if cfg.attention_bias:
+        p["bq"] = Axes("layers", "heads")
+        p["bk"] = Axes("layers", "kv")
+        p["bv"] = Axes("layers", "kv")
+    if cfg.qk_norm:
+        p["q_norm"] = Axes("layers", None)
+        p["k_norm"] = Axes("layers", None)
+    return p
+
+
+def init_mlp(key, cfg, L: int):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "gelu":
+        return {
+            "w_up": truncated_normal(ks[0], (L, d, ff), std=d**-0.5),
+            "w_down": truncated_normal(ks[1], (L, ff, d), std=ff**-0.5),
+        }
+    return {
+        "w_gate": truncated_normal(ks[0], (L, d, ff), std=d**-0.5),
+        "w_up": truncated_normal(ks[1], (L, d, ff), std=d**-0.5),
+        "w_down": truncated_normal(ks[2], (L, ff, d), std=ff**-0.5),
+    }
+
+
+def mlp_axes(cfg) -> dict:
+    if cfg.activation == "gelu":
+        return {
+            "w_up": Axes("layers", "param_embed", "mlp"),
+            "w_down": Axes("layers", "mlp", "param_embed"),
+        }
+    return {
+        "w_gate": Axes("layers", "param_embed", "mlp"),
+        "w_up": Axes("layers", "param_embed", "mlp"),
+        "w_down": Axes("layers", "mlp", "param_embed"),
+    }
+
+
+def row_parallel_einsum(u: jax.Array, w: jax.Array) -> jax.Array:
+    """§Perf V9: u (B,T,F) with F sharded over `model`, w (F,D) row-sharded —
+    local matmul + EXPLICIT bf16 psum via shard_map (auto over data axes).
+    GSPMD would otherwise all-reduce the f32 partial accumulators."""
+    from repro.dist import active_mesh
+    from repro.dist.perf import perf
+
+    mesh = active_mesh()
+    F = u.shape[-1]
+    if (
+        not perf().bf16_rowparallel
+        or mesh is None
+        or "model" not in mesh.shape
+        or F % mesh.shape["model"]
+        # XLA:CPU's AllReducePromotion pass hard-crashes (abort, not raise)
+        # on ANY bf16 reduction collective — TPU-only path; the CPU dry-run
+        # reports the f32 baseline plus a documented bf16 adjustment.
+        or jax.default_backend() == "cpu"
+    ):
+        return jnp.einsum("btf,fd->btd", u, w)
+    from jax.sharding import PartitionSpec as P
+
+    def f(u_l, w_l):
+        y = jnp.einsum("btf,fd->btd", u_l, w_l).astype(u.dtype)
+        # bf16 reduce-scatter + all-gather (the ring-AR decomposition): same
+        # wire as an AR but in 2-byte lanes — and XLA:CPU's AllReducePromotion
+        # pass (which hard-crashes on bf16 ARs) never fires.
+        y = jax.lax.psum_scatter(y, "model", scatter_dimension=2, tiled=True)
+        return jax.lax.all_gather(y, "model", axis=2, tiled=True)
+
+    return jax.shard_map(
+        f,
+        mesh=mesh,
+        in_specs=(P(None, None, "model"), P("model", None)),
+        out_specs=P(None, None, None),
+        axis_names=frozenset({"model"}),
+        check_vma=False,
+    )(u, w)
+
+
+def apply_mlp(lp: dict, h: jax.Array, cfg) -> jax.Array:
+    if cfg.activation == "gelu":
+        u = jnp.einsum("btd,df->btf", h, lp["w_up"].astype(h.dtype))
+        u = constrain(jax.nn.gelu(u, approximate=True), ("batch", "seq", "act_mlp"))
+        return row_parallel_einsum(u, lp["w_down"].astype(h.dtype))
+    g = jnp.einsum("btd,df->btf", h, lp["w_gate"].astype(h.dtype))
+    u = jnp.einsum("btd,df->btf", h, lp["w_up"].astype(h.dtype))
+    u = constrain(glu_activation(g, u, cfg.activation), ("batch", "seq", "act_mlp"))
+    return row_parallel_einsum(u, lp["w_down"].astype(h.dtype))
+
+
+def qkv(lp: dict, h: jax.Array, cfg, sin, cos):
+    """h (B,T,d) → q (B,T,H,hd), k/v (B,T,K,hd) with rope applied."""
+    B, T, _ = h.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("btd,dh->bth", h, lp["wq"].astype(h.dtype))
+    k = jnp.einsum("btd,dh->bth", h, lp["wk"].astype(h.dtype))
+    v = jnp.einsum("btd,dh->bth", h, lp["wv"].astype(h.dtype))
+    if cfg.attention_bias:
+        q = q + lp["bq"].astype(h.dtype)
+        k = k + lp["bk"].astype(h.dtype)
+        v = v + lp["bv"].astype(h.dtype)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, K, hd)
+    v = v.reshape(B, T, K, hd)
+    if cfg.qk_norm:
+        from .common import rmsnorm
+
+        q = rmsnorm(q, lp["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, lp["k_norm"], cfg.rms_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    q = constrain(q, ("batch", "seq", "act_heads", None))
+    k = constrain(k, ("batch", "seq", "act_kv", None))
+    v = constrain(v, ("batch", "seq", "act_kv", None))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        L = cfg.n_layers
+        ks = jax.random.split(key, 6)
+        p: dict = {
+            "embed": init_embedding(ks[0], cfg),
+            "ln1": jnp.zeros((L, cfg.d_model)),
+            "ln_f": jnp.zeros((cfg.d_model,)),
+            "attn": init_attn(ks[1], cfg, L),
+        }
+        if not cfg.parallel_block:
+            p["ln2"] = jnp.zeros((L, cfg.d_model))
+        if cfg.family == "moe":
+            p["moe"] = init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[2], cfg, L)
+        if not cfg.tie_embeddings:
+            p["out_embed"] = init_embedding(ks[3], cfg)
+        if cfg.pos_emb == "learned":
+            p["pos_embed"] = truncated_normal(ks[4], (8192, cfg.d_model), std=0.02)
+        return p
+
+    def param_axes(self) -> dict:
+        cfg = self.cfg
+        p: dict = {
+            "embed": embed_axes(),
+            "ln1": Axes("layers", "param_embed"),
+            "ln_f": Axes("param_embed"),
+            "attn": attn_axes(cfg),
+        }
+        if not cfg.parallel_block:
+            p["ln2"] = Axes("layers", "param_embed")
+        if cfg.family == "moe":
+            p["moe"] = moe_axes(cfg)
+        else:
+            p["mlp"] = mlp_axes(cfg)
+        if not cfg.tie_embeddings:
+            p["out_embed"] = embed_axes()
+        if cfg.pos_emb == "learned":
+            p["pos_embed"] = Axes("param_seq", "param_embed")
+        return p
+
+    # -- layer stacking helpers ------------------------------------------------
+    def _stacked_axes(self) -> dict:
+        ax = self.param_axes()
+        st = {"ln1": ax["ln1"], "attn": ax["attn"]}
+        if "ln2" in ax:
+            st["ln2"] = ax["ln2"]
+        if "moe" in ax:
+            st["moe"] = ax["moe"]
+        if "mlp" in ax:
+            st["mlp"] = ax["mlp"]
+        return st
+
+    def _stacked(self, params: dict) -> dict:
+        st = {"ln1": params["ln1"], "attn": params["attn"]}
+        if "ln2" in params:
+            st["ln2"] = params["ln2"]
+        if "moe" in params:
+            st["moe"] = params["moe"]
+        if "mlp" in params:
+            st["mlp"] = params["mlp"]
+        from repro.dist.perf import perf
+
+        if perf().cast_weights_early:
+            # §Perf V6: matmul weights cross the FSDP gather in bf16
+            dtype = jnp.dtype(self.cfg.dtype)
+            st = jax.tree.map(lambda p: p.astype(dtype) if p.ndim >= 3 else p, st)
+        return st
+
+    # -- forward (train / prefill) ----------------------------------------------
+    def _layer(self, x, lp, sin, cos, *, collect_kv: bool, q_chunk: int):
+        cfg = self.cfg
+        h = norm(x, lp["ln1"], cfg.rms_eps, cfg.norm_type)
+        q, k, v = qkv(lp["attn"], h, cfg, sin, cos)
+        ao = attn_lib.full_attention(q, k, v, causal=True, q_chunk=q_chunk)
+        ao = row_parallel_einsum(
+            ao.reshape(ao.shape[0], ao.shape[1], -1), lp["attn"]["wo"].astype(x.dtype)
+        )
+        ao = jax.ad_checkpoint.checkpoint_name(ao, "attn_out")
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.parallel_block:
+            mo = apply_mlp(lp["mlp"], h, cfg)
+            x = x + ao + mo
+        else:
+            x = x + ao
+            h2 = norm(x, lp["ln2"], cfg.rms_eps, cfg.norm_type)
+            if cfg.family == "moe":
+                mo, aux = moe_ffn(lp["moe"], h2, cfg)
+            else:
+                mo = apply_mlp(lp["mlp"], h2, cfg)
+            mo = jax.ad_checkpoint.checkpoint_name(mo, "mlp_out")
+            x = x + mo
+        x = constrain(x, ("batch", "seq", "embed"))
+        kv = (k, v) if collect_kv else (jnp.zeros((), x.dtype), jnp.zeros((), x.dtype))
+        return x, aux, kv
+
+    def hidden_states(
+        self,
+        params: dict,
+        tokens: jax.Array,
+        vision_embeds: jax.Array | None = None,
+        *,
+        remat: bool = False,
+        collect_kv: bool = False,
+        q_chunk: int = 2048,
+    ):
+        """Returns (hidden (B,T,d), aux_loss, stacked_kv or None)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        B, T = tokens.shape
+        x = embed_tokens(params["embed"], tokens, dtype)
+        if vision_embeds is not None:
+            P = vision_embeds.shape[1]
+            x = jax.lax.dynamic_update_slice(x, vision_embeds.astype(dtype), (0, 0, 0))
+        if cfg.pos_emb == "learned":
+            x = x + params["pos_embed"][:T].astype(dtype)
+        sin, cos = rope_tables(jnp.arange(T), cfg.resolved_head_dim, cfg.rope_theta)
+
+        body = partial(self._layer, collect_kv=collect_kv, q_chunk=q_chunk)
+        if remat:
+            from repro.dist.perf import perf
+
+            # §Perf V1: saving the two post-all-reduce tensors per layer
+            # keeps the backward from re-running the TP collectives.
+            policy = (
+                jax.checkpoint_policies.save_only_these_names("attn_out", "mlp_out")
+                if perf().save_dot_outputs
+                else jax.checkpoint_policies.nothing_saveable
+            )
+            body = jax.checkpoint(body, policy=policy)
+
+        stacked_axes = self._stacked_axes()
+
+        def scan_fn(carry, lp):
+            x, aux = carry
+            lp = constrain_tree(lp, stacked_axes, drop_leading=1)
+            x, aux_l, kv = body(x, lp, sin, cos)
+            return (x, aux + aux_l), kv
+
+        (x, aux), kvs = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), self._stacked(params))
+        x = norm(x, params["ln_f"], cfg.rms_eps, cfg.norm_type)
+        return x, aux, (kvs if collect_kv else None)
+
+    def forward(self, params, tokens, vision_embeds=None, **kw):
+        x, aux, _ = self.hidden_states(params, tokens, vision_embeds, **kw)
+        out_emb = params["embed"] if self.cfg.tie_embeddings else params["out_embed"]
+        return logits_from_hidden(x, out_emb, self.cfg.vocab), aux
+
+    def loss(self, params, batch, *, remat: bool = True, q_chunk: int = 2048):
+        logits, aux = self.forward(
+            params,
+            batch["tokens"],
+            batch.get("vision_embeds"),
+            remat=remat,
+            q_chunk=q_chunk,
+        )
+        loss, metrics = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+        if self.cfg.family == "moe":
+            loss = loss + self.cfg.router_aux_coef * aux
+            metrics["aux_loss"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -- serving ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        K, hd, L = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+        shape = (L, batch, max_len, K, hd)
+        return {
+            "k": jnp.zeros(shape, jnp.bfloat16),
+            "v": jnp.zeros(shape, jnp.bfloat16),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self) -> dict:
+        return {
+            "k": Axes("layers", "cache_batch", "kv_seq", "act_kv", None),
+            "v": Axes("layers", "cache_batch", "kv_seq", "act_kv", None),
+            "length": Axes(),
+        }
+
+    def prefill(
+        self, params, tokens, vision_embeds=None, *, q_chunk: int = 2048, pad_to: int | None = None
+    ):
+        """Run the full prompt, build the KV cache (padded to ``pad_to`` slots
+        for subsequent decode steps), return last-token logits."""
+        x, _aux, kvs = self.hidden_states(
+            params, tokens, vision_embeds, collect_kv=True, q_chunk=q_chunk
+        )
+        k, v = kvs  # (L, B, T, K, hd)
+        out_emb = params["embed"] if self.cfg.tie_embeddings else params["out_embed"]
+        last = x[:, -1:, :]
+        logits = logits_from_hidden(last, out_emb, self.cfg.vocab)[:, 0]
+        T = tokens.shape[1]
+        if pad_to is not None and pad_to > T:
+            pad = [(0, 0), (0, 0), (0, pad_to - T), (0, 0), (0, 0)]
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+        cache = {
+            "k": k.astype(jnp.bfloat16),
+            "v": v.astype(jnp.bfloat16),
+            "length": jnp.asarray(T, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache: dict, tokens: jax.Array):
+        """tokens (B,1) — appends one position at cache['length']."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        B = tokens.shape[0]
+        pos = cache["length"]
+        x = embed_tokens(params["embed"], tokens, dtype)
+        if cfg.pos_emb == "learned":
+            x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0).astype(dtype)
+        sin, cos = rope_tables(pos[None], cfg.resolved_head_dim, cfg.rope_theta)
+
+        stacked_axes = self._stacked_axes()
+
+        from repro.dist.perf import perf
+
+        use_sharded = perf().sharded_decode_attn
+
+        def scan_fn(x, inputs):
+            lp, kc, vc = inputs
+            lp = constrain_tree(lp, stacked_axes, drop_leading=1)
+            h = norm(x, lp["ln1"], cfg.rms_eps, cfg.norm_type)
+            q, k, v = qkv(lp["attn"], h, cfg, sin, cos)
+            if use_sharded:
+                ao, kc, vc = attn_lib.sharded_decode_update_attend(q, kc, vc, k, v, pos)
+            else:
+                kc = attn_lib.update_cache(kc, k, pos)
+                vc = attn_lib.update_cache(vc, v, pos)
+                ao = attn_lib.decode_attention(q, kc, vc, pos + 1)
+            ao = jnp.einsum(
+                "bth,hd->btd", ao.reshape(B, 1, -1), lp["attn"]["wo"].astype(x.dtype)
+            )
+            if cfg.parallel_block:
+                mo = apply_mlp(lp["mlp"], h, cfg)
+                x = x + ao + mo
+            else:
+                x = x + ao
+                h2 = norm(x, lp["ln2"], cfg.rms_eps, cfg.norm_type)
+                if cfg.family == "moe":
+                    mo, _ = moe_ffn(lp["moe"], h2, cfg)
+                else:
+                    mo = apply_mlp(lp["mlp"], h2, cfg)
+                x = x + mo
+            return constrain(x, ("batch", "seq", "embed")), (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            scan_fn, x, (self._stacked(params), cache["k"], cache["v"])
+        )
+        x = norm(x, params["ln_f"], cfg.rms_eps, cfg.norm_type)
+        out_emb = params["embed"] if cfg.tie_embeddings else params["out_embed"]
+        logits = logits_from_hidden(x, out_emb, cfg.vocab)[:, 0]
+        new_cache = {"k": k_new, "v": v_new, "length": pos + 1}
+        return logits, new_cache

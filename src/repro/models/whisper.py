@@ -1,0 +1,306 @@
+"""Whisper-style encoder-decoder (audio family).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, enc_len, d_model); the encoder is
+bidirectional self-attention over those frames (sinusoidal positions), the
+decoder is a causal LM with cross-attention (learned positions, tied
+output embedding). LayerNorm + GELU MLP per the original architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import Axes, constrain, constrain_tree
+from . import attention as attn_lib
+from .common import (
+    embed_axes,
+    embed_tokens,
+    init_embedding,
+    layernorm,
+    logits_from_hidden,
+    softmax_cross_entropy,
+    truncated_normal,
+)
+from .transformer import apply_mlp, attn_axes, init_attn, init_mlp, mlp_axes, qkv
+
+
+def sinusoid_pos(T: int, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(T)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class WhisperModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.max_dec_pos = 40960  # covers the 32k prefill/decode cells
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        Le, Ld = cfg.enc_layers, cfg.n_layers
+        ks = jax.random.split(key, 10)
+        p = {
+            "embed": init_embedding(ks[0], cfg),
+            "dec_pos": truncated_normal(ks[1], (self.max_dec_pos, cfg.d_model), std=0.02),
+            "enc": {
+                "ln1": jnp.zeros((Le, cfg.d_model)),
+                "ln2": jnp.zeros((Le, cfg.d_model)),
+                "attn": init_attn(ks[2], cfg, Le),
+                "mlp": init_mlp(ks[3], cfg, Le),
+            },
+            "enc_ln_f": jnp.zeros((cfg.d_model,)),
+            "dec": {
+                "ln1": jnp.zeros((Ld, cfg.d_model)),
+                "ln2": jnp.zeros((Ld, cfg.d_model)),
+                "ln3": jnp.zeros((Ld, cfg.d_model)),
+                "attn": init_attn(ks[4], cfg, Ld),
+                "cross": init_attn(ks[5], cfg, Ld),
+                "mlp": init_mlp(ks[6], cfg, Ld),
+            },
+            "dec_ln_f": jnp.zeros((cfg.d_model,)),
+        }
+        return p
+
+    def param_axes(self):
+        cfg = self.cfg
+        enc = {
+            "ln1": Axes("layers", "param_embed"),
+            "ln2": Axes("layers", "param_embed"),
+            "attn": attn_axes(cfg),
+            "mlp": mlp_axes(cfg),
+        }
+        dec = {
+            "ln1": Axes("layers", "param_embed"),
+            "ln2": Axes("layers", "param_embed"),
+            "ln3": Axes("layers", "param_embed"),
+            "attn": attn_axes(cfg),
+            "cross": attn_axes(cfg),
+            "mlp": mlp_axes(cfg),
+        }
+        return {
+            "embed": embed_axes(),
+            "dec_pos": Axes("param_seq", "param_embed"),
+            "enc": enc,
+            "enc_ln_f": Axes("param_embed"),
+            "dec": dec,
+            "dec_ln_f": Axes("param_embed"),
+        }
+
+    # -- encoder -----------------------------------------------------------
+    def encode(self, params, enc_embeds):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = enc_embeds.astype(dtype)
+        x = x + sinusoid_pos(x.shape[1], cfg.d_model).astype(dtype)
+        x = constrain(x, ("batch", "seq", "embed"))
+
+        enc_axes = self.param_axes()["enc"]
+
+        def body(x, lp):
+            lp = constrain_tree(lp, enc_axes, drop_leading=1)
+            h = layernorm(x, lp["ln1"], cfg.rms_eps)
+            q, k, v = qkv(lp["attn"], h, cfg, None, None)
+            ao = attn_lib.full_attention(q, k, v, causal=False, q_chunk=2048)
+            x = x + jnp.einsum(
+                "bth,hd->btd", ao.reshape(*ao.shape[:2], -1), lp["attn"]["wo"].astype(x.dtype)
+            )
+            h2 = layernorm(x, lp["ln2"], cfg.rms_eps)
+            x = x + apply_mlp(lp["mlp"], h2, cfg)
+            return constrain(x, ("batch", "seq", "embed")), None
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return layernorm(x, params["enc_ln_f"], cfg.rms_eps)
+
+    # -- decoder ----------------------------------------------------------
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-layer cross-attention K/V. → (L,B,S_enc,K,hd)×2"""
+        cfg = self.cfg
+        K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        B, S, _ = enc_out.shape
+
+        def body(_, lp):
+            k = jnp.einsum("btd,dh->bth", enc_out, lp["wk"].astype(enc_out.dtype))
+            v = jnp.einsum("btd,dh->bth", enc_out, lp["wv"].astype(enc_out.dtype))
+            if cfg.attention_bias:
+                k = k + lp["bk"].astype(k.dtype)
+                v = v + lp["bv"].astype(v.dtype)
+            return None, (k.reshape(B, S, K, hd), v.reshape(B, S, K, hd))
+
+        _, (ck, cv) = jax.lax.scan(body, None, params["dec"]["cross"])
+        return ck, cv
+
+    def _decoder(self, params, tokens, enc_out, pos_offset=0):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        B, T = tokens.shape
+        x = embed_tokens(params["embed"], tokens, dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos_offset, T, 0).astype(dtype)
+        ck, cv = self._cross_kv(params, enc_out)
+
+        dec_axes = self.param_axes()["dec"]
+
+        def body(x, inputs):
+            lp, ckl, cvl = inputs
+            lp = constrain_tree(lp, dec_axes, drop_leading=1)
+            h = layernorm(x, lp["ln1"], cfg.rms_eps)
+            q, k, v = qkv(lp["attn"], h, cfg, None, None)
+            ao = attn_lib.full_attention(q, k, v, causal=True, q_chunk=2048)
+            x = x + jnp.einsum(
+                "bth,hd->btd", ao.reshape(*ao.shape[:2], -1), lp["attn"]["wo"].astype(x.dtype)
+            )
+            h2 = layernorm(x, lp["ln2"], cfg.rms_eps)
+            qc = jnp.einsum("btd,dh->bth", h2, lp["cross"]["wq"].astype(h2.dtype))
+            if cfg.attention_bias:
+                qc = qc + lp["cross"]["bq"].astype(qc.dtype)
+            qc = qc.reshape(B, T, cfg.n_heads, cfg.resolved_head_dim)
+            co = attn_lib.full_attention(qc, ckl, cvl, causal=False, q_chunk=2048)
+            x = x + jnp.einsum(
+                "bth,hd->btd", co.reshape(*co.shape[:2], -1), lp["cross"]["wo"].astype(x.dtype)
+            )
+            h3 = layernorm(x, lp["ln3"], cfg.rms_eps)
+            x = x + apply_mlp(lp["mlp"], h3, cfg)
+            return constrain(x, ("batch", "seq", "embed")), None
+
+        x, _ = jax.lax.scan(body, x, (params["dec"], ck, cv))
+        return layernorm(x, params["dec_ln_f"], cfg.rms_eps)
+
+    # -- public api -----------------------------------------------------------
+    def forward(self, params, tokens, enc_embeds=None, *, remat=False, q_chunk=0):
+        cfg = self.cfg
+        if enc_embeds is None:
+            enc_embeds = jnp.zeros(
+                (tokens.shape[0], cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        enc_out = self.encode(params, enc_embeds)
+        x = self._decoder(params, tokens, enc_out)
+        return logits_from_hidden(x, params["embed"], cfg.vocab), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, *, remat=True, q_chunk=0):
+        logits, _ = self.forward(
+            params, batch["tokens"], batch.get("enc_embeds"), remat=remat
+        )
+        loss, metrics = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return loss, metrics
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, K, hd), jnp.bfloat16),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, K, hd), jnp.bfloat16),
+            "ck": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, K, hd), jnp.bfloat16),
+            "cv": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, K, hd), jnp.bfloat16),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {
+            "k": Axes("layers", "cache_batch", "kv_seq", "act_kv", None),
+            "v": Axes("layers", "cache_batch", "kv_seq", "act_kv", None),
+            "ck": Axes("layers", "cache_batch", None, "act_kv", None),
+            "cv": Axes("layers", "cache_batch", None, "act_kv", None),
+            "length": Axes(),
+        }
+
+    def prefill(self, params, tokens, enc_embeds=None, *, pad_to=None, q_chunk=0):
+        cfg = self.cfg
+        B, T = tokens.shape
+        if enc_embeds is None:
+            enc_embeds = jnp.zeros((B, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        enc_out = self.encode(params, enc_embeds)
+        ck, cv = self._cross_kv(params, enc_out)
+        dtype = jnp.dtype(cfg.dtype)
+        x = embed_tokens(params["embed"], tokens, dtype)
+        x = x + params["dec_pos"][:T].astype(dtype)
+        K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+        def body(x, inputs):
+            lp, ckl, cvl = inputs
+            h = layernorm(x, lp["ln1"], cfg.rms_eps)
+            q, k, v = qkv(lp["attn"], h, cfg, None, None)
+            ao = attn_lib.full_attention(q, k, v, causal=True, q_chunk=2048)
+            x = x + jnp.einsum(
+                "bth,hd->btd", ao.reshape(*ao.shape[:2], -1), lp["attn"]["wo"].astype(x.dtype)
+            )
+            h2 = layernorm(x, lp["ln2"], cfg.rms_eps)
+            qc = jnp.einsum("btd,dh->bth", h2, lp["cross"]["wq"].astype(h2.dtype))
+            if cfg.attention_bias:
+                qc = qc + lp["cross"]["bq"].astype(qc.dtype)
+            qc = qc.reshape(B, T, cfg.n_heads, hd)
+            co = attn_lib.full_attention(qc, ckl, cvl, causal=False, q_chunk=2048)
+            x = x + jnp.einsum(
+                "bth,hd->btd", co.reshape(*co.shape[:2], -1), lp["cross"]["wo"].astype(x.dtype)
+            )
+            h3 = layernorm(x, lp["ln3"], cfg.rms_eps)
+            x = x + apply_mlp(lp["mlp"], h3, cfg)
+            return constrain(x, ("batch", "seq", "embed")), (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["dec"], ck, cv))
+        x = layernorm(x, params["dec_ln_f"], cfg.rms_eps)
+        logits = logits_from_hidden(x[:, -1:], params["embed"], cfg.vocab)[:, 0]
+        if pad_to is not None and pad_to > T:
+            pad = [(0, 0), (0, 0), (0, pad_to - T), (0, 0), (0, 0)]
+            ks = jnp.pad(ks, pad)
+            vs = jnp.pad(vs, pad)
+        cache = {
+            "k": ks.astype(jnp.bfloat16),
+            "v": vs.astype(jnp.bfloat16),
+            "ck": ck.astype(jnp.bfloat16),
+            "cv": cv.astype(jnp.bfloat16),
+            "length": jnp.asarray(T, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        B = tokens.shape[0]
+        pos = cache["length"]
+        hd = cfg.resolved_head_dim
+        x = embed_tokens(params["embed"], tokens, dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0).astype(dtype)
+
+        dec_axes = self.param_axes()["dec"]
+
+        def body(x, inputs):
+            lp, kc, vc, ckl, cvl = inputs
+            lp = constrain_tree(lp, dec_axes, drop_leading=1)
+            h = layernorm(x, lp["ln1"], cfg.rms_eps)
+            q, k, v = qkv(lp["attn"], h, cfg, None, None)
+            kc = attn_lib.update_cache(kc, k, pos)
+            vc = attn_lib.update_cache(vc, v, pos)
+            ao = attn_lib.decode_attention(q, kc, vc, pos + 1)
+            x = x + jnp.einsum(
+                "bth,hd->btd", ao.reshape(B, 1, -1), lp["attn"]["wo"].astype(x.dtype)
+            )
+            h2 = layernorm(x, lp["ln2"], cfg.rms_eps)
+            qc = jnp.einsum("btd,dh->bth", h2, lp["cross"]["wq"].astype(h2.dtype))
+            if cfg.attention_bias:
+                qc = qc + lp["cross"]["bq"].astype(qc.dtype)
+            qc = qc.reshape(B, 1, cfg.n_heads, hd)
+            co = attn_lib.decode_attention(
+                qc, ckl, cvl, jnp.asarray(ckl.shape[1], jnp.int32)
+            )
+            x = x + jnp.einsum(
+                "bth,hd->btd", co.reshape(B, 1, -1), lp["cross"]["wo"].astype(x.dtype)
+            )
+            h3 = layernorm(x, lp["ln3"], cfg.rms_eps)
+            x = x + apply_mlp(lp["mlp"], h3, cfg)
+            return constrain(x, ("batch", "seq", "embed")), (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+        )
+        x = layernorm(x, params["dec_ln_f"], cfg.rms_eps)
+        logits = logits_from_hidden(x, params["embed"], cfg.vocab)[:, 0]
+        return logits, {
+            "k": k_new,
+            "v": v_new,
+            "ck": cache["ck"],
+            "cv": cache["cv"],
+            "length": pos + 1,
+        }

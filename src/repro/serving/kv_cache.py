@@ -1,0 +1,147 @@
+"""BVLSM-style paged KV cache (DESIGN.md §2, Layer B).
+
+The mapping onto the paper:
+
+* page pool (P, page, K, hd) arrays = the **BValue arena** (big values),
+* per-sequence page table (int32 page ids) = the **Key-ValueOffset**
+  metadata — tiny, hot, and the only thing the scheduler mutates,
+* allocator free-list = BValue file/offset reservation,
+* ``HostPageCache`` = **BVCache**: a fixed-capacity MRWF deque holding
+  pages evicted from the device arena (host offload), unpinned once
+  persisted — identical semantics to core/bvcache.py but for KV pages.
+
+``kernels.paged_decode`` consumes exactly these structures on TPU.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclass
+class SeqInfo:
+    seq_id: int
+    length: int = 0
+    pages: list[int] = field(default_factory=list)
+
+
+class PagedKVCache:
+    def __init__(
+        self,
+        num_pages: int,
+        page_size: int,
+        n_layers: int,
+        n_kv_heads: int,
+        head_dim: int,
+        max_pages_per_seq: int,
+        dtype=jnp.bfloat16,
+    ):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        # one arena per layer: (P, page, K, hd)
+        shape = (num_pages, page_size, n_kv_heads, head_dim)
+        self.pages_k = [jnp.zeros(shape, dtype) for _ in range(n_layers)]
+        self.pages_v = [jnp.zeros(shape, dtype) for _ in range(n_layers)]
+        self.free: list[int] = list(range(num_pages - 1, -1, -1))
+        self.seqs: dict[int, SeqInfo] = {}
+
+    # -- allocator (the ValueOffset reservation) ---------------------------
+    def admit(self, seq_id: int, prompt_len: int = 0) -> SeqInfo:
+        info = SeqInfo(seq_id)
+        self.seqs[seq_id] = info
+        if prompt_len:
+            self.reserve(seq_id, prompt_len)
+        return info
+
+    def reserve(self, seq_id: int, new_tokens: int) -> list[int]:
+        info = self.seqs[seq_id]
+        need_pages = -(-(info.length + new_tokens) // self.page_size) - len(info.pages)
+        newly = []
+        for _ in range(need_pages):
+            if not self.free:
+                raise OutOfPages(f"seq {seq_id}: arena exhausted")
+            if len(info.pages) >= self.max_pages_per_seq:
+                raise OutOfPages(f"seq {seq_id}: page-table overflow")
+            pid = self.free.pop()
+            info.pages.append(pid)
+            newly.append(pid)
+        info.length += new_tokens
+        return newly
+
+    def release(self, seq_id: int) -> None:
+        info = self.seqs.pop(seq_id)
+        self.free.extend(info.pages)
+
+    # -- batch views for the kernels --------------------------------------
+    def page_table(self, seq_ids: list[int]) -> np.ndarray:
+        table = np.zeros((len(seq_ids), self.max_pages_per_seq), np.int32)
+        for row, sid in enumerate(seq_ids):
+            pages = self.seqs[sid].pages
+            table[row, : len(pages)] = pages
+        return table
+
+    def lengths(self, seq_ids: list[int]) -> np.ndarray:
+        return np.array([self.seqs[s].length for s in seq_ids], np.int32)
+
+    # -- writes (the BValue put) -------------------------------------------
+    def write_token(self, layer: int, seq_ids: list[int], k: jax.Array, v: jax.Array) -> None:
+        """k/v: (B, K, hd) for the token just computed (position = length-1)."""
+        pk, pv = self.pages_k[layer], self.pages_v[layer]
+        for row, sid in enumerate(seq_ids):
+            info = self.seqs[sid]
+            pos = info.length - 1
+            pid = info.pages[pos // self.page_size]
+            off = pos % self.page_size
+            pk = pk.at[pid, off].set(k[row])
+            pv = pv.at[pid, off].set(v[row])
+        self.pages_k[layer], self.pages_v[layer] = pk, pv
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.num_pages
+
+
+class HostPageCache:
+    """BVCache for offloaded pages: MRWF admission, LRU eviction, pinning
+    for pages whose host write-back hasn't completed."""
+
+    def __init__(self, capacity_pages: int):
+        self.capacity = capacity_pages
+        self._map: OrderedDict[tuple, tuple[np.ndarray, bool]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def put(self, key: tuple, page: np.ndarray, pinned: bool = False) -> None:
+        if key in self._map:
+            self._map.pop(key)
+        self._map[key] = (page, pinned)
+        self._map.move_to_end(key)
+        while len(self._map) > self.capacity:
+            for k in list(self._map):
+                if not self._map[k][1]:
+                    self._map.pop(k)
+                    break
+            else:
+                break  # everything pinned
+
+    def unpin(self, key: tuple) -> None:
+        if key in self._map:
+            page, _ = self._map[key]
+            self._map[key] = (page, False)
+
+    def get(self, key: tuple) -> np.ndarray | None:
+        hit = self._map.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._map.move_to_end(key)
+        return hit[0]

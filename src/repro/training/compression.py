@@ -1,0 +1,88 @@
+"""Gradient compression for the slow (DCN / pod) axis.
+
+int8 block-quantization with **error feedback**: each step transmits
+quantize(g + e) and carries e' = g + e − dequantize(...) locally. This is
+the standard EF-SGD construction that keeps convergence guarantees while
+cutting cross-pod gradient bytes 4× (fp32→int8).
+
+``compressed_psum`` composes it with a shard_map psum over a named axis;
+on the dry-run mesh that axis is ``pod`` (the DCN hop — see the roofline's
+wire_dcn term). The quantizer itself is exactly testable on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8. Returns (q int8, scale f32)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return out[:n].reshape(shape).astype(dtype)
+
+
+def ef_compress_leaf(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q, scale, new_err)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    deq = dequantize_int8(q, scale, g.shape)
+    new_err = corrected - deq
+    return q, scale, new_err
+
+
+def compressed_psum(grads, err_state, axis_name: str):
+    """EF-int8 psum over `axis_name` (call inside shard_map with that axis
+    bound — the pod/DCN hop).
+
+    Protocol per leaf: (1) pmax the per-block scales so every pod shares one
+    scale (4 B per 256 elems on the wire); (2) quantize the EF-corrected
+    gradient to int8 against the shared scale; (3) psum the payload as s16
+    (safe up to 258 pods of ±127 accumulation) — 2 B/elem on the DCN instead
+    of 4 B fp32; (4) dequantize the sum, carry the local quantization error.
+    Semantics: Σᵢ round((gᵢ+eᵢ)/s)·s with exact error feedback.
+    """
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        flat = corrected.reshape(-1)
+        pad = (-flat.size) % BLOCK
+        flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, BLOCK)
+        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+        scale = jnp.where(scale == 0, 1.0, scale)
+        scale = jax.lax.pmax(scale, axis_name)  # shared scale across pods
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        qsum = jax.lax.psum(q.astype(jnp.int16), axis_name)  # 2 B/elem wire
+        total = (qsum.astype(jnp.float32) * scale).reshape(-1)
+        n = corrected.size
+        total = total[:n].reshape(g.shape)
+        local_deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(g.shape)
+        new_e = corrected - local_deq
+        return total, new_e
+
+    out = jax.tree.map(leaf, grads, err_state)
+    summed = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return summed, new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,182 @@
+"""Optimizers built from scratch (no optax offline): AdamW and Adafactor,
+plus LR schedules and global-norm clipping. States are pytrees matching the
+param tree so the logical-axis shardings apply 1:1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    epsilon1: float = 1e-30
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, opt_state, params):
+    count = opt_state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1**c
+    bc2 = 1 - b2**c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}, lr
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — 2D params only)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def adafactor_init(params):
+    def init_leaf(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"f": jax.tree.map(init_leaf, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, opt_state, params):
+    count = opt_state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    beta2 = 1.0 - count.astype(jnp.float32) ** (-cfg.decay_rate)
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.epsilon1
+        if "vr" in st:
+            vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :] / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], cfg.epsilon1)
+            )
+            step = g / jnp.maximum(denom, cfg.epsilon1)
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            step = g / (jnp.sqrt(v) + 1e-12)
+            new_st = {"v": v}
+        # update clipping (RMS ≤ 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-12)
+        step = step / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_st
+
+    is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    out = jax.tree.map(upd, grads, opt_state["f"], params, is_leaf=None)
+    # out leaves are tuples (p, st)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_f = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"f": new_f, "count": count}, lr
+
+
+# ---------------------------------------------------------------------------
+# dispatch + state axes
+# ---------------------------------------------------------------------------
+
+def opt_init(cfg: OptimizerConfig, params):
+    return adamw_init(params) if cfg.name == "adamw" else adafactor_init(params)
+
+
+def opt_update(cfg: OptimizerConfig, grads, opt_state, params):
+    if cfg.name == "adamw":
+        return adamw_update(cfg, grads, opt_state, params)
+    return adafactor_update(cfg, grads, opt_state, params)
+
+
+def opt_state_axes(cfg: OptimizerConfig, param_axes, params_shape):
+    """Logical axes for the optimizer state, mirroring param axes."""
+    from repro.dist import Axes
+
+    if cfg.name == "adamw":
+        return {
+            "m": param_axes,
+            "v": param_axes,
+            "count": Axes(),
+        }
+
+    def leaf_axes(ax, sds):
+        if _factored(sds):
+            return {"vr": Axes(*ax.t[:-1]), "vc": Axes(*(ax.t[:-2] + ax.t[-1:]))}
+        return {"v": ax}
+
+    return {
+        "f": jax.tree.map(leaf_axes, param_axes, params_shape),
+        "count": Axes(),
+    }

@@ -1,0 +1,131 @@
+"""Train/serve step builders + dry-run state utilities.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit(..., donate_argnums=0)``. Params are stored fp32
+(master); model code casts to the config compute dtype (bf16) internally.
+Optional gradient accumulation scans over microbatches.
+
+``abstract_state``/``state_shardings`` produce ShapeDtypeStruct pytrees +
+NamedShardings without allocating — the 104B-param dry-run never touches
+device memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import Axes, tree_shardings
+from .optimizer import OptimizerConfig, clip_by_global_norm, opt_init, opt_state_axes, opt_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptimizerConfig = OptimizerConfig()
+    accum_steps: int = 1
+    remat: bool = True
+    q_chunk: int = 2048
+
+
+def init_state(model, key, opt_cfg: OptimizerConfig):
+    params = model.init(key)
+    return {
+        "params": params,
+        "opt": opt_init(opt_cfg, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_axes(model, opt_cfg: OptimizerConfig, params_shape):
+    pax = model.param_axes()
+    return {
+        "params": pax,
+        "opt": opt_state_axes(opt_cfg, pax, params_shape["params"] if "params" in params_shape else params_shape),
+        "step": Axes(),
+    }
+
+
+def make_train_step(model, train_cfg: TrainConfig):
+    opt_cfg = train_cfg.opt
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=train_cfg.remat, q_chunk=train_cfg.q_chunk)
+
+    def compute_grads(params, batch):
+        if train_cfg.accum_steps <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        A = train_cfg.accum_steps
+
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+            return (acc, loss_acc + loss), None
+
+        microbatches = jax.tree.map(
+            lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]), batch
+        )
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(micro, (zero, 0.0), microbatches)
+        grads = jax.tree.map(lambda g: g / A, grads)
+        loss = loss_sum / A
+        return loss, {"loss": loss}, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_params, new_opt, lr = opt_update(opt_cfg, grads, state["opt"], state["params"])
+        metrics = dict(metrics)
+        metrics.update(grad_norm=gnorm, lr=lr)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model, q_chunk: int = 2048):
+    def prefill_step(params, batch):
+        extra = {k: v for k, v in batch.items() if k not in ("tokens",)}
+        if "enc_embeds" in extra:
+            return model.prefill(params, batch["tokens"], extra["enc_embeds"], q_chunk=q_chunk)
+        if "vision_embeds" in extra and hasattr(model, "hidden_states"):
+            return model.prefill(params, batch["tokens"], extra["vision_embeds"], q_chunk=q_chunk)
+        return model.prefill(params, batch["tokens"], q_chunk=q_chunk)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract state for dry-runs (no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_params(model, dtype=None):
+    sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    if dtype is not None:
+        sds = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), sds)
+    return sds
+
+
+def abstract_state(model, opt_cfg: OptimizerConfig):
+    return jax.eval_shape(
+        lambda: init_state(model, jax.random.key(0), opt_cfg)
+    )
+
+
+def abstract_cache(model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))

@@ -1,0 +1,12 @@
+import os
+
+# Smoke tests and benches must see the REAL device count (1 CPU); only
+# launch/dryrun.py sets the 512-device flag (and only in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest
+
+
+@pytest.fixture()
+def tmp_db_dir(tmp_path):
+    return str(tmp_path / "db")

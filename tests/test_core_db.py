@@ -1,0 +1,360 @@
+"""Engine behaviour: unit tests + hypothesis property tests for the LSM
+invariants across all three separation modes and WAL modes."""
+import os
+import shutil
+import tempfile
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import DB, DBConfig
+from repro.core.bloom import BloomFilter
+from repro.core.bvcache import BVCache
+from repro.core.record import (
+    ValueOffset,
+    decode_entries,
+    encode_entries,
+    frame_record,
+    iter_framed_records,
+    pack_internal_key,
+    unpack_internal_key,
+)
+from repro.core.sstable import SSTableReader, SSTableWriter
+
+SMALL = dict(
+    memtable_size=64 << 10,
+    level1_max_bytes=256 << 10,
+    value_threshold=512,
+    bvcache_bytes=64 << 10,
+    l0_compaction_trigger=2,
+)
+
+
+def mk(tmp, mode="wal", wal="sync", **kw):
+    cfg = {**SMALL, **kw}
+    return DB(tmp, DBConfig(separation_mode=mode, wal_mode=wal, **cfg))
+
+
+# ---------------------------------------------------------------------------
+# record encodings
+# ---------------------------------------------------------------------------
+
+def test_internal_key_roundtrip_and_order():
+    k1 = pack_internal_key(b"aaa", 5, 1)
+    assert unpack_internal_key(k1) == (b"aaa", 5, 1)
+    # same key: higher seq sorts FIRST (bytewise ascending)
+    assert pack_internal_key(b"aaa", 9, 1) < pack_internal_key(b"aaa", 5, 1)
+    assert pack_internal_key(b"aaa", 5, 1) < pack_internal_key(b"aab", 1, 1)
+
+
+def test_wal_framing_detects_torn_tail():
+    recs = [encode_entries(i, [(1, b"k%d" % i, b"v")]) for i in range(5)]
+    buf = b"".join(frame_record(r) for r in recs)
+    assert len(list(iter_framed_records(buf))) == 5
+    assert len(list(iter_framed_records(buf[:-3]))) == 4  # torn tail dropped
+    corrupted = buf[:10] + b"\xff" + buf[11:]
+    assert len(list(iter_framed_records(corrupted))) < 5
+
+
+def test_value_offset_roundtrip():
+    v = ValueOffset(3, 123456789, 4096, 0xDEADBEEF)
+    assert ValueOffset.decode(v.encode()) == v
+
+
+# ---------------------------------------------------------------------------
+# bloom + sstable
+# ---------------------------------------------------------------------------
+
+def test_bloom_no_false_negatives():
+    keys = [f"key{i}".encode() for i in range(500)]
+    bf = BloomFilter.build(keys)
+    assert all(bf.may_contain(k) for k in keys)
+    fp = sum(bf.may_contain(f"other{i}".encode()) for i in range(1000))
+    assert fp < 50  # ~1% expected at 10 bits/key
+    bf2 = BloomFilter.decode(bf.encode())
+    assert all(bf2.may_contain(k) for k in keys)
+
+
+def test_sstable_roundtrip(tmp_path):
+    path = str(tmp_path / "t.sst")
+    w = SSTableWriter(path, block_size=256, compression=True)
+    items = [(f"k{i:05d}".encode(), i, 1, b"v" * (i % 97)) for i in range(300)]
+    for k, s, t, v in items:
+        w.add(k, s, t, v)
+    meta = w.finish(1)
+    assert meta.entries == 300
+    r = SSTableReader(path)
+    for k, s, t, v in items[::7]:
+        found, seq, type_, val = r.get(k)
+        assert found and seq == s and val == v
+    assert r.get(b"nope") == (False, 0, 0, b"")
+    assert [k for k, *_ in r] == [k for k, *_ in items]
+    # iter_from mid-range
+    got = [k for k, *_ in r.iter_from(b"k00150")]
+    assert got == [k for k, *_ in items[150:]]
+    r.close()
+
+
+# ---------------------------------------------------------------------------
+# DB behaviour across modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["none", "flush", "wal"])
+@pytest.mark.parametrize("wal", ["sync", "async", "off"])
+def test_put_get_delete_overwrite(tmp_db_dir, mode, wal):
+    db = mk(tmp_db_dir, mode, wal)
+    try:
+        vals = {}
+        for i in range(150):
+            k = f"k{i:04d}".encode()
+            v = bytes([i % 251]) * (64 if i % 3 else 2048)
+            db.put(k, v)
+            vals[k] = v
+        for i in range(0, 150, 5):
+            k = f"k{i:04d}".encode()
+            db.put(k, b"new" * 400)
+            vals[k] = b"new" * 400
+        for i in range(0, 150, 7):
+            k = f"k{i:04d}".encode()
+            db.delete(k)
+            vals.pop(k, None)
+        db.flush()
+        db.compact_all()
+        for k, v in vals.items():
+            assert db.get(k) == v, k
+        for i in range(0, 150, 7):
+            assert db.get(f"k{i:04d}".encode()) is None
+    finally:
+        db.close()
+
+
+@pytest.mark.parametrize("mode", ["none", "flush", "wal"])
+def test_recovery_after_clean_close(tmp_db_dir, mode):
+    db = mk(tmp_db_dir, mode, "sync")
+    for i in range(80):
+        db.put(f"k{i}".encode(), f"value-{i}".encode() * 200)
+    db.close()
+    db2 = mk(tmp_db_dir, mode, "sync")
+    try:
+        for i in range(80):
+            assert db2.get(f"k{i}".encode()) == f"value-{i}".encode() * 200
+    finally:
+        db2.close()
+
+
+def test_crash_recovery_sync_wal_durable(tmp_db_dir):
+    """Every acknowledged write with sync WAL survives a crash."""
+    db = mk(tmp_db_dir, "wal", "sync")
+    acked = {}
+    for i in range(60):
+        k, v = f"k{i}".encode(), (b"%d" % i) * 300
+        db.put(k, v)
+        acked[k] = v
+    db.close(crash=True)  # memtable NOT flushed; async buffers dropped
+    db2 = mk(tmp_db_dir, "wal", "sync")
+    try:
+        for k, v in acked.items():
+            assert db2.get(k) == v
+    finally:
+        db2.close()
+
+
+def test_crash_recovery_async_wal_prefix(tmp_db_dir):
+    """Async WAL: recovered state is a prefix-consistent subset of acked."""
+    db = mk(tmp_db_dir, "wal", "async")
+    acked = {}
+    for i in range(60):
+        k, v = f"k{i}".encode(), (b"%d" % i) * 300
+        db.put(k, v)
+        acked[k] = v
+    if db.wal is not None:
+        db.wal.flush()  # barrier: everything before this must survive
+    for i in range(60, 80):
+        db.put(f"k{i}".encode(), b"after-barrier")
+    db.close(crash=True)
+    db2 = mk(tmp_db_dir, "wal", "async")
+    try:
+        for k, v in acked.items():
+            assert db2.get(k) == v  # pre-barrier writes must be there
+    finally:
+        db2.close()
+
+
+def test_write_amp_ordering(tmp_db_dir):
+    """The paper's claim at engine level: WA(bvlsm) < WA(blobdb) ≤ WA(rocksdb)."""
+    import numpy as np
+
+    val = np.random.default_rng(0).bytes(8192)
+    amps = {}
+    for mode in ("none", "flush", "wal"):
+        d = tmp_db_dir + mode
+        db = mk(d, mode, "sync")
+        try:
+            for i in np.random.default_rng(1).permutation(120):
+                db.put(f"{i:06d}".encode(), val)
+            db.flush()
+            db.compact_all()
+            amps[mode] = db.stats.write_amp
+        finally:
+            db.close()
+    assert amps["wal"] < amps["flush"] <= amps["none"] + 1e-6, amps
+    assert amps["wal"] < 1.5
+
+
+def test_scan_merges_all_levels(tmp_db_dir):
+    db = mk(tmp_db_dir, "wal", "sync")
+    try:
+        for i in range(100):
+            db.put(f"s{i:04d}".encode(), b"x" * 700)
+        db.flush()
+        for i in range(50, 150):
+            db.put(f"s{i:04d}".encode(), b"y" * 700)  # overwrite + extend
+        got = db.scan(b"s0040", 30)
+        assert [k for k, _ in got] == [f"s{i:04d}".encode() for i in range(40, 70)]
+        for k, v in got:
+            i = int(k[1:])
+            assert v == (b"y" if i >= 50 else b"x") * 700
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# BVCache
+# ---------------------------------------------------------------------------
+
+def test_bvcache_mrwf_and_pinning():
+    c = BVCache(capacity_bytes=1000, policy="lru")
+    vo = lambda i: ValueOffset(0, i * 100, 100)
+    c.insert(b"a", vo(1), b"x" * 400, pinned=True)
+    c.insert(b"b", vo(2), b"y" * 400)
+    c.insert(b"c", vo(3), b"z" * 400)  # overflows: b evicted (a pinned)
+    assert c.get(b"a") is not None
+    assert c.get(b"b") is None
+    assert c.get(b"c") is not None
+    c.unpin(b"a", vo(1))  # a becomes evictable (joins LRU order at MRU)
+    c.insert(b"d", vo(4), b"w" * 400)
+    c.insert(b"e", vo(5), b"v" * 400)
+    assert c.get(b"a") is None  # evicted once enough unpinned pressure
+
+
+def test_bvcache_serves_unpersisted_reads(tmp_db_dir):
+    """WAL-off mode: reads of freshly written big values come from BVCache
+    before the async BValue write lands."""
+    db = mk(tmp_db_dir, "wal", "off")
+    try:
+        big = b"Q" * 8192
+        db.put(b"hot", big)
+        assert db.get(b"hot") == big
+        assert db.bvcache.hits >= 1
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: engine vs model dict
+# ---------------------------------------------------------------------------
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["put", "put_big", "delete", "get"]),
+        st.integers(0, 30),
+        st.integers(0, 255),
+    ),
+    min_size=1,
+    max_size=120,
+)
+
+
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy, mode=st.sampled_from(["none", "flush", "wal"]))
+def test_engine_matches_model_dict(ops, mode):
+    tmp = tempfile.mkdtemp(prefix="hyp_")
+    db = DB(
+        os.path.join(tmp, "db"),
+        DBConfig(
+            separation_mode=mode,
+            wal_mode="sync",
+            memtable_size=8 << 10,
+            value_threshold=256,
+            level1_max_bytes=64 << 10,
+            l0_compaction_trigger=2,
+            bvcache_bytes=16 << 10,
+        ),
+    )
+    model: dict[bytes, bytes] = {}
+    try:
+        for op, ki, vb in ops:
+            k = f"key{ki:03d}".encode()
+            if op == "put":
+                v = bytes([vb]) * 37
+                db.put(k, v)
+                model[k] = v
+            elif op == "put_big":
+                v = bytes([vb]) * 1024
+                db.put(k, v)
+                model[k] = v
+            elif op == "delete":
+                db.delete(k)
+                model.pop(k, None)
+            else:
+                assert db.get(k) == model.get(k)
+        db.flush()
+        db.compact_all()
+        for k, v in model.items():
+            assert db.get(k) == v
+        # scan equivalence
+        got = dict(db.scan(b"", 1000))
+        assert got == model
+        # reopen equivalence
+        db.close()
+        db2 = DB(os.path.join(tmp, "db"), DBConfig(separation_mode=mode, wal_mode="sync"))
+        try:
+            for k, v in model.items():
+                assert db2.get(k) == v
+        finally:
+            db2.close()
+            db = None
+    finally:
+        if db is not None:
+            db.close()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# paper-config presets, LFU policy, batching knobs
+# ---------------------------------------------------------------------------
+
+def test_paper_config_presets():
+    from repro.configs.bvlsm_paper import container_scaled, paper_exact
+
+    p = paper_exact()
+    assert p.memtable_size == 128 << 20 and p.bvcache_bytes == 128 << 20
+    assert p.separation_mode == "wal" and p.num_bvalue_queues == 4
+    c = container_scaled("none", "sync")
+    assert c.separation_mode == "none" and c.wal_mode == "sync"
+
+
+def test_bvcache_lfu_policy():
+    c = BVCache(capacity_bytes=900, policy="lfu")
+    vo = lambda i: ValueOffset(0, i * 100, 100)
+    c.insert(b"hot", vo(1), b"h" * 400)
+    for _ in range(5):
+        assert c.get(b"hot") is not None  # freq → 6
+    c.insert(b"cold", vo(2), b"c" * 400)
+    c.insert(b"new", vo(3), b"n" * 400)  # overflow → LFU evicts 'cold'
+    assert c.get(b"hot") is not None
+    assert c.get(b"cold") is None
+
+
+def test_gather_window_batches_small_values(tmp_db_dir):
+    """Async writers must coalesce small values into few fsyncs."""
+    db = mk(tmp_db_dir, "wal", "async", bvalue_gather_window_s=0.02)
+    try:
+        for i in range(300):
+            db.put(f"w{i:05d}".encode(), b"V" * 1024)
+        db.flush()
+        for i in range(0, 300, 17):
+            assert db.get(f"w{i:05d}".encode()) == b"V" * 1024
+    finally:
+        db.close()

@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules: divisibility fallbacks, axis-conflict
+resolution, tree shardings, and a subprocess 8-host-device lowering that
+exercises the same code path as the 512-device dry-run."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import Axes, default_rules, logical_to_spec, mesh_context, tree_shardings
+from repro.launch.mesh import make_host_mesh
+
+
+def _mesh22():
+    # 1-device 'mesh' can't test divisibility; build specs against a FAKE
+    # mesh object exposing .shape — logical_to_spec only reads that.
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        size = 256
+
+    return FakeMesh()
+
+
+def test_divisible_dims_shard():
+    spec = logical_to_spec(("batch", "seq"), (256, 4096), _mesh22(), default_rules())
+    assert spec == P("data", None)
+    spec = logical_to_spec(
+        ("layers", "param_embed", "heads"), (32, 4096, 4096), _mesh22(), default_rules()
+    )
+    assert spec == P(None, "data", "model")
+
+
+def test_non_divisible_falls_back_to_replicate():
+    # phi3: 40 heads × 128 = 5120 divides 16; but 10 kv-heads × 128 = 1280 → 80 ✓;
+    # a truly non-divisible dim (e.g. 49155 vocab) must replicate.
+    spec = logical_to_spec(("vocab", "param_embed"), (49155, 1024), _mesh22(), default_rules())
+    assert spec[0] is None  # 49155 % 16 != 0 → replicated
+    assert spec[1] == "data"
+
+
+def test_axis_conflict_first_dim_wins():
+    # (E, d, ff): experts→model wins; mlp can't reuse model → falls back
+    spec = logical_to_spec(
+        ("experts", "param_embed", "mlp"), (32, 1024, 512), _mesh22(), default_rules()
+    )
+    assert spec == P("model", "data", None)
+    # 60 experts don't divide 16 → mlp gets model instead
+    spec = logical_to_spec(
+        ("experts", "param_embed", "mlp"), (60, 2048, 1408), _mesh22(), default_rules()
+    )
+    assert spec == P(None, "data", "model")
+
+
+def test_multipod_batch_rule():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+        size = 512
+
+    spec = logical_to_spec(("batch", "seq"), (256, 4096), FakeMesh(), default_rules())
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k): nothing divides → replicated
+    spec = logical_to_spec(("batch", None), (1, 1), FakeMesh(), default_rules())
+    assert spec == P(None, None)
+
+
+def test_tree_shardings_structure():
+    mesh = make_host_mesh((1, 1))
+    sds = {"a": jax.ShapeDtypeStruct((8, 8), "float32"), "b": [jax.ShapeDtypeStruct((4,), "int32")]}
+    axes = {"a": Axes("batch", "embed"), "b": [Axes("batch")]}
+    sh = tree_shardings(mesh, sds, axes)
+    # size-1 axes still "shard" formally (≡ replication on a 1-device mesh)
+    assert sh["a"].spec == P("data", None)
+    assert jax.tree.structure(sh) == jax.tree.structure(sds)
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+
+    from repro.dist import constrain
+
+    x = jnp.ones((4, 4))
+    with mesh_context(None):
+        assert constrain(x, ("batch", "embed")) is x
+
+
+SUBPROC = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, json
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.dist import mesh_context
+    from repro.launch.specs import build_cell
+    from repro.training.train_step import TrainConfig
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("llama3-8b").reduced(d_model=128, n_layers=2, n_heads=8,
+                                          n_kv_heads=4, head_dim=16, d_ff=256,
+                                          vocab=512, vocab_pad_multiple=64)
+    cell = ShapeCell("t", 64, 8, "train")
+    with mesh_context(mesh):
+        r = build_cell(cfg, cell, mesh, TrainConfig())
+        c = jax.jit(r.fn, in_shardings=r.in_shardings,
+                    donate_argnums=r.donate_argnums).lower(*r.args).compile()
+    print(json.dumps({"ok": True, "flops": (c.cost_analysis() or {}).get("flops", 0)}))
+    """
+)
+
+
+def test_multidevice_lowering_subprocess():
+    """Same build_cell path as the dry-run, on an 8-host-device mesh."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", SUBPROC], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]

@@ -1,0 +1,147 @@
+"""Per-arch smoke tests (reduced same-family configs, one forward/train step
+on CPU: output shapes + finite values) and the decode-consistency invariant
+(decode_step at position T == teacher-forced forward on T+1 tokens)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import TrainConfig, init_state, make_train_step
+
+B, T = 2, 32
+
+
+def _batch(cfg, key=1):
+    rng = np.random.default_rng(key)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.n_vision_patches, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.enc_len, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    batch = _batch(cfg)
+    params = model.init(jax.random.key(0))
+
+    aux_in = batch.get("vision_embeds", batch.get("enc_embeds"))
+    logits, _aux = jax.jit(lambda p, b, a: model.forward(p, b["tokens"], a))(
+        params, batch, aux_in
+    )
+    assert logits.shape == (B, T, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one full train step (loss + grads + optimizer update)
+    tc = TrainConfig(opt=OptimizerConfig(warmup_steps=1, total_steps=10))
+    state = init_state(model, jax.random.key(0), tc.opt)
+    step = jax.jit(make_train_step(model, tc))
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(state2["step"]) == 1
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(
+            lambda p, q: float(jnp.sum(jnp.abs(p.astype(jnp.float32) - q.astype(jnp.float32)))),
+            state["params"] if False else jax.tree.map(lambda x: x, state2["params"]),
+            state2["params"],
+        ),
+        0.0,
+    )
+    # (self-compare is zero; compare against a fresh init instead)
+    fresh = init_state(model, jax.random.key(0), tc.opt)["params"]
+    moved = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(
+            lambda p, q: float(jnp.sum(jnp.abs(p.astype(jnp.float32) - q.astype(jnp.float32)))),
+            fresh,
+            state2["params"],
+        ),
+        0.0,
+    )
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced(dtype="float32")
+    model = build_model(cfg)
+    batch = _batch(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = batch["tokens"]
+    extra = {k: v for k, v in batch.items() if k in ("vision_embeds", "enc_embeds")}
+
+    if cfg.family == "audio":
+        _, cache = jax.jit(lambda p, t, e: model.prefill(p, t, e, pad_to=T + 4))(
+            params, tokens, batch["enc_embeds"]
+        )
+    elif cfg.family in ("ssm", "hybrid"):
+        _, cache = jax.jit(lambda p, t: model.prefill(p, t))(params, tokens)
+    else:
+        _, cache = jax.jit(lambda p, t: model.prefill(p, t, pad_to=T + 4))(params, tokens)
+
+    logits_d, _ = jax.jit(lambda p, c, t: model.decode_step(p, c, t))(
+        params, cache, tokens[:, :1]
+    )
+    toks2 = jnp.concatenate([tokens, tokens[:, :1]], axis=1)
+    if cfg.family == "audio":
+        full, _ = jax.jit(lambda p, t, e: model.forward(p, t, e))(params, toks2, batch["enc_embeds"])
+    elif cfg.family == "vlm":
+        full, _ = jax.jit(lambda p, t, v: model.forward(p, t, v))(params, toks2, batch["vision_embeds"])
+        logits_d2 = logits_d  # vlm prefill path has no vision in this test; compare plain
+        full_plain, _ = jax.jit(lambda p, t: model.forward(p, t))(params, toks2)
+        full = full_plain
+    else:
+        full, _ = jax.jit(lambda p, t: model.forward(p, t))(params, toks2)
+    err = float(jnp.max(jnp.abs(full[:, -1] - logits_d)))
+    assert err < 5e-2, f"{arch}: decode/forward mismatch {err}"
+
+
+def test_vocab_padding_never_predicted():
+    cfg = get_config("granite-moe-1b-a400m").reduced()  # 49155-style odd vocab
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    logits, _ = model.forward(params, _batch(cfg)["tokens"])
+    pad_region = logits[..., cfg.vocab :]
+    assert bool(jnp.all(pad_region <= -1e29))
+
+
+def test_moe_aux_loss_finite_and_positive():
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    loss, metrics = model.loss(params, _batch(cfg), remat=False)
+    assert bool(jnp.isfinite(metrics["aux_loss"]))
+    assert float(metrics["aux_loss"]) >= 0.99  # ≥1 by construction (E·Σf·P ≥ 1)
+
+
+def test_param_counts_match_published_sizes():
+    expect = {
+        "command-r-plus-104b": 104e9,
+        "phi3-medium-14b": 14e9,
+        "llama3-8b": 8e9,
+        "qwen3-4b": 4e9,
+        "mamba2-1.3b": 1.3e9,
+    }
+    for arch, n in expect.items():
+        got = get_config(arch).params_count()
+        assert abs(got - n) / n < 0.12, (arch, got)
+
+
+def test_moe_active_params():
+    cfg = get_config("granite-moe-1b-a400m")
+    assert 0.3e9 < cfg.active_params_count() < 0.55e9
+    cfg = get_config("qwen2-moe-a2.7b")
+    assert 2.0e9 < cfg.active_params_count() < 3.3e9
