@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import shutil
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -50,11 +51,34 @@ def gen_value(size: int, seed: int) -> bytes:
     return rng.integers(0, 64, size=size, dtype=np.uint8).tobytes()
 
 
-def run_fill(db: DB, keys: list[bytes], value_size: int) -> dict:
+def run_fill(db: DB, keys: list[bytes], value_size: int, threads: int = 1) -> dict:
+    """Fill the DB with `keys`; threads > 1 partitions the keyspace across
+    concurrent writers (exercises the group-commit write pipeline)."""
     val = gen_value(value_size, 7)
     t0 = time.monotonic()
-    for i, k in enumerate(keys):
-        db.put(k, val)
+    if threads <= 1:
+        for k in keys:
+            db.put(k, val)
+    else:
+        errors: list[BaseException] = []
+
+        def fill(part: list[bytes]) -> None:
+            try:
+                for k in part:
+                    db.put(k, val)
+            except BaseException as e:  # surface instead of dying silently
+                errors.append(e)
+
+        ts = [
+            threading.Thread(target=fill, args=(keys[i::threads],))
+            for i in range(threads)
+        ]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        if errors:
+            raise errors[0]
     db.flush()
     dt = time.monotonic() - t0
     user_mb = len(keys) * (KEY_SIZE + value_size) / 1e6
@@ -66,6 +90,9 @@ def run_fill(db: DB, keys: list[bytes], value_size: int) -> dict:
         "write_amp": st["write_amp"],
         "stall_s": st["stall_seconds"],
         "device_mb": st["device_bytes"] / 1e6,
+        "fsyncs_per_write": st["fsyncs_per_write"],
+        "avg_group_size": st["avg_group_size"],
+        "group_size_hist": st["group_size_hist"],
     }
 
 

@@ -5,6 +5,11 @@ workloads (R-WO/R-WA/R-WS/S-WO/S-WA/S-WS) × value sizes 4–64 KiB ×
 Scaled to this container (--mb controls user bytes per cell, default 48 MB
 — enough to trigger flushes and L0→L1 compactions at the scaled MemTable
 size); same key size (16 B), same value grid, same systems as the paper.
+
+``--threads N`` runs each cell with N concurrent writers through the
+group-commit write pipeline; the per-cell output then also reports
+fsyncs-per-write and the average writer-group size so the amortization of
+durability barriers is visible next to throughput.
 """
 from __future__ import annotations
 
@@ -15,7 +20,8 @@ from .common import KEY_SIZE, SYSTEMS, cleanup, gen_keys, make_db, run_fill
 
 
 def run(pattern: str = "random", mb: int = 48, value_sizes=(4096, 16384, 65536),
-        wal_modes=("off", "async", "sync"), systems=("rocksdb", "blobdb", "bvlsm")) -> list[dict]:
+        wal_modes=("off", "async", "sync"), systems=("rocksdb", "blobdb", "bvlsm"),
+        threads: int = 1) -> list[dict]:
     out = []
     for vs in value_sizes:
         n = max(64, int(mb * 1e6 / (vs + KEY_SIZE)))
@@ -24,7 +30,7 @@ def run(pattern: str = "random", mb: int = 48, value_sizes=(4096, 16384, 65536),
             for system in systems:
                 db, path = make_db(system, wal)
                 try:
-                    r = run_fill(db, keys, vs)
+                    r = run_fill(db, keys, vs, threads=threads)
                 finally:
                     cleanup(db, path)
                 rec = {
@@ -33,13 +39,15 @@ def run(pattern: str = "random", mb: int = 48, value_sizes=(4096, 16384, 65536),
                     "wal": wal,
                     "value_size": vs,
                     "n": n,
+                    "threads": threads,
                     **r,
                 }
                 out.append(rec)
                 print(
-                    f"fill{pattern:6s} {system:8s} wal={wal:5s} v={vs//1024:3d}K: "
-                    f"{r['mb_per_s']:8.1f} MB/s  wamp={r['write_amp']:.2f}  "
-                    f"stall={r['stall_s']:.2f}s",
+                    f"fill{pattern:6s} {system:8s} wal={wal:5s} v={vs//1024:3d}K "
+                    f"t={threads:2d}: {r['mb_per_s']:8.1f} MB/s  "
+                    f"wamp={r['write_amp']:.2f}  stall={r['stall_s']:.2f}s  "
+                    f"f/w={r['fsyncs_per_write']:.3f}  grp={r['avg_group_size']:.1f}",
                     flush=True,
                 )
     return out
@@ -49,9 +57,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pattern", default="random", choices=["random", "seq"])
     ap.add_argument("--mb", type=int, default=48)
+    ap.add_argument("--threads", type=int, default=1, help="concurrent writer threads")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    res = run(args.pattern, args.mb)
+    res = run(args.pattern, args.mb, threads=args.threads)
     if args.out:
         json.dump(res, open(args.out, "w"), indent=2)
 

@@ -1,0 +1,129 @@
+"""Write-path micro-benchmark: group commit vs the single-record baseline.
+
+Measures put() ops/s with 1/4/8/16 concurrent writer threads under sync and
+async WAL, with the leader/follower group commit enabled and disabled
+(``wal_group_commit=False`` is the pre-pipeline one-record-one-fsync path).
+Values are 1 KiB inline entries so the bench isolates the WAL commit path
+from BValue separation.
+
+Emits ``BENCH_writepath.json``::
+
+    {"cells": [{threads, wal, group_commit, ops_per_s, fsyncs_per_write,
+                avg_group_size, group_size_hist}, ...],
+     "speedups": {"sync_t8": <group-on ops/s ÷ group-off ops/s>, ...}}
+
+so future PRs can track the write-path trajectory. The interesting row is
+sync WAL at 8 threads: group commit must amortize durability barriers
+(fsyncs_per_write well under 0.5) and deliver a multiple of the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import threading
+import time
+
+from repro.core import DB, DBConfig
+
+VALUE = b"\x5a" * 1024  # inline (< value_threshold): isolates the WAL path
+
+
+def _bench_cell(threads: int, wal: str, group_commit: bool, ops_per_thread: int) -> dict:
+    path = tempfile.mkdtemp(prefix=f"wp_{wal}_t{threads}_")
+    db = DB(
+        path,
+        DBConfig(
+            separation_mode="wal",
+            wal_mode=wal,
+            wal_group_commit=group_commit,
+            value_threshold=4096,
+            memtable_size=32 << 20,  # large: keep flush/compaction out of the timing
+        ),
+    )
+    errors: list[BaseException] = []
+
+    def writer(t: int) -> None:
+        try:
+            for i in range(ops_per_thread):
+                db.put(f"t{t:02d}k{i:07d}".encode(), VALUE)
+        except BaseException as e:
+            errors.append(e)
+
+    try:
+        t0 = time.monotonic()
+        if threads == 1:
+            writer(0)
+        else:
+            ts = [threading.Thread(target=writer, args=(t,)) for t in range(threads)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        dt = time.monotonic() - t0
+        if errors:
+            raise errors[0]
+        st = db.stats.snapshot()
+    finally:
+        db.close()
+        shutil.rmtree(path, ignore_errors=True)
+    n = threads * ops_per_thread
+    return {
+        "threads": threads,
+        "wal": wal,
+        "group_commit": group_commit,
+        "n": n,
+        "seconds": dt,
+        "ops_per_s": n / dt,
+        "fsyncs_per_write": st["fsyncs_per_write"],
+        "avg_group_size": st["avg_group_size"],
+        "group_size_hist": st["group_size_hist"],
+    }
+
+
+def run(thread_counts=(1, 4, 8, 16), wal_modes=("sync", "async"),
+        ops_per_thread: int = 300) -> dict:
+    cells = []
+    for wal in wal_modes:
+        for threads in thread_counts:
+            for group_commit in (False, True):
+                time.sleep(0.2)  # let the previous cell's teardown I/O settle
+                cell = _bench_cell(threads, wal, group_commit, ops_per_thread)
+                cells.append(cell)
+                print(
+                    f"wal={wal:5s} t={threads:2d} group={'on ' if group_commit else 'off'}: "
+                    f"{cell['ops_per_s']:9.0f} ops/s  "
+                    f"f/w={cell['fsyncs_per_write']:.3f}  "
+                    f"grp={cell['avg_group_size']:.1f}",
+                    flush=True,
+                )
+    speedups = {}
+    for wal in wal_modes:
+        for threads in thread_counts:
+            on = next(c for c in cells if c["wal"] == wal and c["threads"] == threads and c["group_commit"])
+            off = next(c for c in cells if c["wal"] == wal and c["threads"] == threads and not c["group_commit"])
+            speedups[f"{wal}_t{threads}"] = on["ops_per_s"] / off["ops_per_s"]
+    return {"cells": cells, "speedups": speedups}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    def positive(v: str) -> int:
+        n = int(v)
+        if n < 1:
+            raise argparse.ArgumentTypeError("must be >= 1")
+        return n
+
+    ap.add_argument("--ops-per-thread", type=positive, default=300)
+    ap.add_argument("--threads", type=int, nargs="*", default=[1, 4, 8, 16])
+    ap.add_argument("--out", default="BENCH_writepath.json")
+    args = ap.parse_args()
+    res = run(thread_counts=tuple(args.threads), ops_per_thread=args.ops_per_thread)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print("speedups:", {k: round(v, 2) for k, v in res["speedups"].items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ the Key-ValueOffset separation visible in the engine stats.
 import shutil
 import tempfile
 
-from repro.core import DB, DBConfig
+from repro.core import DB, DBConfig, WriteBatch
 
 # --- 1. basic API ----------------------------------------------------------
 d = tempfile.mkdtemp(prefix="bvlsm_quickstart_")
@@ -23,6 +23,12 @@ print("get user/2:", len(db.get(b"user/2")), "bytes (via BValue store)")
 db.delete(b"user/1")
 print("after delete:", db.get(b"user/1"))
 print("scan user/:", [(k, len(v)) for k, v in db.scan(b"user/", 10)])
+
+# atomic multi-op batch: one WAL record, one fsync, all-or-nothing on crash
+batch = WriteBatch()
+batch.put(b"user/4", b"D" * 8192).put(b"user/5", b"small").delete(b"user/3")
+db.write(batch)
+print("after batch:", [(k, len(v)) for k, v in db.scan(b"user/", 10)])
 
 db.flush()
 print("\nengine stats:", {k: v for k, v in db.stats.snapshot().items() if "bytes" in k})

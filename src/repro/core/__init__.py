@@ -8,5 +8,6 @@ key-value separation, multi-queue BValue store, and BVCache.
 from .config import DBConfig
 from .db import DB
 from .record import ValueOffset
+from .writebatch import WriteBatch
 
-__all__ = ["DB", "DBConfig", "ValueOffset"]
+__all__ = ["DB", "DBConfig", "ValueOffset", "WriteBatch"]

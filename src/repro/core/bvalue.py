@@ -17,6 +17,16 @@ Write modes:
   batches contiguous runs to page multiples, pwrites, fsyncs, then unpins
   the corresponding BVCache entries (which held the only copy meanwhile).
 
+``put_many`` is the group-commit fan-out: a WriteBatch's big values are
+dispatched across all queues in one call, and in sync mode each queue pays
+ONE fsync for its whole share of the batch instead of one per value.
+
+File descriptors are tracked per file-id with a reservation refcount: a
+queue may roll to a new file while older reservations are still being
+written, so the old file's fd stays open (and is fsynced+closed) only once
+every reservation against it has completed — a pwrite can never land in the
+wrong file.
+
 Dispatch across queues is round-robin or least-loaded (pending bytes),
 matching the paper's "hash or round-robin" scheduler.
 """
@@ -50,8 +60,13 @@ class _BValueQueue:
         self.file_id = mgr._alloc_file_id(qid)
         self.tail = 0
         self.pending_bytes = 0
-        self._fd = self._open(self.file_id)
+        self._pending_items = 0  # async reservations not yet persisted
         self._lock = threading.Lock()
+        self._drained = threading.Condition(self._lock)
+        # file_id -> (fd, outstanding reservation count); the active file and
+        # any rolled-away file with reservations still in flight.
+        self._fds: dict[int, int] = {self.file_id: self._open(self.file_id)}
+        self._refs: dict[int, int] = {self.file_id: 0}
         self._q: queue.Queue = queue.Queue()
         self._thread: threading.Thread | None = None
         if mgr.async_writes:
@@ -62,39 +77,106 @@ class _BValueQueue:
 
     def _open(self, file_id: int) -> int:
         path = self.mgr.file_path(file_id)
-        fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
-        # append-only file but we pwrite at reserved offsets:
-        os.close(fd)
         return os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
 
     def reserve(self, size: int) -> tuple[int, int]:
-        """Reserve [offset, offset+size) — returns (file_id, offset)."""
+        """Reserve [offset, offset+size) — returns (file_id, offset). The
+        reservation holds a reference on the file's fd until the matching
+        write completes (see _release)."""
+        close_fd = None
         with self._lock:
             if self.tail + size > self.mgr.max_file_bytes and self.tail > 0:
-                os.fsync(self._fd)
-                os.close(self._fd)
+                old = self.file_id
+                if self._refs.get(old, 0) == 0:
+                    close_fd = self._fds.pop(old)
+                    del self._refs[old]
+                # else: writes against `old` are still in flight — its fd is
+                # closed by _release when the last one completes.
                 self.file_id = self.mgr._alloc_file_id(self.qid)
-                self._fd = self._open(self.file_id)
+                self._fds[self.file_id] = self._open(self.file_id)
+                self._refs[self.file_id] = 0
                 self.tail = 0
             off = self.tail
             self.tail += size
-            return self.file_id, off
+            self._refs[self.file_id] += 1
+            file_id = self.file_id
+        if close_fd is not None:
+            os.fsync(close_fd)
+            os.close(close_fd)
+        return file_id, off
+
+    def _fd_for(self, file_id: int) -> int:
+        with self._lock:
+            return self._fds[file_id]
+
+    def _release(self, file_id: int) -> None:
+        """A reservation against file_id completed (data already fsynced by
+        the write path); close rolled-away files once fully drained."""
+        close_fd = None
+        with self._lock:
+            self._refs[file_id] -= 1
+            if self._refs[file_id] == 0 and file_id != self.file_id:
+                close_fd = self._fds.pop(file_id)
+                del self._refs[file_id]
+        if close_fd is not None:
+            os.close(close_fd)
 
     # -- sync path ------------------------------------------------------
     def write_sync(self, file_id: int, offset: int, value: bytes) -> None:
-        os.pwrite(self._fd_for(file_id), value, offset)
-        os.fsync(self._fd_for(file_id))
-        self.mgr._account(len(value))
+        fd = self._fd_for(file_id)
+        os.pwrite(fd, value, offset)
+        os.fsync(fd)
+        self.mgr._account(len(value), fsyncs=1)
+        self._release(file_id)
 
-    def _fd_for(self, file_id: int) -> int:
-        # the queue only ever writes to its current file; rolls are fsynced.
-        return self._fd
+    def _persist_resvs(self, resvs: list[tuple[int, int, bytes]]) -> int:
+        """Shared sync/async persistence: coalesce in-order reservations
+        [(file_id, offset, value)] into contiguous pwrite runs, fsync each
+        distinct file ONCE, account, and release every reservation. Returns
+        the number of bytes written."""
+        runs: list[list[tuple[int, int, bytes]]] = [[resvs[0]]]
+        for r in resvs[1:]:
+            last = runs[-1][-1]
+            if r[0] == last[0] and r[1] == last[1] + len(last[2]):
+                runs[-1].append(r)
+            else:
+                runs.append([r])
+        total = 0
+        touched: dict[int, int] = {}
+        for run in runs:
+            fid = run[0][0]
+            fd = touched.get(fid)
+            if fd is None:
+                fd = touched[fid] = self._fd_for(fid)
+            blob = b"".join(v for _, _, v in run)
+            os.pwrite(fd, blob, run[0][1])
+            total += len(blob)
+        for fd in touched.values():
+            os.fsync(fd)
+        self.mgr._account(total, fsyncs=len(touched))
+        for fid, _, _ in resvs:
+            self._release(fid)
+        return total
+
+    def write_sync_many(self, resvs: list[tuple[int, int, bytes]]) -> None:
+        """Persist many reservations with one fsync per distinct file — the
+        group-commit amortization for the durable big-value path. resvs must
+        be in reservation order (consecutive reserve() calls)."""
+        if resvs:
+            self._persist_resvs(resvs)
 
     # -- async path -------------------------------------------------------
     def submit(self, item: _Pending) -> None:
         with self._lock:
             self.pending_bytes += len(item.value)
+            self._pending_items += 1
         self._q.put(item)
+
+    def wait_drained(self, timeout: float | None = None) -> bool:
+        """Barrier: block until every submitted async write has been
+        persisted (condition-variable signalled by the writer thread)."""
+        with self._lock:
+            return self._drained.wait_for(lambda: self._pending_items == 0, timeout=timeout)
 
     def _writer_loop(self) -> None:
         import time
@@ -129,24 +211,10 @@ class _BValueQueue:
     def _flush_batch(self, batch: list[_Pending]) -> None:
         if not batch:
             return
-        # contiguous-run coalescing: reservations on this queue are ordered,
-        # so adjacent pendings usually form one pwrite.
-        runs: list[list[_Pending]] = [[batch[0]]]
-        for it in batch[1:]:
-            last = runs[-1][-1]
-            if it.file_id == last.file_id and it.offset == last.offset + len(last.value):
-                runs[-1].append(it)
-            else:
-                runs.append([it])
-        total = 0
-        for run in runs:
-            blob = b"".join(p.value for p in run)
-            os.pwrite(self._fd_for(run[0].file_id), blob, run[0].offset)
-            total += len(blob)
-        os.fsync(self._fd)
-        self.mgr._account(total)
-        with self._lock:
-            self.pending_bytes -= total
+        total = self._persist_resvs([(p.file_id, p.offset, p.value) for p in batch])
+        # unpin callbacks BEFORE signalling the drain barrier: wait_drained()
+        # returning must mean the batch is persisted AND its cache entries
+        # are unpinned.
         if self.mgr.on_persisted_many is not None:
             self.mgr.on_persisted_many(
                 [(p.key, ValueOffset(p.file_id, p.offset, len(p.value))) for p in batch]
@@ -154,6 +222,11 @@ class _BValueQueue:
         elif self.mgr.on_persisted is not None:
             for p in batch:
                 self.mgr.on_persisted(p.key, ValueOffset(p.file_id, p.offset, len(p.value)))
+        with self._lock:
+            self.pending_bytes -= total
+            self._pending_items -= len(batch)
+            if self._pending_items == 0:
+                self._drained.notify_all()
 
     def drain(self) -> None:
         if self._thread is not None:
@@ -163,11 +236,16 @@ class _BValueQueue:
 
     def close(self) -> None:
         self.drain()
-        try:
-            os.fsync(self._fd)
-        except OSError:
-            pass
-        os.close(self._fd)
+        with self._lock:
+            fds = list(self._fds.values())
+            self._fds.clear()
+            self._refs.clear()
+        for fd in fds:
+            try:
+                os.fsync(fd)
+            except OSError:
+                pass
+            os.close(fd)
 
 
 class BValueManager:
@@ -217,9 +295,11 @@ class BValueManager:
             self._next_file_id += 1
             return fid
 
-    def _account(self, n: int) -> None:
+    def _account(self, n: int, fsyncs: int = 0) -> None:
         if self.stats:
             self.stats.add("bvalue_bytes", n)
+            if fsyncs:
+                self.stats.add("bvalue_fsyncs", fsyncs)
 
     # -- write path -----------------------------------------------------------
     def _pick_queue(self) -> _BValueQueue:
@@ -238,6 +318,38 @@ class BValueManager:
         else:
             q.submit(_Pending(file_id, off, value, key))
         return voff
+
+    def put_many(
+        self, items: list[tuple[bytes, bytes]], sync: bool, on_reserved=None
+    ) -> list[ValueOffset]:
+        """Batched fan-out for group commit: dispatch a WriteBatch's big
+        values across all queues, then persist each queue's share with one
+        fsync (sync mode) or one submission run (async mode). Returns the
+        ValueOffsets in input order.
+
+        ``on_reserved(key, voff, value)`` fires per item BEFORE anything is
+        handed to a writer thread — the DB uses it to insert pinned BVCache
+        entries so the persist-completion unpin can never race ahead of the
+        insert."""
+        voffs: list[ValueOffset] = []
+        per_q: dict[int, list[tuple[int, int, bytes, bytes]]] = {}
+        for key, value in items:
+            q = self._pick_queue()
+            file_id, off = q.reserve(len(value))
+            voff = ValueOffset(file_id, off, len(value), zlib.crc32(value) & 0xFFFFFFFF)
+            voffs.append(voff)
+            if on_reserved is not None:
+                on_reserved(key, voff, value)
+            per_q.setdefault(q.qid, []).append((file_id, off, value, key))
+        durable = sync or not self.async_writes
+        for qid, resvs in per_q.items():
+            q = self.queues[qid]
+            if durable:
+                q.write_sync_many([(fid, off, val) for fid, off, val, _ in resvs])
+            else:
+                for fid, off, val, key in resvs:
+                    q.submit(_Pending(fid, off, val, key))
+        return voffs
 
     # -- read path ------------------------------------------------------------
     def get(self, voff: ValueOffset, verify: bool = False) -> bytes:
@@ -267,13 +379,11 @@ class BValueManager:
             return fd
 
     # -- lifecycle -------------------------------------------------------------
-    def flush(self) -> None:
+    def flush(self, timeout: float = 120.0) -> None:
         """Barrier: wait for all pending async writes to hit disk."""
         for q in self.queues:
-            while q.pending_bytes > 0 or not q._q.empty():
-                import time
-
-                time.sleep(0.001)
+            if not q.wait_drained(timeout=timeout):
+                raise TimeoutError(f"BValue queue {q.qid} did not drain in {timeout}s")
 
     @property
     def next_file_id(self) -> int:

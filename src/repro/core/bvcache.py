@@ -64,11 +64,17 @@ class BVCache:
         self.unpin_many(((key, voff),))
 
     def unpin_many(self, items) -> None:
-        """Batch unpin — one lock acquisition per BValue flush batch."""
+        """Batch unpin — one lock acquisition per BValue flush batch. Matches
+        on location (file/offset/size) only: the BValue writer does not carry
+        the value CRC, so full ValueOffset equality would never unpin."""
         with self._lock:
             for key, voff in items:
                 ent = self._pinned.get(key)
-                if ent is not None and ent.voff == voff:
+                if ent is not None and (
+                    ent.voff.file_id == voff.file_id
+                    and ent.voff.offset == voff.offset
+                    and ent.voff.size == voff.size
+                ):
                     del self._pinned[key]
                     self._map[key] = ent  # joins the evictable order at MRU
             self._evict_locked()

@@ -198,7 +198,7 @@ class BackgroundWorker(threading.Thread):
         super().__init__(name="lsm-background", daemon=True)
         self.db = db
         self.cv = threading.Condition()
-        self._stop = False
+        self._stop_requested = False
         self.error: Exception | None = None
         self.compactor = Compactor(db)
 
@@ -208,7 +208,7 @@ class BackgroundWorker(threading.Thread):
 
     def stop(self) -> None:
         with self.cv:
-            self._stop = True
+            self._stop_requested = True
             self.cv.notify()
         self.join(timeout=60)
 
@@ -223,9 +223,9 @@ class BackgroundWorker(threading.Thread):
         try:
             while True:
                 with self.cv:
-                    while not self._stop and not self._work_available():
+                    while not self._stop_requested and not self._work_available():
                         self.cv.wait(timeout=0.2)
-                    if self._stop and not self._work_available():
+                    if self._stop_requested and not self._work_available():
                         return
                 # 1) flushes take priority (unblock writers)
                 mem = None

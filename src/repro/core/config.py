@@ -24,6 +24,15 @@ class DBConfig:
     wal_mode: str = "sync"  # sync | async | off
     wal_flush_interval_s: float = 0.05
     wal_flush_bytes: int = 1 << 20
+    # --- write pipeline (RocksDB-style leader/follower group commit) ---
+    # When enabled, concurrent writers enqueue and the queue head ("leader")
+    # commits every queued batch with ONE WAL write + fsync, then applies all
+    # entries to the MemTable in bulk. False restores the pre-pipeline
+    # one-record-one-fsync path (benchmark baseline).
+    wal_group_commit: bool = True
+    wal_group_max_batches: int = 128  # max writers merged into one group
+    wal_group_max_entries: int = 4096  # max KV entries per group
+    wal_group_max_bytes: int = 4 << 20  # max WAL payload bytes per group
     # --- memtable ---
     memtable_size: int = 8 << 20  # paper: 128 MiB; scaled default for tests
     max_immutables: int = 2  # paper setup: 1 immutable (+5 mutable pool)

@@ -1,4 +1,4 @@
-"""BVLSM DB facade — put/get/delete/scan + recovery.
+"""BVLSM DB facade — put/get/delete/scan/write(WriteBatch) + recovery.
 
 One engine, three systems (see :mod:`.config`): ``separation_mode`` selects
 where key–value separation happens. The BVLSM path (§III-B of the paper):
@@ -13,12 +13,39 @@ WAL-disabled / async::
 
     value --> BVCache (pinned) --> background batch write --> BValue file
     Key-ValueOffset --> MemTable (--> buffered WAL in async mode)
+
+Write pipeline (group commit)
+-----------------------------
+
+Commits run through a RocksDB-style leader/follower writer group
+(JoinBatchGroup). Every commit — a :class:`~.writebatch.WriteBatch` or the
+single-entry batches behind ``put``/``delete`` — performs WAL-time value
+separation *outside* the DB mutex (big values fan out across the BValue
+queues via ``put_many``, one fsync per queue per batch), then enqueues on
+the writer queue:
+
+* the writer at the head becomes the **leader**: it drains the queue up to
+  ``wal_group_max_{batches,entries,bytes}``, assigns each batch a sequence
+  number, and releases the DB mutex while it persists the whole group with
+  ONE ``WALWriter.append_many`` call — a single write + (sync mode) a
+  single fsync for every writer in the group;
+* **followers** block until the leader marks them done; their ack carries
+  full durability in sync mode because their record was in the leader's
+  fsynced blob;
+* the leader then re-acquires the mutex, applies every batch to the
+  MemTable in bulk (``add_batch``), wakes the group, and hands leadership
+  to the next queued writer.
+
+``wal_group_commit=False`` restores the pre-pipeline one-record-one-fsync
+path (the benchmark baseline); ``EngineStats`` exposes the group-size
+histogram and ``fsyncs_per_write`` so the amortization is observable.
 """
 from __future__ import annotations
 
 import os
 import threading
 import time
+from collections import deque
 
 from .bvalue import BValueManager
 from .bvcache import BVCache
@@ -37,6 +64,28 @@ from .record import (
 )
 from .stats import EngineStats
 from .wal import WALWriter, replay_wal
+from .writebatch import WriteBatch
+
+
+class _Writer:
+    """One queued commit: a batch's memtable-ready entries + ack state.
+
+    ``user_bytes`` is the pre-separation payload (stats); ``entry_bytes`` is
+    the post-separation size — what actually lands in the WAL record — and
+    is what group formation charges against ``wal_group_max_bytes``, so a
+    batch of separated big values (tiny ValueOffset entries) doesn't
+    spuriously cap the group."""
+
+    __slots__ = ("entries", "count", "user_bytes", "entry_bytes", "seq", "done", "error")
+
+    def __init__(self, entries: list[tuple[int, bytes, bytes]], user_bytes: int):
+        self.entries = entries
+        self.count = len(entries)
+        self.user_bytes = user_bytes
+        self.entry_bytes = sum(len(k) + len(v) for _, k, v in entries)
+        self.seq = 0
+        self.done = False
+        self.error: BaseException | None = None
 
 
 class DB:
@@ -47,6 +96,10 @@ class DB:
         self.stats = EngineStats()
         self.mutex = threading.RLock()
         self.writer_cv = threading.Condition(self.mutex)
+        # group-commit writer queue: head = leader, rest = followers
+        self._writers: deque[_Writer] = deque()
+        self._group_cv = threading.Condition(self.mutex)
+        self._commit_in_flight = False  # leader is writing WAL outside mutex
 
         self.versions = VersionSet(path, self.cfg.num_levels)
         self.versions.open()
@@ -95,9 +148,8 @@ class DB:
             self._wal_no = max(self._wal_no, no + 1)
             for payload in replay_wal(os.path.join(self.path, name)):
                 seq, entries = decode_entries(payload)
-                for type_, key, val in entries:
-                    self.mem.add(seq, type_, key, val)
-                    self._seq = max(self._seq, seq)
+                self.mem.add_batch(seq, entries)
+                self._seq = max(self._seq, seq)
             os.unlink(os.path.join(self.path, name))
 
     def _open_wal(self) -> None:
@@ -111,50 +163,143 @@ class DB:
             flush_bytes=self.cfg.wal_flush_bytes,
             stats=self.stats,
         )
-        self.mem.wal_no = self._wal_no  # type: ignore[attr-defined]
+        self.mem.wal_no = self._wal_no
         self._wal_no += 1
 
     # ------------------------------------------------------------------
     # write path
     # ------------------------------------------------------------------
     def put(self, key: bytes, value: bytes) -> None:
-        self._write(kTypeValue, key, value)
+        self._commit([(kTypeValue, key, value)])
 
     def delete(self, key: bytes) -> None:
-        self._write(kTypeDeletion, key, b"")
+        self._commit([(kTypeDeletion, key, b"")])
 
-    def _write(self, type_: int, key: bytes, value: bytes) -> None:
+    def write(self, batch: WriteBatch) -> None:
+        """Commit a WriteBatch atomically (one WAL record, one seq)."""
+        if len(batch):
+            self._commit(list(batch._ops))
+
+    def _commit(self, ops: list[tuple[int, bytes, bytes]]) -> None:
         cfg = self.cfg
-        separate = (
-            type_ == kTypeValue
-            and cfg.separation_mode == "wal"
-            and len(value) >= cfg.value_threshold
-        )
-        # --- WAL-time separation happens OUTSIDE the DB mutex: parallel
-        # callers stream values onto different queues concurrently. ---
-        if separate:
+        # --- Phase 1: WAL-time separation happens OUTSIDE the DB mutex and
+        # outside the writer group: parallel callers stream values onto
+        # different queues concurrently; a batch's big values fan out across
+        # ALL queues in one put_many call before the leader commits. ---
+        user_bytes = 0
+        big_idx: list[int] = []
+        for i, (type_, key, value) in enumerate(ops):
+            user_bytes += len(key) + len(value)
+            if (
+                type_ == kTypeValue
+                and cfg.separation_mode == "wal"
+                and len(value) >= cfg.value_threshold
+            ):
+                big_idx.append(i)
+        if big_idx:
             sync_value = cfg.wal_mode == "sync"
-            voff = self.bvalue.put(key, value, sync=sync_value)
-            self.bvcache.insert(key, voff, value, pinned=not sync_value)
-            self.dead_tracker.on_write(voff)
-            mem_type, mem_val = kTypeValuePtr, voff.encode()
-        else:
-            mem_type, mem_val = type_, value
+            on_reserved = None
+            if not sync_value:
+                # async path: the pinned insert must land BEFORE the value is
+                # handed to a writer thread, or the persist-completion unpin
+                # could fire first and the entry would stay pinned forever.
+                def on_reserved(key, voff, value):
+                    self.bvcache.insert(key, voff, value, pinned=True)
 
+            voffs = self.bvalue.put_many(
+                [(ops[i][1], ops[i][2]) for i in big_idx],
+                sync=sync_value,
+                on_reserved=on_reserved,
+            )
+            for i, voff in zip(big_idx, voffs):
+                _, key, value = ops[i]
+                if sync_value:
+                    self.bvcache.insert(key, voff, value, pinned=False)
+                self.dead_tracker.on_write(voff)
+                ops[i] = (kTypeValuePtr, key, voff.encode())
+
+        # --- Phase 2: join the write group. ---
+        w = _Writer(ops, user_bytes)
         with self.mutex:
+            self._writers.append(w)
+            # check done FIRST: once the leader pops + acks the group, w is
+            # no longer in the deque (which may even be empty).
+            while not w.done and self._writers[0] is not w:
+                self._group_cv.wait()
+            if not w.done:
+                self._lead_group_locked(w)
+        if w.error is not None:
+            raise w.error
+
+    def _lead_group_locked(self, leader: _Writer) -> None:
+        """Called with the mutex held by the writer at the queue head: commit
+        the head run of the queue as one group, then wake everyone."""
+        cfg = self.cfg
+        group = [leader]
+        err: BaseException | None = None
+        try:
             if self.worker.error is not None:
                 raise RuntimeError("background worker failed") from self.worker.error
             self._maybe_stall_locked()
-            self._seq += 1
-            seq = self._seq
-            if self.wal is not None:
-                self.wal.append(encode_entries(seq, [(mem_type, key, mem_val)]))
-            prev = self.mem.add(seq, mem_type, key, mem_val)
-            if prev is not None and prev[1] == kTypeValuePtr:
-                self.dead_tracker.on_dead(ValueOffset.decode(prev[2]))
-            self.stats.mark_user_write(len(key) + len(value))
-            if self.mem.approximate_size >= cfg.memtable_size:
-                self._rotate_memtable_locked()
+        except BaseException as e:  # fail fast: only the leader is charged
+            err = e
+        if err is None:
+            # form the group AFTER the stall so late arrivals ride along
+            if cfg.wal_group_commit:
+                n_entries, n_bytes = leader.count, leader.entry_bytes
+                for w in list(self._writers)[1:]:
+                    if (
+                        len(group) >= cfg.wal_group_max_batches
+                        or n_entries + w.count > cfg.wal_group_max_entries
+                        or n_bytes + w.entry_bytes > cfg.wal_group_max_bytes
+                    ):
+                        break
+                    group.append(w)
+                    n_entries += w.count
+                    n_bytes += w.entry_bytes
+            for w in group:
+                self._seq += 1
+                w.seq = self._seq
+            wal = self.wal
+            if wal is not None:
+                # WAL encode + I/O without the mutex: entries are immutable
+                # once queued, so new writers keep enqueueing and the BValue
+                # queues keep streaming while we serialize and fsync. Group
+                # members stay at the queue head, so no second leader can
+                # emerge; _commit_in_flight keeps flush() from rotating the
+                # memtable out from under this commit.
+                self._commit_in_flight = True
+                self.mutex.release()
+                try:
+                    wal.append_many([encode_entries(w.seq, w.entries) for w in group])
+                except BaseException as e:
+                    err = e
+                finally:
+                    self.mutex.acquire()
+                    self._commit_in_flight = False
+        if err is None:
+            try:
+                total_entries = 0
+                total_bytes = 0
+                for w in group:
+                    prevs = self.mem.add_batch(w.seq, w.entries)
+                    for prev in prevs:
+                        if prev[1] == kTypeValuePtr:
+                            self.dead_tracker.on_dead(ValueOffset.decode(prev[2]))
+                    total_entries += w.count
+                    total_bytes += w.user_bytes
+                self.stats.mark_user_writes(total_entries, total_bytes)
+                self.stats.record_group(len(group), total_entries)
+            except BaseException as e:  # must still ack the group below, or
+                err = e  # every current and future writer deadlocks
+        for w in group:
+            popped = self._writers.popleft()
+            assert popped is w, "writer queue out of order"
+            w.error = err
+            w.done = True
+        self._group_cv.notify_all()
+        if err is None and self.mem.approximate_size >= self.cfg.memtable_size:
+            self._rotate_memtable_locked()
 
     def _maybe_stall_locked(self) -> None:
         cfg = self.cfg
@@ -253,6 +398,10 @@ class DB:
     def flush(self) -> None:
         """Rotate + flush all memtables; barrier on value/WAL persistence."""
         with self.mutex:
+            # a leader mid-commit has unapplied entries targeting the current
+            # WAL/memtable pair — rotating now would strand them.
+            while self._commit_in_flight:
+                self._group_cv.wait()
             if len(self.mem):
                 self._rotate_memtable_locked()
         self.wait_idle(compactions=False)
@@ -299,7 +448,7 @@ class DB:
     def _crash_stop_worker(self) -> None:
         # crash simulation: stop the worker without flushing memtables
         with self.worker.cv:
-            self.worker._stop = True
+            self.worker._stop_requested = True
             self.worker.cv.notify()
         # prevent the "stop" path from seeing pending work
         with self.mutex:

@@ -10,8 +10,24 @@ which the byte accounting models exactly.
 ``approximate_size`` counts key+value+fixed overhead, mirroring RocksDB
 arena accounting — this is what makes the paper's point measurable: with
 WAL-time separation a 64 KiB value contributes only ~VOFF_SIZE bytes here.
+
+Two write-pipeline optimizations:
+
+* ``add_batch`` applies a whole group-commit batch with one pass (the
+  leader calls it once per follower batch instead of per entry);
+* the sorted key view is cached and only rebuilt when a *new* key has been
+  inserted — overwrites keep it — so repeated ``range_items`` /
+  ``sorted_items`` calls (scans, flush) stop re-sorting the entire dict.
+
+The cache is versioned because readers run WITHOUT the DB mutex (scan
+iterates after releasing it): writers bump ``_version`` on every new-key
+insert, and a reader publishes its sorted list tagged with the version it
+started from — a list built while a write raced in carries a stale tag and
+is simply rebuilt, it can never masquerade as fresh.
 """
 from __future__ import annotations
+
+from bisect import bisect_left
 
 from .record import kTypeDeletion
 
@@ -19,11 +35,14 @@ ENTRY_OVERHEAD = 24  # node/arena bookkeeping per entry (approximation)
 
 
 class MemTable:
-    __slots__ = ("_table", "_bytes", "first_seq", "last_seq", "wal_no")
+    __slots__ = ("_table", "_bytes", "_version", "_sorted_cache",
+                 "first_seq", "last_seq", "wal_no")
 
     def __init__(self) -> None:
         self._table: dict[bytes, tuple[int, int, bytes]] = {}
         self._bytes = 0
+        self._version = 0  # bumped on new-key insert (key set changed)
+        self._sorted_cache: tuple[int, list[bytes]] | None = None  # (version, keys)
         self.first_seq: int | None = None
         self.last_seq = 0
         self.wal_no: int | None = None  # WAL file backing this memtable
@@ -42,10 +61,40 @@ class MemTable:
             self._bytes -= len(key) + len(prev[2]) + ENTRY_OVERHEAD
         self._table[key] = (seq, type_, value)
         self._bytes += len(key) + len(value) + ENTRY_OVERHEAD
+        if prev is None:
+            # bump AFTER the insert (like add_batch): a lock-free reader that
+            # sorted between a bump and the insert could otherwise publish a
+            # list missing this key under a fresh version tag.
+            self._version += 1
         if self.first_seq is None:
             self.first_seq = seq
         self.last_seq = max(self.last_seq, seq)
         return prev
+
+    def add_batch(self, seq: int, entries) -> list:
+        """Apply a group-commit batch of (type, key, value) entries sharing
+        one sequence number. Returns the superseded records (same contract
+        as ``add``) for entries that overwrote an existing key."""
+        table = self._table
+        nbytes = 0
+        new_keys = 0
+        prevs = []
+        for type_, key, value in entries:
+            prev = table.get(key)
+            if prev is not None:
+                nbytes -= len(key) + len(prev[2]) + ENTRY_OVERHEAD
+                prevs.append(prev)
+            else:
+                new_keys += 1
+            table[key] = (seq, type_, value)
+            nbytes += len(key) + len(value) + ENTRY_OVERHEAD
+        if new_keys:
+            self._version += 1
+        self._bytes += nbytes
+        if self.first_seq is None:
+            self.first_seq = seq
+        self.last_seq = max(self.last_seq, seq)
+        return prevs
 
     def get(self, key: bytes):
         """Returns (found, type, value). found=False means fall through to
@@ -56,17 +105,37 @@ class MemTable:
         seq, type_, value = hit
         return True, type_, value
 
+    def _sorted(self) -> list[bytes]:
+        while True:
+            version = self._version
+            cached = self._sorted_cache
+            if cached is not None and cached[0] == version:
+                return cached[1]
+            try:
+                keys = sorted(self._table)
+            except RuntimeError:  # dict mutated mid-sort by a racing writer
+                continue
+            if self._version != version:
+                continue  # key set changed while sorting — rebuild
+            # a racing publish after this point carries its own (older or
+            # equal) version tag, so readers can never see a fresh tag on a
+            # stale list; tuple assignment is atomic under the GIL.
+            self._sorted_cache = (version, keys)
+            return keys
+
     def sorted_items(self):
         """Yield (key, seq, type, value) in ascending user-key order."""
-        for key in sorted(self._table):
-            seq, type_, value = self._table[key]
+        table = self._table
+        for key in self._sorted():
+            seq, type_, value = table[key]
             yield key, seq, type_, value
 
     def range_items(self, start: bytes, end: bytes | None):
-        for key in sorted(self._table):
-            if key < start:
-                continue
+        keys = self._sorted()
+        table = self._table
+        for i in range(bisect_left(keys, start), len(keys)):
+            key = keys[i]
             if end is not None and key >= end:
                 break
-            seq, type_, value = self._table[key]
+            seq, type_, value = table[key]
             yield key, seq, type_, value

@@ -115,6 +115,13 @@ def frame_record(payload: bytes) -> bytes:
     return _HDR.pack(zlib.crc32(payload) & 0xFFFFFFFF, len(payload)) + payload
 
 
+def frame_records(payloads) -> bytes:
+    """Frame many payloads into one contiguous blob (group commit: the WAL
+    writer issues a single write+fsync for the whole group, but each payload
+    keeps its own CRC frame so replay-atomicity stays per-batch)."""
+    return b"".join(frame_record(p) for p in payloads)
+
+
 def encode_entries(seq: int, entries: list[tuple[int, bytes, bytes]]) -> bytes:
     """entries: list of (type, key, value_bytes_or_encoded_voff)."""
     parts = [encode_varint(seq), encode_varint(len(entries))]

@@ -22,15 +22,22 @@ import struct
 from dataclasses import dataclass
 
 import msgpack
-import zstandard
+
+try:  # optional dep: compression degrades to store-uncompressed when absent
+    import zstandard
+
+    _ZCTX = zstandard.ZstdCompressor(level=1)
+    _DCTX = zstandard.ZstdDecompressor()
+except ImportError:  # pragma: no cover - environment-dependent
+    zstandard = None
+    _ZCTX = None
+    _DCTX = None
 
 from .bloom import BloomFilter
 from .record import decode_varint, encode_varint
 
 _FOOTER = struct.Struct("<QQQQQ")
 _MAGIC = 0xB7_15_3D_CA_FE_10_57_01
-_ZCTX = zstandard.ZstdCompressor(level=1)
-_DCTX = zstandard.ZstdDecompressor()
 
 
 @dataclass(slots=True)
@@ -94,7 +101,7 @@ class SSTableWriter:
         if not self._block:
             return
         raw = b"".join(self._block)
-        if self.compression:
+        if self.compression and _ZCTX is not None:
             comp = _ZCTX.compress(raw)
             blob = b"\x01" + comp if len(comp) < len(raw) else b"\x00" + raw
         else:
@@ -128,6 +135,8 @@ class SSTableWriter:
 
 def _decode_block(blob: bytes) -> bytes:
     if blob[0] == 1:
+        if _DCTX is None:
+            raise IOError("zstd-compressed block but the zstandard module is unavailable")
         return _DCTX.decompress(blob[1:])
     return blob[1:]
 

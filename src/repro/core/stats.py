@@ -4,6 +4,12 @@ reproduce the paper's Fig. 2 / Fig. 9 instant-vs-average plots.
 
 ``write_amp`` = total device bytes / user payload bytes — the paper's core
 metric.
+
+Group-commit accounting (write pipeline): ``record_group`` tracks a
+power-of-two histogram of writers-per-group, and ``fsyncs_per_write``
+(= (wal_fsyncs + bvalue_fsyncs) / user_writes) measures how well the
+leader/follower commit amortizes durability barriers — 1.0 means every
+write paid its own fsync; well-batched sync workloads sit far below 0.5.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ class EngineStats:
         self.stall_events = 0
         self._t0 = time.monotonic()
         self.timeline: list[tuple[float, int]] = []  # (t, user_bytes_acked)
+        self.group_size_hist: dict[int, int] = defaultdict(int)  # pow2 bucket -> count
 
     def add(self, name: str, n: int = 1) -> None:
         with self._lock:
@@ -31,9 +38,22 @@ class EngineStats:
             self.stall_events += 1
 
     def mark_user_write(self, nbytes: int) -> None:
+        self.mark_user_writes(1, nbytes)
+
+    def mark_user_writes(self, count: int, nbytes: int) -> None:
+        """Bulk ack: one lock acquisition + one timeline point per group."""
         with self._lock:
+            self.counters["user_writes"] += count
             self.counters["user_bytes"] += nbytes
             self.timeline.append((time.monotonic() - self._t0, self.counters["user_bytes"]))
+
+    def record_group(self, n_writers: int, n_entries: int) -> None:
+        """One group commit: n_writers batches merged into one WAL write."""
+        with self._lock:
+            self.counters["group_commits"] += 1
+            self.counters["group_writers"] += n_writers
+            self.counters["group_entries"] += n_entries
+            self.group_size_hist[1 << max(0, n_writers - 1).bit_length()] += 1
 
     @property
     def device_bytes(self) -> int:
@@ -49,6 +69,17 @@ class EngineStats:
     def write_amp(self) -> float:
         user = self.counters["user_bytes"]
         return self.device_bytes / user if user else 0.0
+
+    @property
+    def fsyncs_per_write(self) -> float:
+        writes = self.counters["user_writes"]
+        syncs = self.counters["wal_fsyncs"] + self.counters["bvalue_fsyncs"]
+        return syncs / writes if writes else 0.0
+
+    @property
+    def avg_group_size(self) -> float:
+        groups = self.counters["group_commits"]
+        return self.counters["group_writers"] / groups if groups else 0.0
 
     def interval_throughput(self, interval_s: float = 10.0) -> list[tuple[float, float]]:
         """(t_end, MB/s) per interval — the paper's 10-second instant curve."""
@@ -71,10 +102,24 @@ class EngineStats:
     def snapshot(self) -> dict:
         with self._lock:
             d = dict(self.counters)
-        for k in ("wal_bytes", "flush_bytes", "compaction_bytes", "bvalue_bytes", "user_bytes"):
+            hist = dict(sorted(self.group_size_hist.items()))
+        for k in (
+            "wal_bytes",
+            "flush_bytes",
+            "compaction_bytes",
+            "bvalue_bytes",
+            "user_bytes",
+            "user_writes",
+            "wal_fsyncs",
+            "bvalue_fsyncs",
+            "group_commits",
+        ):
             d.setdefault(k, 0)
         d["device_bytes"] = self.device_bytes
         d["write_amp"] = self.write_amp
         d["stall_seconds"] = self.stall_seconds
         d["stall_events"] = self.stall_events
+        d["fsyncs_per_write"] = self.fsyncs_per_write
+        d["avg_group_size"] = self.avg_group_size
+        d["group_size_hist"] = hist
         return d

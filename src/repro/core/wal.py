@@ -7,6 +7,12 @@
   up to the flush interval, exactly like RocksDB's WAL-async mode.
 * ``off``   — handled at the DB layer (no WAL object at all; R-WO / S-WO).
 
+Group commit rides on :meth:`WALWriter.append_many`: the DB's write-group
+leader hands over every queued batch's payload at once, and the whole group
+costs a single ``write`` + (sync mode) a single ``fsync``. Each payload keeps
+its own CRC frame (:mod:`.record`), so replay-atomicity remains per-batch:
+a torn tail drops whole batches, never partial ones.
+
 Records are CRC-framed (:mod:`.record`); replay stops at the first torn or
 corrupt record.
 """
@@ -15,7 +21,7 @@ from __future__ import annotations
 import os
 import threading
 
-from .record import frame_record, iter_framed_records
+from .record import frame_record, frame_records, iter_framed_records
 
 
 class WALWriter:
@@ -45,16 +51,29 @@ class WALWriter:
 
     # -- public api -------------------------------------------------------
     def append(self, payload: bytes) -> None:
-        rec = frame_record(payload)
+        self._append_blob(frame_record(payload), nrecords=1)
+
+    def append_many(self, payloads) -> None:
+        """Group commit: persist many framed records with ONE write (and in
+        sync mode one fsync) — the durability barrier is paid per group."""
+        if not payloads:
+            return
+        self._append_blob(frame_records(payloads), nrecords=len(payloads))
+
+    def _append_blob(self, blob: bytes, nrecords: int) -> None:
         if self.mode == "sync":
-            self._f.write(rec)
+            self._f.write(blob)
             os.fsync(self._f.fileno())
             if self._stats:
-                self._stats.add("wal_bytes", len(rec))
+                self._stats.add("wal_bytes", len(blob))
+                self._stats.add("wal_fsyncs")
+                self._stats.add("wal_records", nrecords)
         else:
             with self._lock:
-                self._buf.append(rec)
-                self._buf_bytes += len(rec)
+                self._buf.append(blob)
+                self._buf_bytes += len(blob)
+                if self._stats:
+                    self._stats.add("wal_records", nrecords)
                 if self._buf_bytes >= self._flush_bytes:
                     self._wake.set()
 
@@ -92,6 +111,7 @@ class WALWriter:
             os.fsync(self._f.fileno())
             if self._stats:
                 self._stats.add("wal_bytes", len(blob))
+                self._stats.add("wal_fsyncs")
 
     def _flusher(self) -> None:
         while not self._closed:

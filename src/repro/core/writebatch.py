@@ -1,0 +1,44 @@
+"""WriteBatch — atomic multi-op writes, the unit of group commit.
+
+A batch collects ``put``/``delete`` operations and commits them atomically
+via :meth:`DB.write`: all entries share one sequence number and are encoded
+into a single CRC-framed WAL record, so crash replay recovers the whole
+batch or none of it (RocksDB WriteBatch semantics, minus column families).
+
+``DB.put``/``DB.delete`` are single-entry batches under the hood; the write
+pipeline's leader merges many batches from concurrent writers into one WAL
+write + fsync (see :mod:`.db`).
+"""
+from __future__ import annotations
+
+from .record import kTypeDeletion, kTypeValue
+
+
+class WriteBatch:
+    __slots__ = ("_ops", "_nbytes")
+
+    def __init__(self) -> None:
+        self._ops: list[tuple[int, bytes, bytes]] = []
+        self._nbytes = 0
+
+    def put(self, key: bytes, value: bytes) -> "WriteBatch":
+        self._ops.append((kTypeValue, key, value))
+        self._nbytes += len(key) + len(value)
+        return self
+
+    def delete(self, key: bytes) -> "WriteBatch":
+        self._ops.append((kTypeDeletion, key, b""))
+        self._nbytes += len(key)
+        return self
+
+    def clear(self) -> None:
+        self._ops.clear()
+        self._nbytes = 0
+
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    @property
+    def size_bytes(self) -> int:
+        """Approximate user payload bytes in this batch."""
+        return self._nbytes

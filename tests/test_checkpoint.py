@@ -1,6 +1,7 @@
 """BVLSM checkpoint store: roundtrip, incremental reuse, retention,
 corruption detection, elastic resharding, and commit-protocol crash
 consistency."""
+import importlib.util
 import os
 
 import jax
@@ -110,6 +111,10 @@ def test_retention_keeps_referenced_chunks(tmp_path):
         store.close()
 
 
+@pytest.mark.skipif(
+    importlib.util.find_spec("repro.dist") is None,
+    reason="repro.dist missing from the seed",
+)
 def test_elastic_reshard_roundtrip(tmp_path):
     """Save on the 'old mesh' (host), restore sharded onto a 1-device mesh."""
     from repro.dist import Axes

@@ -5,8 +5,12 @@ import shutil
 import tempfile
 
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+try:  # hypothesis is optional in this container; property tests skip without it
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    HealthCheck = given = settings = st = None
 
 from repro.core import DB, DBConfig
 from repro.core.bloom import BloomFilter
@@ -255,19 +259,26 @@ def test_bvcache_serves_unpersisted_reads(tmp_db_dir):
 # hypothesis: engine vs model dict
 # ---------------------------------------------------------------------------
 
-ops_strategy = st.lists(
-    st.tuples(
-        st.sampled_from(["put", "put_big", "delete", "get"]),
-        st.integers(0, 30),
-        st.integers(0, 255),
-    ),
-    min_size=1,
-    max_size=120,
-)
+if st is not None:
+    ops_strategy = st.lists(
+        st.tuples(
+            st.sampled_from(["put", "put_big", "delete", "get"]),
+            st.integers(0, 30),
+            st.integers(0, 255),
+        ),
+        min_size=1,
+        max_size=120,
+    )
+    _hyp_settings = settings(
+        max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow]
+    )
+    _hyp_given = given(ops=ops_strategy, mode=st.sampled_from(["none", "flush", "wal"]))
+else:
+    _hyp_settings = _hyp_given = pytest.mark.skip(reason="hypothesis not installed")
 
 
-@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
-@given(ops=ops_strategy, mode=st.sampled_from(["none", "flush", "wal"]))
+@_hyp_settings
+@_hyp_given
 def test_engine_matches_model_dict(ops, mode):
     tmp = tempfile.mkdtemp(prefix="hyp_")
     db = DB(

@@ -1,0 +1,385 @@
+"""Write pipeline: WriteBatch semantics, leader/follower group commit,
+BValue batched fan-out + roll race, MemTable sorted-view cache, and the
+BValue flush barrier."""
+import os
+import threading
+
+import pytest
+
+from repro.core import DB, DBConfig, WriteBatch
+from repro.core.bvalue import BValueManager
+from repro.core.memtable import MemTable
+from repro.core.record import kTypeValue
+
+SMALL = dict(
+    memtable_size=64 << 10,
+    level1_max_bytes=256 << 10,
+    value_threshold=512,
+    bvcache_bytes=64 << 10,
+    l0_compaction_trigger=2,
+)
+
+
+def mk(tmp, mode="wal", wal="sync", **kw):
+    cfg = {**SMALL, **kw}
+    return DB(tmp, DBConfig(separation_mode=mode, wal_mode=wal, **cfg))
+
+
+# ---------------------------------------------------------------------------
+# WriteBatch API
+# ---------------------------------------------------------------------------
+
+def test_writebatch_basic_and_empty(tmp_db_dir):
+    db = mk(tmp_db_dir)
+    try:
+        b = WriteBatch()
+        assert len(b) == 0
+        db.write(b)  # empty batch is a no-op
+        b.put(b"a", b"1").put(b"b", b"2").delete(b"missing")
+        assert len(b) == 3 and b.size_bytes == 4 + len(b"missing")
+        db.write(b)
+        assert db.get(b"a") == b"1"
+        assert db.get(b"b") == b"2"
+        assert db.get(b"missing") is None
+        b.clear()
+        assert len(b) == 0 and b.size_bytes == 0
+    finally:
+        db.close()
+
+
+def test_writebatch_one_wal_record_one_fsync(tmp_db_dir):
+    """A 100-entry batch must cost a single WAL record + a single fsync."""
+    db = mk(tmp_db_dir, wal="sync")
+    try:
+        b = WriteBatch()
+        for i in range(100):
+            b.put(f"k{i:03d}".encode(), b"v" * 64)
+        db.write(b)
+        s = db.stats.snapshot()
+        assert s["wal_records"] == 1
+        assert s["wal_fsyncs"] == 1
+        assert s["user_writes"] == 100
+        assert s["group_commits"] == 1
+    finally:
+        db.close()
+
+
+def test_writebatch_duplicate_keys_last_wins(tmp_db_dir):
+    db = mk(tmp_db_dir)
+    try:
+        b = WriteBatch()
+        b.put(b"k", b"first").delete(b"k").put(b"k", b"last")
+        db.write(b)
+        assert db.get(b"k") == b"last"
+        db.flush()
+        assert db.get(b"k") == b"last"
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# concurrent group commit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wal", ["sync", "async"])
+def test_concurrent_writers_all_readable(tmp_db_dir, wal):
+    db = mk(tmp_db_dir, wal=wal, memtable_size=4 << 20)
+    nthreads, n = 8, 120
+    errors = []
+
+    def writer(t):
+        try:
+            for i in range(n):
+                db.put(f"t{t}k{i:04d}".encode(), f"val-{t}-{i}".encode() * 20)
+        except BaseException as e:  # pragma: no cover - failure diagnostics
+            errors.append(e)
+
+    try:
+        ts = [threading.Thread(target=writer, args=(t,)) for t in range(nthreads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert not errors
+        s = db.stats.snapshot()
+        assert s["user_writes"] == nthreads * n
+        for t in range(nthreads):
+            for i in range(0, n, 13):
+                assert db.get(f"t{t}k{i:04d}".encode()) == f"val-{t}-{i}".encode() * 20
+    finally:
+        db.close()
+
+
+def test_concurrent_sync_writers_durable_after_crash(tmp_db_dir):
+    """Every acknowledged concurrent write with sync WAL survives a crash:
+    followers are only woken after the leader's group fsync covers them."""
+    db = mk(tmp_db_dir, wal="sync", memtable_size=4 << 20)
+    nthreads, n = 6, 60
+    acked: dict[bytes, bytes] = {}
+    lock = threading.Lock()
+
+    def writer(t):
+        for i in range(n):
+            k, v = f"t{t}k{i:04d}".encode(), (b"%d.%d|" % (t, i)) * 30
+            db.put(k, v)
+            with lock:
+                acked[k] = v
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(nthreads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    db.close(crash=True)  # memtable NOT flushed
+    db2 = mk(tmp_db_dir, wal="sync")
+    try:
+        for k, v in acked.items():
+            assert db2.get(k) == v, k
+    finally:
+        db2.close()
+
+
+def test_group_commit_amortizes_fsyncs(tmp_db_dir):
+    """With 8 concurrent sync writers the leader must merge groups: strictly
+    fewer fsyncs than writes (the pre-pipeline path pays 1.0 per write)."""
+    db = mk(tmp_db_dir, wal="sync", memtable_size=16 << 20)
+    nthreads, n = 8, 80
+
+    def writer(t):
+        for i in range(n):
+            db.put(f"t{t}k{i:04d}".encode(), b"v" * 256)
+
+    try:
+        ts = [threading.Thread(target=writer, args=(t,)) for t in range(nthreads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        s = db.stats.snapshot()
+        assert s["user_writes"] == nthreads * n
+        # on a single CPU overlap varies, but SOME grouping must happen
+        assert s["wal_fsyncs"] < s["user_writes"]
+        assert s["fsyncs_per_write"] < 1.0
+        assert sum(s["group_size_hist"].values()) == s["group_commits"]
+    finally:
+        db.close()
+
+
+def test_group_commit_disabled_baseline(tmp_db_dir):
+    """wal_group_commit=False restores one record + one fsync per write."""
+    db = mk(tmp_db_dir, wal="sync", wal_group_commit=False)
+    try:
+        for i in range(20):
+            db.put(f"k{i}".encode(), b"v" * 64)
+        s = db.stats.snapshot()
+        assert s["wal_fsyncs"] == 20
+        assert s["fsyncs_per_write"] == 1.0
+        assert s["avg_group_size"] == 1.0
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# WriteBatch atomicity
+# ---------------------------------------------------------------------------
+
+def test_batch_atomic_across_memtable_rotation(tmp_db_dir):
+    """A batch bigger than the memtable budget lands in ONE memtable/WAL
+    generation (rotation happens between groups, never inside one)."""
+    db = mk(tmp_db_dir, wal="sync", memtable_size=8 << 10)
+    try:
+        for r in range(6):
+            b = WriteBatch()
+            for i in range(40):
+                b.put(f"r{r}k{i:03d}".encode(), bytes([r]) * 400)
+            db.write(b)
+        db.flush()
+        db.compact_all()
+        for r in range(6):
+            for i in range(0, 40, 7):
+                assert db.get(f"r{r}k{i:03d}".encode()) == bytes([r]) * 400
+    finally:
+        db.close()
+
+
+def test_batch_replay_is_all_or_nothing(tmp_db_dir):
+    """A torn WAL tail drops the whole trailing batch, never part of it."""
+    db = mk(tmp_db_dir, wal="sync", memtable_size=4 << 20, value_threshold=1 << 20)
+    for r in range(3):
+        b = WriteBatch()
+        for i in range(10):
+            b.put(f"r{r}k{i:02d}".encode(), bytes([65 + r]) * 100)
+        db.write(b)
+    db.close(crash=True)
+    # tear the tail of the WAL: the LAST batch's record becomes corrupt
+    logs = sorted(f for f in os.listdir(tmp_db_dir) if f.startswith("wal_"))
+    assert logs
+    wal_path = os.path.join(tmp_db_dir, logs[-1])
+    size = os.path.getsize(wal_path)
+    with open(wal_path, "ab") as f:
+        f.truncate(size - 3)
+    db2 = mk(tmp_db_dir, wal="sync")
+    try:
+        for r in range(2):  # intact batches fully present
+            for i in range(10):
+                assert db2.get(f"r{r}k{i:02d}".encode()) == bytes([65 + r]) * 100
+        # torn batch fully absent — not a single entry of it survived
+        for i in range(10):
+            assert db2.get(f"r2k{i:02d}".encode()) is None
+    finally:
+        db2.close()
+
+
+def test_mixed_big_and_inline_batch(tmp_db_dir):
+    """One batch mixing separated big values, inline values and deletes."""
+    db = mk(tmp_db_dir, wal="sync", value_threshold=512)
+    try:
+        db.put(b"gone", b"x" * 64)
+        b = WriteBatch()
+        for i in range(20):
+            b.put(f"big{i:02d}".encode(), bytes([i + 1]) * 2048)  # separated
+            b.put(f"small{i:02d}".encode(), bytes([i + 1]) * 32)  # inline
+        b.delete(b"gone")
+        db.write(b)
+        s = db.stats.snapshot()
+        assert s["wal_records"] == 2  # the single put + the batch
+        for i in range(20):
+            assert db.get(f"big{i:02d}".encode()) == bytes([i + 1]) * 2048
+            assert db.get(f"small{i:02d}".encode()) == bytes([i + 1]) * 32
+        assert db.get(b"gone") is None
+        db.flush()
+        db.compact_all()
+        assert db.get(b"big07") == bytes([8]) * 2048
+    finally:
+        db.close()
+    db2 = mk(tmp_db_dir, wal="sync", value_threshold=512)
+    try:
+        for i in range(20):
+            assert db2.get(f"big{i:02d}".encode()) == bytes([i + 1]) * 2048
+            assert db2.get(f"small{i:02d}".encode()) == bytes([i + 1]) * 32
+        assert db2.get(b"gone") is None
+    finally:
+        db2.close()
+
+
+# ---------------------------------------------------------------------------
+# BValue store: put_many fan-out, roll race, flush barrier
+# ---------------------------------------------------------------------------
+
+def test_put_many_fans_out_and_amortizes_fsyncs(tmp_path):
+    mgr = BValueManager(str(tmp_path / "bv"), num_queues=4, async_writes=False)
+    items = [(f"k{i:03d}".encode(), bytes([i % 251]) * 600) for i in range(32)]
+    voffs = mgr.put_many(items, sync=True)
+    assert len(voffs) == 32
+    # round-robin: 32 values spread across all 4 queue files
+    assert len({v.file_id for v in voffs}) == 4
+    for (k, val), voff in zip(items, voffs):
+        assert mgr.get(voff, verify=True) == val
+    mgr.close()
+
+
+def test_bvalue_roll_race_sync_writers(tmp_path):
+    """Concurrent sync writers on one queue force file rolls between
+    reserve() and the pwrite; every value must land in ITS reserved file
+    (CRC-verified reads would explode if a write hit the wrong file)."""
+    mgr = BValueManager(
+        str(tmp_path / "bv"), num_queues=1, async_writes=False,
+        max_file_bytes=4 << 10,  # tiny: rolls every ~2 values
+    )
+    results: dict[bytes, object] = {}
+    lock = threading.Lock()
+    errors = []
+
+    def writer(t):
+        try:
+            for i in range(40):
+                key = f"t{t}k{i:02d}".encode()
+                val = (b"%d:%d|" % (t, i)) * 300  # ~1.8 KiB
+                voff = mgr.put(key, val, sync=True)
+                with lock:
+                    results[key] = (voff, val)
+        except BaseException as e:
+            errors.append(e)
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors, errors
+    assert len({v.file_id for v, _ in results.values()}) > 10  # many rolls happened
+    for key, (voff, val) in results.items():
+        assert mgr.get(voff, verify=True) == val, key
+    mgr.close()
+
+
+def test_async_big_value_batch_unpins_after_persist(tmp_db_dir):
+    """Async WAL: pinned BVCache entries become evictable once the BValue
+    writers persist them — the unpin must match despite the writer-side
+    ValueOffset lacking the CRC, and must never race ahead of the insert."""
+    db = mk(
+        tmp_db_dir, wal="async",
+        bvalue_batch_bytes=4 << 10, bvalue_gather_window_s=0.005,
+        memtable_size=16 << 20, bvcache_bytes=16 << 20,
+    )
+    try:
+        b = WriteBatch()
+        for i in range(200):
+            b.put(f"big{i:03d}".encode(), bytes([i % 251]) * 2048)
+        db.write(b)
+        db.bvalue.flush()
+        assert db.bvcache.stats()["pinned"] == 0
+        for i in range(0, 200, 23):
+            assert db.get(f"big{i:03d}".encode()) == bytes([i % 251]) * 2048
+    finally:
+        db.close()
+
+
+def test_bvalue_flush_barrier_drains_async_queues(tmp_path):
+    persisted = []
+    mgr = BValueManager(
+        str(tmp_path / "bv"), num_queues=2, async_writes=True,
+        gather_window_s=0.01, on_persisted=lambda k, v: persisted.append(k),
+    )
+    voffs = [mgr.put(f"k{i}".encode(), bytes([i]) * 512, sync=False) for i in range(50)]
+    mgr.flush(timeout=30)  # CV barrier — returns only once queues are drained
+    assert len(persisted) == 50
+    for q in mgr.queues:
+        assert q._pending_items == 0 and q.pending_bytes == 0
+    for i, voff in enumerate(voffs):
+        assert mgr.get(voff, verify=True) == bytes([i]) * 512
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# MemTable: bulk apply + sorted-view cache
+# ---------------------------------------------------------------------------
+
+def test_memtable_add_batch_matches_add():
+    a, b = MemTable(), MemTable()
+    entries = [(kTypeValue, f"k{i % 7}".encode(), bytes([i]) * 10) for i in range(20)]
+    for e in entries:
+        a.add(5, *e)
+    prevs = b.add_batch(5, entries)
+    assert len(prevs) == 13  # 20 adds over 7 distinct keys
+    assert list(a.sorted_items()) == list(b.sorted_items())
+    assert a.approximate_size == b.approximate_size
+
+
+def test_memtable_sorted_view_cached_and_invalidated():
+    m = MemTable()
+    for i in (3, 1, 2):
+        m.add(i, kTypeValue, f"k{i}".encode(), b"v")
+    assert [k for k, *_ in m.sorted_items()] == [b"k1", b"k2", b"k3"]
+    cache = m._sorted_cache
+    assert cache is not None and cache[0] == m._version
+    # overwrite existing key: cached list survives (key set unchanged)
+    m.add(4, kTypeValue, b"k2", b"v2")
+    assert m._sorted() is cache[1]
+    assert [k for k, *_ in m.range_items(b"k2", None)] == [b"k2", b"k3"]
+    # new key: version bump invalidates, next read re-sorts
+    m.add(5, kTypeValue, b"k0", b"v")
+    assert m._sorted_cache[0] != m._version
+    assert [k for k, *_ in m.sorted_items()] == [b"k0", b"k1", b"k2", b"k3"]
+    assert m._sorted_cache[0] == m._version
+    assert [k for k, *_ in m.range_items(b"k1", b"k3")] == [b"k1", b"k2"]
