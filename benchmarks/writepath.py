@@ -1,20 +1,45 @@
-"""Write-path micro-benchmark: group commit vs the single-record baseline.
+"""Write-path micro-benchmark: pipelined group commit vs group commit vs
+the single-record baseline.
 
 Measures put() ops/s with 1/4/8/16 concurrent writer threads under sync and
-async WAL, with the leader/follower group commit enabled and disabled
-(``wal_group_commit=False`` is the pre-pipeline one-record-one-fsync path).
+async WAL across three write-pipeline modes:
+
+* ``off``       — ``wal_group_commit=False``: the pre-pipeline
+  one-record-one-fsync path (baseline);
+* ``group``     — PR 1's leader/follower group commit, single outstanding
+  group (``wal_pipelined_commit=False``);
+* ``pipelined`` — write pipeline v2 (the default): leader handoff overlaps
+  the next group's encode+write with the previous group's fsync, adaptive
+  group sizing, covered-fsync elision.
+
 Values are 1 KiB inline entries so the bench isolates the WAL commit path
 from BValue separation.
 
-Emits ``BENCH_writepath.json``::
+Emits ``BENCH_writepath.json``. Row schema (one row = one ``cells`` entry)::
 
-    {"cells": [{threads, wal, group_commit, ops_per_s, fsyncs_per_write,
-                avg_group_size, group_size_hist}, ...],
-     "speedups": {"sync_t8": <group-on ops/s ÷ group-off ops/s>, ...}}
+    threads          int    concurrent writer threads
+    wal              str    "sync" | "async"
+    mode             str    "off" | "group" | "pipelined"
+    group_commit     bool   wal_group_commit for this cell
+    pipelined        bool   wal_pipelined_commit for this cell
+    n                int    total put() calls (threads x ops_per_thread)
+    seconds          float  wall time for all puts
+    ops_per_s        float  n / seconds
+    fsyncs_per_write float  (wal+bvalue fsyncs) / user writes (skips excluded)
+    wal_fsync_skips  int    groups covered by a later-started fsync
+    avg_group_size   float  mean writers merged per commit group
+    group_size_hist  dict   pow2 bucket -> commit-group count
+    pipeline_depth_max int  max commit groups in flight at once
+    gauges           dict   adaptive-controller gauges at cell end
+    samples_ops_per_s list  every repeat's ops/s, ascending (the recorded
+                            row is the median sample; --repeat N)
 
-so future PRs can track the write-path trajectory. The interesting row is
-sync WAL at 8 threads: group commit must amortize durability barriers
-(fsyncs_per_write well under 0.5) and deliver a multiple of the baseline.
+``speedups`` summarizes each thread count: ``{wal}_t{n}`` is pipelined
+ops/s ÷ baseline ops/s (the headline trajectory number — PR 1's group
+commit scored 5.8x on sync_t8), ``{wal}_t{n}_group`` is group-only ÷
+baseline, and ``{wal}_t{n}_pipeline_gain`` is pipelined ÷ group-only.
+The interesting row is sync WAL at 8 threads: pipelining must at least
+hold PR 1's amortization while overlapping fsync with group formation.
 """
 from __future__ import annotations
 
@@ -29,17 +54,24 @@ from repro.core import DB, DBConfig
 
 VALUE = b"\x5a" * 1024  # inline (< value_threshold): isolates the WAL path
 
+MODES = {
+    "off": dict(wal_group_commit=False, wal_pipelined_commit=False),
+    "group": dict(wal_group_commit=True, wal_pipelined_commit=False),
+    "pipelined": dict(wal_group_commit=True, wal_pipelined_commit=True),
+}
 
-def _bench_cell(threads: int, wal: str, group_commit: bool, ops_per_thread: int) -> dict:
+
+def _bench_cell(threads: int, wal: str, mode: str, ops_per_thread: int) -> dict:
     path = tempfile.mkdtemp(prefix=f"wp_{wal}_t{threads}_")
+    knobs = MODES[mode]
     db = DB(
         path,
         DBConfig(
             separation_mode="wal",
             wal_mode=wal,
-            wal_group_commit=group_commit,
             value_threshold=4096,
             memtable_size=32 << 20,  # large: keep flush/compaction out of the timing
+            **knobs,
         ),
     )
     errors: list[BaseException] = []
@@ -72,38 +104,62 @@ def _bench_cell(threads: int, wal: str, group_commit: bool, ops_per_thread: int)
     return {
         "threads": threads,
         "wal": wal,
-        "group_commit": group_commit,
+        "mode": mode,
+        "group_commit": knobs["wal_group_commit"],
+        "pipelined": knobs["wal_pipelined_commit"],
         "n": n,
         "seconds": dt,
         "ops_per_s": n / dt,
         "fsyncs_per_write": st["fsyncs_per_write"],
+        "wal_fsync_skips": st["wal_fsync_skips"],
         "avg_group_size": st["avg_group_size"],
         "group_size_hist": st["group_size_hist"],
+        "pipeline_depth_max": st["pipeline_depth_max"],
+        "gauges": st["gauges"],
     }
 
 
 def run(thread_counts=(1, 4, 8, 16), wal_modes=("sync", "async"),
-        ops_per_thread: int = 300) -> dict:
+        ops_per_thread: int = 300, repeat: int = 1) -> dict:
     cells = []
     for wal in wal_modes:
         for threads in thread_counts:
-            for group_commit in (False, True):
-                time.sleep(0.2)  # let the previous cell's teardown I/O settle
-                cell = _bench_cell(threads, wal, group_commit, ops_per_thread)
+            samples: dict[str, list[dict]] = {m: [] for m in MODES}
+            # repeats are interleaved ACROSS modes (round-robin) so a slow
+            # container-I/O period hits every mode equally instead of
+            # poisoning one mode's back-to-back samples; the MEDIAN sample
+            # is recorded (resists both slow outliers and lucky bursts)
+            for _ in range(repeat):
+                for mode in MODES:
+                    time.sleep(0.2)  # let the previous cell's teardown settle
+                    samples[mode].append(_bench_cell(threads, wal, mode, ops_per_thread))
+            for mode in MODES:
+                ranked = sorted(samples[mode], key=lambda c: c["ops_per_s"])
+                cell = ranked[len(ranked) // 2]
+                cell["samples_ops_per_s"] = [round(c["ops_per_s"], 1) for c in ranked]
                 cells.append(cell)
                 print(
-                    f"wal={wal:5s} t={threads:2d} group={'on ' if group_commit else 'off'}: "
+                    f"wal={wal:5s} t={threads:2d} mode={mode:9s}: "
                     f"{cell['ops_per_s']:9.0f} ops/s  "
                     f"f/w={cell['fsyncs_per_write']:.3f}  "
-                    f"grp={cell['avg_group_size']:.1f}",
+                    f"grp={cell['avg_group_size']:.1f}  "
+                    f"depth={cell['pipeline_depth_max']}",
                     flush=True,
                 )
     speedups = {}
     for wal in wal_modes:
         for threads in thread_counts:
-            on = next(c for c in cells if c["wal"] == wal and c["threads"] == threads and c["group_commit"])
-            off = next(c for c in cells if c["wal"] == wal and c["threads"] == threads and not c["group_commit"])
-            speedups[f"{wal}_t{threads}"] = on["ops_per_s"] / off["ops_per_s"]
+            by_mode = {
+                c["mode"]: c
+                for c in cells
+                if c["wal"] == wal and c["threads"] == threads
+            }
+            off = by_mode["off"]["ops_per_s"]
+            speedups[f"{wal}_t{threads}"] = by_mode["pipelined"]["ops_per_s"] / off
+            speedups[f"{wal}_t{threads}_group"] = by_mode["group"]["ops_per_s"] / off
+            speedups[f"{wal}_t{threads}_pipeline_gain"] = (
+                by_mode["pipelined"]["ops_per_s"] / by_mode["group"]["ops_per_s"]
+            )
     return {"cells": cells, "speedups": speedups}
 
 
@@ -117,9 +173,12 @@ def main() -> None:
 
     ap.add_argument("--ops-per-thread", type=positive, default=300)
     ap.add_argument("--threads", type=int, nargs="*", default=[1, 4, 8, 16])
+    ap.add_argument("--repeat", type=positive, default=1,
+                    help="median-of-N per cell, rounds interleaved across modes")
     ap.add_argument("--out", default="BENCH_writepath.json")
     args = ap.parse_args()
-    res = run(thread_counts=tuple(args.threads), ops_per_thread=args.ops_per_thread)
+    res = run(thread_counts=tuple(args.threads), ops_per_thread=args.ops_per_thread,
+              repeat=args.repeat)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print("speedups:", {k: round(v, 2) for k, v in res["speedups"].items()})

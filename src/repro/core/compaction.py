@@ -235,7 +235,9 @@ class BackgroundWorker(threading.Thread):
                 if mem is not None:
                     self.compactor.flush_memtable(mem)
                     with db.mutex:
-                        db.immutables.pop(0)
+                        # crash-close may have cleared the list under us
+                        if db.immutables and db.immutables[0] is mem:
+                            db.immutables.pop(0)
                         db.writer_cv.notify_all()
                     continue
                 # 2) one compaction step

@@ -17,6 +17,11 @@ from dataclasses import dataclass, field
 
 @dataclass(slots=True)
 class DBConfig:
+    """Every engine knob, grouped by subsystem. The full table — each knob,
+    its default, and one line of meaning — lives in
+    ``docs/ARCHITECTURE.md``; the constructors ``rocksdb_like`` /
+    ``blobdb_like`` / ``bvlsm`` pin ``separation_mode`` to the paper's
+    three systems."""
     # --- the paper's variable ---
     separation_mode: str = "wal"  # none | flush | wal
     value_threshold: int = 4096  # bytes; >= threshold → separated
@@ -32,10 +37,39 @@ class DBConfig:
     wal_group_commit: bool = True
     wal_group_max_batches: int = 128  # max writers merged into one group
     wal_group_max_entries: int = 4096  # max KV entries per group
-    wal_group_max_bytes: int = 4 << 20  # max WAL payload bytes per group
+    wal_group_max_bytes: int = 4 << 20  # hard ceiling on WAL payload bytes/group
+    # --- pipelined commit (write pipeline v2) ---
+    # The leader hands the writer queue off as soon as it has drained its
+    # group: the next leader encodes + writes its WAL batch while the
+    # previous group's fsync is still in flight. Groups publish (memtable
+    # apply + follower wakeup) strictly in sequence order. False restores
+    # the single-outstanding-group pipeline of PR 1 (≡ depth 1).
+    wal_pipelined_commit: bool = True
+    wal_pipeline_depth: int = 4  # max commit groups in flight at once
+    # don't hand off into a near-empty queue: while an earlier group is
+    # still in flight, a new group only forms once this many writers are
+    # queued (or the pipeline drains) — tiny groups would pay full
+    # per-group overhead for no extra amortization.
+    wal_pipeline_min_fill: int = 4
+    # --- adaptive group sizing ---
+    # Replaces the fixed byte cap with a latency-target controller: the
+    # effective cap grows (×1.5) while the persist-latency EWMA sits under
+    # half the target and shrinks (×0.7) when it overshoots, clamped to
+    # [wal_group_min_bytes, wal_group_max_bytes]. Entry/batch caps above
+    # stay as hard ceilings.
+    wal_group_adaptive: bool = True
+    wal_group_target_latency_s: float = 0.004  # persist (write+fsync) target
+    wal_group_min_bytes: int = 32 << 10  # adaptive cap floor
+    wal_group_init_bytes: int = 256 << 10  # adaptive cap starting point
     # --- memtable ---
     memtable_size: int = 8 << 20  # paper: 128 MiB; scaled default for tests
     max_immutables: int = 2  # paper setup: 1 immutable (+5 mutable pool)
+    # sharded apply: a commit group with at least this many entries is
+    # partitioned by key hash across a small worker pool instead of applied
+    # serially (0 disables). Keys never split across shards, so the result
+    # is identical to the serial apply.
+    memtable_shard_apply_entries: int = 4096
+    memtable_apply_shards: int = 4
     # --- levels / compaction ---
     num_levels: int = 7
     l0_compaction_trigger: int = 4

@@ -14,31 +14,46 @@ WAL-disabled / async::
     value --> BVCache (pinned) --> background batch write --> BValue file
     Key-ValueOffset --> MemTable (--> buffered WAL in async mode)
 
-Write pipeline (group commit)
------------------------------
+Write pipeline (pipelined group commit)
+---------------------------------------
 
 Commits run through a RocksDB-style leader/follower writer group
-(JoinBatchGroup). Every commit — a :class:`~.writebatch.WriteBatch` or the
-single-entry batches behind ``put``/``delete`` — performs WAL-time value
-separation *outside* the DB mutex (big values fan out across the BValue
-queues via ``put_many``, one fsync per queue per batch), then enqueues on
-the writer queue:
+(JoinBatchGroup) with a two-stage pipelined handoff. Every commit — a
+:class:`~.writebatch.WriteBatch` or the single-entry batches behind
+``put``/``delete`` — performs WAL-time value separation *outside* the DB
+mutex (big values fan out across the BValue queues via ``put_many``, one
+fsync per queue per batch), then enqueues on the writer queue. Commit runs
+in three stages:
 
-* the writer at the head becomes the **leader**: it drains the queue up to
-  ``wal_group_max_{batches,entries,bytes}``, assigns each batch a sequence
-  number, and releases the DB mutex while it persists the whole group with
-  ONE ``WALWriter.append_many`` call — a single write + (sync mode) a
-  single fsync for every writer in the group;
-* **followers** block until the leader marks them done; their ack carries
-  full durability in sync mode because their record was in the leader's
-  fsynced blob;
-* the leader then re-acquires the mutex, applies every batch to the
-  MemTable in bulk (``add_batch``), wakes the group, and hands leadership
-  to the next queued writer.
+1. **drain** (mutex held): the queue head becomes the leader, waits for a
+   pipeline slot (bounded by ``wal_pipeline_depth``, and gated by
+   ``wal_pipeline_min_fill`` so overlapped groups are worth their
+   overhead), merges the head run of the queue into one group up to the
+   adaptive byte cap / hard entry caps, assigns sequence numbers, and
+   reserves a WAL write-order ticket.
+2. **persist** (no mutex): frame encoding is lock-free; the file write
+   happens strictly in ticket (= sequence) order while the group still
+   heads the queue; then the group POPS itself — the **handoff** — and
+   fsyncs outside the ordering barrier, so the next leader drains the
+   now-refilled queue and encodes + writes its group while this fsync is
+   in flight. A group whose ticket a later-started fsync already covered
+   skips its own (at most one fsync runs at a time; piled-up groups ride
+   the next one).
+3. **publish** (mutex held, sequence order): groups apply to the MemTable
+   oldest-first — in bulk (``add_batch``), or hash-sharded across a worker
+   pool when the group is huge — then wake their followers. A group is
+   never visible unless every earlier-sequence group is durable.
 
-``wal_group_commit=False`` restores the pre-pipeline one-record-one-fsync
-path (the benchmark baseline); ``EngineStats`` exposes the group-size
-histogram and ``fsyncs_per_write`` so the amortization is observable.
+**Adaptive group sizing** replaces the fixed byte cap: a latency-target
+controller grows/shrinks the effective cap from the persist-latency EWMA
+(see ``DBConfig.wal_group_target_latency_s``).
+
+``wal_pipelined_commit=False`` restores PR 1's single-outstanding-group
+commit (pipeline depth 1); ``wal_group_commit=False`` restores the
+pre-pipeline one-record-one-fsync path (the benchmark baseline).
+``EngineStats`` exposes the group-size and pipeline-depth histograms,
+``fsyncs_per_write``, and the adaptive-cap gauges so all three
+optimizations are observable.
 """
 from __future__ import annotations
 
@@ -88,6 +103,17 @@ class _Writer:
         self.error: BaseException | None = None
 
 
+class _Group:
+    """One in-flight commit group: the writers drained by a leader, plus
+    the WAL write-order ticket that pins its position in the pipeline."""
+
+    __slots__ = ("writers", "ticket")
+
+    def __init__(self, writers: list[_Writer]):
+        self.writers = writers
+        self.ticket: int | None = None
+
+
 class DB:
     def __init__(self, path: str, cfg: DBConfig | None = None):
         self.path = path
@@ -99,7 +125,19 @@ class DB:
         # group-commit writer queue: head = leader, rest = followers
         self._writers: deque[_Writer] = deque()
         self._group_cv = threading.Condition(self.mutex)
-        self._commit_in_flight = False  # leader is writing WAL outside mutex
+        # pipelined commit: groups in flight, oldest first. Publication is
+        # strictly in this order (no commit-order hole).
+        self._pending: deque[_Group] = deque()
+        self._publish_cv = threading.Condition(self.mutex)  # publish-order barrier
+        self._pipeline_cv = threading.Condition(self.mutex)  # slot/rotation waits
+        self._rotation_pending = False  # rotate once the pipeline drains
+        # adaptive group sizing (latency-target controller)
+        self._group_cap_bytes = min(
+            max(self.cfg.wal_group_init_bytes, self.cfg.wal_group_min_bytes),
+            self.cfg.wal_group_max_bytes,
+        )
+        self._persist_ewma: float | None = None
+        self._mt_pool = None  # lazy ThreadPoolExecutor for sharded apply
 
         self.versions = VersionSet(path, self.cfg.num_levels)
         self.versions.open()
@@ -170,13 +208,21 @@ class DB:
     # write path
     # ------------------------------------------------------------------
     def put(self, key: bytes, value: bytes) -> None:
+        """Store ``key -> value``. Values >= ``value_threshold`` (in ``wal``
+        separation mode) are streamed to the BValue store first; only a
+        ValueOffset rides the WAL/MemTable. Durable on return under sync
+        WAL. Thread-safe: concurrent puts merge into commit groups."""
         self._commit([(kTypeValue, key, value)])
 
     def delete(self, key: bytes) -> None:
+        """Write a tombstone for ``key`` (the value, if separated, is
+        reclaimed later by ``gc_collect``). Same durability as ``put``."""
         self._commit([(kTypeDeletion, key, b"")])
 
     def write(self, batch: WriteBatch) -> None:
-        """Commit a WriteBatch atomically (one WAL record, one seq)."""
+        """Commit a WriteBatch atomically: all ops share one sequence
+        number and one CRC-framed WAL record, so crash replay applies the
+        whole batch or none of it. An empty batch is a no-op."""
         if len(batch):
             self._commit(list(batch._ops))
 
@@ -222,9 +268,12 @@ class DB:
         w = _Writer(ops, user_bytes)
         with self.mutex:
             self._writers.append(w)
-            # check done FIRST: once the leader pops + acks the group, w is
-            # no longer in the deque (which may even be empty).
-            while not w.done and self._writers[0] is not w:
+            if self._pending:
+                self._pipeline_cv.notify()  # a waiting leader may fill up now
+            # check done FIRST, and guard the head peek: once a leader
+            # drains its group off the queue, w may be in a pending group
+            # (not done yet, no longer queued) and the deque may be empty.
+            while not w.done and not (self._writers and self._writers[0] is w):
                 self._group_cv.wait()
             if not w.done:
                 self._lead_group_locked(w)
@@ -232,74 +281,197 @@ class DB:
             raise w.error
 
     def _lead_group_locked(self, leader: _Writer) -> None:
-        """Called with the mutex held by the writer at the queue head: commit
-        the head run of the queue as one group, then wake everyone."""
+        """Called with the mutex held by the writer at the queue head: run
+        the three commit stages (drain / persist / publish) for one group.
+
+        The mutex is released during persist; by then the group has been
+        popped off the writer queue and parked in ``self._pending``, so the
+        next queue head immediately becomes a leader and overlaps its
+        encode+write with this group's fsync.
+        """
         cfg = self.cfg
-        group = [leader]
-        err: BaseException | None = None
         try:
             if self.worker.error is not None:
                 raise RuntimeError("background worker failed") from self.worker.error
             self._maybe_stall_locked()
         except BaseException as e:  # fail fast: only the leader is charged
-            err = e
-        if err is None:
-            # form the group AFTER the stall so late arrivals ride along
-            if cfg.wal_group_commit:
-                n_entries, n_bytes = leader.count, leader.entry_bytes
-                for w in list(self._writers)[1:]:
-                    if (
-                        len(group) >= cfg.wal_group_max_batches
-                        or n_entries + w.count > cfg.wal_group_max_entries
-                        or n_bytes + w.entry_bytes > cfg.wal_group_max_bytes
-                    ):
-                        break
-                    group.append(w)
-                    n_entries += w.count
-                    n_bytes += w.entry_bytes
-            for w in group:
-                self._seq += 1
-                w.seq = self._seq
-            wal = self.wal
-            if wal is not None:
-                # WAL encode + I/O without the mutex: entries are immutable
-                # once queued, so new writers keep enqueueing and the BValue
-                # queues keep streaming while we serialize and fsync. Group
-                # members stay at the queue head, so no second leader can
-                # emerge; _commit_in_flight keeps flush() from rotating the
-                # memtable out from under this commit.
-                self._commit_in_flight = True
-                self.mutex.release()
+            popped = self._writers.popleft()
+            assert popped is leader, "writer queue out of order"
+            leader.error = e
+            leader.done = True
+            self._group_cv.notify_all()
+            return
+
+        # --- stage 1: drain. Wait for a pipeline slot (we are still the
+        # queue head, so nobody else can form a group while we wait), then
+        # merge the head run of the queue — late arrivals during the stall
+        # and the slot wait ride along.
+        depth_cap = (
+            cfg.wal_pipeline_depth
+            if (cfg.wal_pipelined_commit and cfg.wal_group_commit)
+            else 1
+        )
+        while (
+            self._rotation_pending
+            or len(self._pending) >= depth_cap
+            # min-fill gate: overlapping an in-flight group only pays once
+            # enough writers are queued to form a real group; otherwise
+            # wait — for more arrivals (enqueues notify) or the drain.
+            or (self._pending and len(self._writers) < cfg.wal_pipeline_min_fill)
+        ):
+            self._pipeline_cv.wait()
+        group = [leader]
+        if cfg.wal_group_commit:
+            cap_bytes = (
+                self._group_cap_bytes if cfg.wal_group_adaptive else cfg.wal_group_max_bytes
+            )
+            n_entries, n_bytes = leader.count, leader.entry_bytes
+            for w in list(self._writers)[1:]:
+                if (
+                    len(group) >= cfg.wal_group_max_batches
+                    or n_entries + w.count > cfg.wal_group_max_entries
+                    or n_bytes + w.entry_bytes > cap_bytes
+                ):
+                    break
+                group.append(w)
+                n_entries += w.count
+                n_bytes += w.entry_bytes
+        for w in group:
+            self._seq += 1
+            w.seq = self._seq
+        grp = _Group(group)
+        wal = self.wal
+        if wal is not None:
+            # ticket taken under the mutex right after seq assignment, so
+            # WAL file order always equals sequence order
+            grp.ticket = wal.reserve()
+        self._pending.append(grp)
+        self.stats.record_pipeline_depth(len(self._pending))
+
+        # --- stage 2: persist. The group STAYS at the queue head through
+        # the (fast) file write — late writers keep piling up behind it —
+        # and hands the queue off right before the (slow) fsync: the next
+        # leader then drains a well-filled queue and encodes + writes its
+        # group while our fsync is in flight. Both halves run OUTSIDE the
+        # mutex (entries are immutable once queued; the BValue queues keep
+        # streaming).
+        err: BaseException | None = None
+        persist_s = 0.0
+        t0 = time.monotonic()
+        if wal is not None:
+            self.mutex.release()
+            try:
                 try:
-                    wal.append_many([encode_entries(w.seq, w.entries) for w in group])
-                except BaseException as e:
-                    err = e
-                finally:
-                    self.mutex.acquire()
-                    self._commit_in_flight = False
+                    payloads = [encode_entries(w.seq, w.entries) for w in group]
+                except BaseException:
+                    # the reserved ticket MUST be consumed or every later
+                    # group deadlocks at the write barrier
+                    wal.abort_ticket(grp.ticket)
+                    raise
+                wal.write_many(payloads, grp.ticket)
+            except BaseException as e:
+                err = e
+            finally:
+                self.mutex.acquire()
+        # handoff point: pop the group; the next queue head becomes leader
+        for w in group:
+            popped = self._writers.popleft()
+            assert popped is w, "writer queue out of order"
+        self._group_cv.notify_all()
+        if wal is not None and err is None:
+            self.mutex.release()
+            try:
+                wal.sync_ticket(grp.ticket)
+                persist_s = time.monotonic() - t0
+            except BaseException as e:
+                err = e
+            finally:
+                self.mutex.acquire()
+            if err is None and cfg.wal_group_adaptive and cfg.wal_group_commit:
+                self._adapt_group_cap_locked(persist_s)
+
+        # --- stage 3: publish in sequence order. Earlier groups are
+        # durable AND visible before we are; our followers wake only after
+        # both hold for us too.
+        while self._pending[0] is not grp:
+            self._publish_cv.wait()
         if err is None:
             try:
-                total_entries = 0
-                total_bytes = 0
-                for w in group:
-                    prevs = self.mem.add_batch(w.seq, w.entries)
-                    for prev in prevs:
-                        if prev[1] == kTypeValuePtr:
-                            self.dead_tracker.on_dead(ValueOffset.decode(prev[2]))
-                    total_entries += w.count
-                    total_bytes += w.user_bytes
+                total_entries = sum(w.count for w in group)
+                total_bytes = sum(w.user_bytes for w in group)
+                prevs = self._apply_group_locked(group, total_entries)
+                for prev in prevs:
+                    if prev[1] == kTypeValuePtr:
+                        self.dead_tracker.on_dead(ValueOffset.decode(prev[2]))
                 self.stats.mark_user_writes(total_entries, total_bytes)
                 self.stats.record_group(len(group), total_entries)
             except BaseException as e:  # must still ack the group below, or
                 err = e  # every current and future writer deadlocks
+        popped_grp = self._pending.popleft()
+        assert popped_grp is grp, "pipeline out of order"
         for w in group:
-            popped = self._writers.popleft()
-            assert popped is w, "writer queue out of order"
             w.error = err
             w.done = True
         self._group_cv.notify_all()
-        if err is None and self.mem.approximate_size >= self.cfg.memtable_size:
+        self._publish_cv.notify_all()
+        self._pipeline_cv.notify_all()
+        # rotation waits for the pipeline to drain: every pending group's
+        # WAL record lives in the CURRENT file, and rotating under them
+        # would let their entries land in a memtable whose WAL is gone
+        # after the old file is dropped at flush.
+        if err is None and self.mem.approximate_size >= cfg.memtable_size:
+            self._rotation_pending = True
+        if self._rotation_pending and not self._pending:
+            self._rotation_pending = False
             self._rotate_memtable_locked()
+            self._pipeline_cv.notify_all()
+
+    def _apply_group_locked(self, group: list[_Writer], total_entries: int) -> list:
+        """MemTable apply for one group: bulk per-batch, or hash-sharded
+        across the worker pool when the group is huge."""
+        cfg = self.cfg
+        if (
+            cfg.memtable_shard_apply_entries
+            and cfg.memtable_apply_shards > 1
+            and total_entries >= cfg.memtable_shard_apply_entries
+        ):
+            if self._mt_pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+
+                self._mt_pool = ThreadPoolExecutor(
+                    max_workers=cfg.memtable_apply_shards, thread_name_prefix="mt-apply"
+                )
+            self.stats.add("memtable_shard_applies")
+            return self.mem.add_group_sharded(
+                [(w.seq, w.entries) for w in group], self._mt_pool, cfg.memtable_apply_shards
+            )
+        prevs: list = []
+        for w in group:
+            prevs.extend(self.mem.add_batch(w.seq, w.entries))
+        return prevs
+
+    def _adapt_group_cap_locked(self, persist_s: float) -> None:
+        """Latency-target controller: EWMA the group persist latency and
+        steer the effective byte cap toward ``wal_group_target_latency_s``
+        — grow while persists are comfortably fast (more amortization for
+        free), shrink when the EWMA overshoots (followers waiting too
+        long), clamped to [min_bytes, max_bytes]."""
+        cfg = self.cfg
+        self._persist_ewma = (
+            persist_s
+            if self._persist_ewma is None
+            else 0.7 * self._persist_ewma + 0.3 * persist_s
+        )
+        cap = self._group_cap_bytes
+        if self._persist_ewma > cfg.wal_group_target_latency_s:
+            cap = int(cap * 0.7)
+        elif self._persist_ewma < 0.5 * cfg.wal_group_target_latency_s:
+            cap = int(cap * 1.5)
+        self._group_cap_bytes = min(
+            max(cap, cfg.wal_group_min_bytes), cfg.wal_group_max_bytes
+        )
+        self.stats.set_gauge("wal_group_effective_bytes", self._group_cap_bytes)
+        self.stats.set_gauge("wal_persist_ewma_s", self._persist_ewma)
 
     def _maybe_stall_locked(self) -> None:
         cfg = self.cfg
@@ -336,18 +508,38 @@ class DB:
     # read path
     # ------------------------------------------------------------------
     def get(self, key: bytes) -> bytes | None:
-        with self.mutex:
-            tables = [self.mem, *reversed(self.immutables)]
-            version = self.versions.current
-        for t in tables:
-            found, type_, value = t.get(key)
-            if found:
-                return self._resolve(key, type_, value)
-        for _level, fmeta in version.candidates_for_get(key):
-            reader = self.versions.reader(fmeta.file_no)
-            found, _seq, type_, value = reader.get(key)
-            if found:
-                return self._resolve(key, type_, value)
+        """Point lookup: newest version wins (MemTables, then L0
+        newest-first, then deeper levels); separated values resolve through
+        the BVCache / BValue store. Returns None for absent or deleted
+        keys."""
+        # lock-free against background work: the (memtables, version) pair
+        # is snapshotted under the mutex, but a compaction may finish and
+        # unlink this snapshot's input files while we walk it. The reader
+        # cache keeps dropped files open (close-deferred), so that window
+        # only bites on a cache miss — retry against a fresh snapshot.
+        for _attempt in range(8):
+            with self.mutex:
+                tables = [self.mem, *reversed(self.immutables)]
+                version = self.versions.current
+            for t in tables:
+                found, type_, value = t.get(key)
+                if found:
+                    return self._resolve(key, type_, value)
+            try:
+                for _level, fmeta in version.candidates_for_get(key):
+                    reader = self.versions.reader(fmeta.file_no)
+                    found, _seq, type_, value = reader.get(key)
+                    if found:
+                        return self._resolve(key, type_, value)
+            except (OSError, ValueError):
+                if self.versions.current is version:
+                    raise  # stable snapshot: real I/O or corruption error
+                continue  # snapshot superseded mid-walk — take a fresh one
+            # a miss is only trustworthy if the version didn't move under
+            # us (a file may have been replaced between candidates); under
+            # sustained churn accept the last miss rather than spinning.
+            if self.versions.current is version or _attempt == 7:
+                return None
         return None
 
     def _resolve(self, key: bytes, type_: int, value: bytes) -> bytes | None:
@@ -366,42 +558,60 @@ class DB:
         return self.bvalue.get(voff, verify=self.cfg.paranoid_checks)
 
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
-        """Range scan: merged view across memtables + all levels."""
-        with self.mutex:
-            mems = [self.mem, *reversed(self.immutables)]
-            version = self.versions.current
-        iters = [m.range_items(start, None) for m in mems]
-        for f in version.levels[0]:
-            if f.largest >= start:
-                iters.append(self.versions.reader(f.file_no).iter_from(start))
-        for level in range(1, len(version.levels)):
-            for f in version.levels[level]:
-                if f.largest >= start:
-                    iters.append(self.versions.reader(f.file_no).iter_from(start))
-        out: list[tuple[bytes, bytes]] = []
-        last = None
-        for key, _seq, type_, value in _merge_iters(iters):
-            if key == last:
-                continue
-            last = key
-            resolved = self._resolve(key, type_, value)
-            if resolved is None:
-                continue
-            out.append((key, resolved))
-            if len(out) >= count:
-                break
-        return out
+        """Return up to ``count`` live ``(key, value)`` pairs with
+        ``key >= start``, in ascending key order — a merged view across
+        memtables and every level, tombstones elided, separated values
+        resolved.
+
+        Like :meth:`get`, the snapshot walk races background compaction
+        (input files can vanish mid-merge); the whole scan restarts on a
+        torn snapshot.
+        """
+        for _attempt in range(8):
+            with self.mutex:
+                mems = [self.mem, *reversed(self.immutables)]
+                version = self.versions.current
+            try:
+                iters = [m.range_items(start, None) for m in mems]
+                for f in version.levels[0]:
+                    if f.largest >= start:
+                        iters.append(self.versions.reader(f.file_no).iter_from(start))
+                for level in range(1, len(version.levels)):
+                    for f in version.levels[level]:
+                        if f.largest >= start:
+                            iters.append(self.versions.reader(f.file_no).iter_from(start))
+                out: list[tuple[bytes, bytes]] = []
+                last = None
+                for key, _seq, type_, value in _merge_iters(iters):
+                    if key == last:
+                        continue
+                    last = key
+                    resolved = self._resolve(key, type_, value)
+                    if resolved is None:
+                        continue
+                    out.append((key, resolved))
+                    if len(out) >= count:
+                        break
+            except (OSError, ValueError):
+                if self.versions.current is version:
+                    raise  # stable snapshot: real I/O or corruption error
+                continue  # snapshot superseded mid-scan — restart
+            return out
+        raise RuntimeError("scan() could not obtain a stable version snapshot")
 
     # ------------------------------------------------------------------
     # maintenance / lifecycle
     # ------------------------------------------------------------------
     def flush(self) -> None:
-        """Rotate + flush all memtables; barrier on value/WAL persistence."""
+        """Synchronous barrier: drain the commit pipeline, rotate the
+        memtable, flush every immutable to L0, and force BValue/WAL
+        persistence. On return all previously-acked writes are in SSTables
+        or durable logs."""
         with self.mutex:
-            # a leader mid-commit has unapplied entries targeting the current
+            # in-flight groups have unapplied entries targeting the current
             # WAL/memtable pair — rotating now would strand them.
-            while self._commit_in_flight:
-                self._group_cv.wait()
+            while self._pending:
+                self._publish_cv.wait()
             if len(self.mem):
                 self._rotate_memtable_locked()
         self.wait_idle(compactions=False)
@@ -434,6 +644,10 @@ class DB:
         self.wait_idle(compactions=True)
 
     def close(self, crash: bool = False) -> None:
+        """Shut down the engine. ``crash=True`` simulates a hard crash for
+        recovery tests: async WAL buffers are dropped, memtables are NOT
+        flushed, and background work is abandoned — reopening the path
+        exercises the real recovery code."""
         if self._closed:
             return
         self._closed = True
@@ -444,6 +658,8 @@ class DB:
             self.wal.close(drop_buffered=crash)
         self.bvalue.close()
         self.versions.close()
+        if self._mt_pool is not None:
+            self._mt_pool.shutdown(wait=True)
 
     def _crash_stop_worker(self) -> None:
         # crash simulation: stop the worker without flushing memtables

@@ -72,6 +72,7 @@ class VersionSet:
         self._manifest = None
         self._lock = threading.Lock()
         self._readers: dict[int, SSTableReader] = {}
+        self._retired: list[SSTableReader] = []  # dropped, close-deferred
         self.compaction_ptr: dict[int, bytes] = {}
 
     # -- manifest log -----------------------------------------------------
@@ -125,15 +126,36 @@ class VersionSet:
             return no
 
     def reader(self, file_no: int) -> SSTableReader:
-        r = self._readers.get(file_no)
-        if r is None:
-            r = SSTableReader(table_path(self.dir, file_no))
-            self._readers[file_no] = r
-        return r
+        with self._lock:
+            r = self._readers.get(file_no)
+        if r is not None:
+            return r
+        # construct OUTSIDE the lock (opens the file + loads its index);
+        # on a race the loser's never-shared reader is closed immediately
+        r = SSTableReader(table_path(self.dir, file_no))
+        with self._lock:
+            existing = self._readers.get(file_no)
+            if existing is None:
+                self._readers[file_no] = r
+                return r
+        r.close()
+        return existing
 
     def drop_reader(self, file_no: int) -> None:
-        r = self._readers.pop(file_no, None)
-        if r is not None:
+        # Don't close immediately: a get() walking a just-superseded version
+        # snapshot may still pread() this reader, and closing would free the
+        # fd for reuse (a concurrent pread would then silently read some
+        # OTHER file). Retire it instead and close a stale batch once enough
+        # pile up — any in-flight lookup is long done by then.
+        with self._lock:
+            r = self._readers.pop(file_no, None)
+            if r is None:
+                return
+            self._retired.append(r)
+            to_close = self._retired[:-32] if len(self._retired) > 64 else []
+            if to_close:
+                self._retired = self._retired[-32:]
+        for r in to_close:
             r.close()
 
     def close(self) -> None:
@@ -142,3 +164,6 @@ class VersionSet:
         for r in self._readers.values():
             r.close()
         self._readers.clear()
+        for r in self._retired:
+            r.close()
+        self._retired.clear()

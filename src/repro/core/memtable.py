@@ -11,10 +11,16 @@ which the byte accounting models exactly.
 arena accounting — this is what makes the paper's point measurable: with
 WAL-time separation a 64 KiB value contributes only ~VOFF_SIZE bytes here.
 
-Two write-pipeline optimizations:
+Three write-pipeline optimizations:
 
 * ``add_batch`` applies a whole group-commit batch with one pass (the
   leader calls it once per follower batch instead of per entry);
+* ``add_group_sharded`` fans a huge commit group out across a worker pool,
+  partitioned by key hash — each key lives entirely in one shard and each
+  shard applies its entries in sequence order, so the result is
+  bit-identical to the sequential apply (per-key last-writer-wins is a
+  per-shard property). Individual dict get/set ops are GIL-atomic, so the
+  shards can share ``_table`` without a lock;
 * the sorted key view is cached and only rebuilt when a *new* key has been
   inserted — overwrites keep it — so repeated ``range_items`` /
   ``sorted_items`` calls (scans, flush) stop re-sorting the entire dict.
@@ -95,6 +101,56 @@ class MemTable:
             self.first_seq = seq
         self.last_seq = max(self.last_seq, seq)
         return prevs
+
+    def add_group_sharded(self, applies, pool, nshards: int) -> list:
+        """Apply a whole commit group — ``applies`` is ``[(seq, entries),
+        ...]`` in ascending seq order — sharded by key hash across ``pool``.
+
+        Returns the combined superseded records (same contract as
+        ``add_batch``). The version bump happens once, AFTER every shard has
+        joined, preserving the lock-free reader protocol: a reader that
+        sorted mid-apply publishes under a pre-bump tag and rebuilds.
+        """
+        buckets: list[list] = [[] for _ in range(nshards)]
+        for seq, entries in applies:
+            for entry in entries:
+                buckets[hash(entry[1]) % nshards].append((seq, entry))
+        futures = [pool.submit(self._apply_shard, b) for b in buckets if b]
+        nbytes = 0
+        new_keys = 0
+        prevs: list = []
+        for f in futures:
+            b, n, p = f.result()
+            nbytes += b
+            new_keys += n
+            prevs.extend(p)
+        self._bytes += nbytes
+        if new_keys:
+            self._version += 1
+        if applies:
+            if self.first_seq is None:
+                self.first_seq = applies[0][0]
+            self.last_seq = max(self.last_seq, applies[-1][0])
+        return prevs
+
+    def _apply_shard(self, items) -> tuple[int, int, list]:
+        """One shard's slice of a group: ``[(seq, (type, key, value)), ...]``
+        in seq order. Touches only this shard's keys; returns the byte
+        delta, new-key count, and superseded records."""
+        table = self._table
+        nbytes = 0
+        new_keys = 0
+        prevs = []
+        for seq, (type_, key, value) in items:
+            prev = table.get(key)
+            if prev is not None:
+                nbytes -= len(key) + len(prev[2]) + ENTRY_OVERHEAD
+                prevs.append(prev)
+            else:
+                new_keys += 1
+            table[key] = (seq, type_, value)
+            nbytes += len(key) + len(value) + ENTRY_OVERHEAD
+        return nbytes, new_keys, prevs
 
     def get(self, key: bytes):
         """Returns (found, type, value). found=False means fall through to

@@ -176,8 +176,11 @@ class SSTableReader:
 
     def _read_block(self, idx: int) -> bytes:
         _, off, length = self.index[idx]
-        self._f.seek(off)
-        return _decode_block(self._f.read(length))
+        # positional read: one reader object is shared by foreground gets
+        # and background flush/compaction iterators, and a seek+read pair
+        # would interleave offsets between threads (silently decoding the
+        # wrong block). pread has no cursor, so it is race-free.
+        return _decode_block(os.pread(self._f.fileno(), length, off))
 
     def get(self, key: bytes):
         """Returns (found, seq, type, value)."""

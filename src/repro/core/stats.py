@@ -10,6 +10,14 @@ power-of-two histogram of writers-per-group, and ``fsyncs_per_write``
 (= (wal_fsyncs + bvalue_fsyncs) / user_writes) measures how well the
 leader/follower commit amortizes durability barriers — 1.0 means every
 write paid its own fsync; well-batched sync workloads sit far below 0.5.
+
+Pipelined-commit accounting (write pipeline v2): ``record_pipeline_depth``
+histograms the number of commit groups in flight at group-formation time
+(a max > 1 proves fsync/encode overlap actually happened), and the
+``gauges`` dict carries the adaptive controller's live state —
+``wal_group_effective_bytes`` (current latency-targeted byte cap) and
+``wal_persist_ewma_s`` (smoothed group persist latency). ``wal_fsync_skips``
+counts groups whose durability was covered by a later-started fsync.
 """
 from __future__ import annotations
 
@@ -19,6 +27,28 @@ from collections import defaultdict
 
 
 class EngineStats:
+    """Thread-safe engine counters; read a consistent copy via ``snapshot()``.
+
+    Counter names (``snapshot()`` keys; all monotonic):
+
+    * ``user_writes`` / ``user_bytes`` — acknowledged entries / payload
+    * ``wal_bytes`` / ``wal_records`` / ``wal_fsyncs`` — WAL I/O;
+      ``wal_fsync_skips`` — groups covered by a later-started fsync
+    * ``bvalue_bytes`` / ``bvalue_fsyncs`` — BValue store I/O
+    * ``flush_bytes`` / ``flush_count`` — MemTable→L0 flushes
+    * ``compaction_bytes`` / ``compaction_read_bytes`` / ``compaction_count``
+    * ``group_commits`` / ``group_writers`` / ``group_entries`` — group
+      commit totals; ``memtable_shard_applies`` — groups applied sharded
+
+    Derived (properties, also in ``snapshot()``): ``device_bytes``,
+    ``write_amp``, ``fsyncs_per_write``, ``avg_group_size``,
+    ``pipeline_depth_max``. Structures: ``group_size_hist`` (pow2 bucket →
+    count), ``pipeline_depth_hist`` (depth → count), ``gauges`` (last-value,
+    e.g. ``wal_group_effective_bytes`` / ``wal_persist_ewma_s``),
+    ``timeline`` (t, acked bytes) feeding ``interval_throughput``, and
+    stall accounting (``stall_seconds`` / ``stall_events``).
+    """
+
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self.counters: dict[str, int] = defaultdict(int)
@@ -27,6 +57,8 @@ class EngineStats:
         self._t0 = time.monotonic()
         self.timeline: list[tuple[float, int]] = []  # (t, user_bytes_acked)
         self.group_size_hist: dict[int, int] = defaultdict(int)  # pow2 bucket -> count
+        self.pipeline_depth_hist: dict[int, int] = defaultdict(int)  # depth -> count
+        self.gauges: dict[str, float] = {}  # last-value gauges (adaptive caps, ...)
 
     def add(self, name: str, n: int = 1) -> None:
         with self._lock:
@@ -54,6 +86,20 @@ class EngineStats:
             self.counters["group_writers"] += n_writers
             self.counters["group_entries"] += n_entries
             self.group_size_hist[1 << max(0, n_writers - 1).bit_length()] += 1
+
+    def record_pipeline_depth(self, depth: int) -> None:
+        """Commit groups in flight (incl. this one) when a group formed."""
+        with self._lock:
+            self.pipeline_depth_hist[depth] += 1
+
+    def set_gauge(self, name: str, value: float) -> None:
+        """Publish a last-value gauge (e.g. the adaptive group-size cap)."""
+        with self._lock:
+            self.gauges[name] = value
+
+    @property
+    def pipeline_depth_max(self) -> int:
+        return max(self.pipeline_depth_hist, default=0)
 
     @property
     def device_bytes(self) -> int:
@@ -103,6 +149,8 @@ class EngineStats:
         with self._lock:
             d = dict(self.counters)
             hist = dict(sorted(self.group_size_hist.items()))
+            depth_hist = dict(sorted(self.pipeline_depth_hist.items()))
+            gauges = dict(self.gauges)
         for k in (
             "wal_bytes",
             "flush_bytes",
@@ -119,7 +167,11 @@ class EngineStats:
         d["write_amp"] = self.write_amp
         d["stall_seconds"] = self.stall_seconds
         d["stall_events"] = self.stall_events
+        d.setdefault("wal_fsync_skips", 0)
         d["fsyncs_per_write"] = self.fsyncs_per_write
         d["avg_group_size"] = self.avg_group_size
         d["group_size_hist"] = hist
+        d["pipeline_depth_hist"] = depth_hist
+        d["pipeline_depth_max"] = max(depth_hist, default=0)
+        d["gauges"] = gauges
         return d

@@ -15,6 +15,13 @@ from .record import kTypeDeletion, kTypeValue
 
 
 class WriteBatch:
+    """An ordered list of ops committed atomically by :meth:`DB.write`.
+
+    Ops apply in insertion order, so a later ``put``/``delete`` of the same
+    key wins within the batch. Builder-style: ``put``/``delete`` return
+    ``self`` for chaining. A batch is reusable after ``clear()``.
+    """
+
     __slots__ = ("_ops", "_nbytes")
 
     def __init__(self) -> None:
@@ -22,16 +29,19 @@ class WriteBatch:
         self._nbytes = 0
 
     def put(self, key: bytes, value: bytes) -> "WriteBatch":
+        """Queue ``key -> value`` (separation decided at commit time)."""
         self._ops.append((kTypeValue, key, value))
         self._nbytes += len(key) + len(value)
         return self
 
     def delete(self, key: bytes) -> "WriteBatch":
+        """Queue a tombstone for ``key``."""
         self._ops.append((kTypeDeletion, key, b""))
         self._nbytes += len(key)
         return self
 
     def clear(self) -> None:
+        """Drop all queued ops, making the batch reusable."""
         self._ops.clear()
         self._nbytes = 0
 

@@ -1,0 +1,42 @@
+"""§Perf variant switches.
+
+Each flag gates one optimization that must stay mathematically equivalent
+to the baseline path (equivalence enforced by ``tests/test_perf_variants``);
+the dry-run compiles every variant and diffs the HLO cost model. Flags are
+ambient (``perf_context``) rather than threaded through call signatures so
+a variant can be toggled around an unmodified ``jit``/``lower`` call.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PerfConfig:
+    save_dot_outputs: bool = False  # V1: remat policy saves post-AR tensors
+    moe_local_dispatch: bool = False  # V2: per-data-shard MoE routing
+    sharded_decode_attn: bool = False  # V3/V5: flash-decode over sharded kv_seq
+    causal_chunk_growth: bool = False  # V4: growing causal attention chunks
+    cast_weights_early: bool = False  # V6: bf16 weights across the FSDP gather
+    bf16_rowparallel: bool = False  # V9: explicit bf16 row-parallel psum
+
+
+_active: contextvars.ContextVar[PerfConfig] = contextvars.ContextVar(
+    "repro_dist_perf", default=PerfConfig()
+)
+
+
+def perf() -> PerfConfig:
+    """The ambient variant config (all-baseline when none installed)."""
+    return _active.get()
+
+
+@contextlib.contextmanager
+def perf_context(cfg: PerfConfig):
+    token = _active.set(cfg)
+    try:
+        yield cfg
+    finally:
+        _active.reset(token)

@@ -154,7 +154,7 @@ def sharded_decode_update_attend(q, k_cache, v_cache, k_new, v_new, pos):
     q (B,1,H,D); caches (B,S,K,D); k_new/v_new (B,1,K,D); pos scalar
     (cache_len = pos + 1). Returns (out (B,1,H,D), k_cache, v_cache).
     """
-    from repro.dist import active_mesh, logical_to_spec
+    from repro.dist import active_mesh, logical_to_spec, shard_map
 
     mesh = active_mesh()
     B, S, K, D = k_cache.shape
@@ -224,7 +224,7 @@ def sharded_decode_update_attend(q, k_cache, v_cache, k_new, v_new, pos):
         {a for a in ("data", "pod") if a in mesh.shape and bspec
          and a in (bspec if isinstance(bspec, tuple) else (bspec,))}
     )
-    out, kc, vc = jax.shard_map(
+    out, kc, vc = shard_map(
         f,
         mesh=mesh,
         in_specs=(q_spec, cache_spec, cache_spec, q_spec, q_spec, P()),

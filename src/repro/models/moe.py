@@ -70,7 +70,7 @@ def moe_ffn(lp: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
 def _moe_ffn_local(lp: dict, x: jax.Array, cfg):
     from jax.sharding import PartitionSpec as P
 
-    from repro.dist import active_mesh, logical_to_spec
+    from repro.dist import active_mesh, logical_to_spec, shard_map
 
     mesh = active_mesh()
     if mesh is None:
@@ -89,7 +89,7 @@ def _moe_ffn_local(lp: dict, x: jax.Array, cfg):
         return y, aux
 
     w_specs = jax.tree.map(lambda _: P(), lp)  # replicated over the manual axes
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         f,
         mesh=mesh,
         in_specs=(w_specs, P(bspec, None, None)),

@@ -106,7 +106,7 @@ def row_parallel_einsum(u: jax.Array, w: jax.Array) -> jax.Array:
     """§Perf V9: u (B,T,F) with F sharded over `model`, w (F,D) row-sharded —
     local matmul + EXPLICIT bf16 psum via shard_map (auto over data axes).
     GSPMD would otherwise all-reduce the f32 partial accumulators."""
-    from repro.dist import active_mesh
+    from repro.dist import active_mesh, shard_map
     from repro.dist.perf import perf
 
     mesh = active_mesh()
@@ -132,7 +132,7 @@ def row_parallel_einsum(u: jax.Array, w: jax.Array) -> jax.Array:
         y = jax.lax.psum_scatter(y, "model", scatter_dimension=2, tiled=True)
         return jax.lax.all_gather(y, "model", axis=2, tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         f,
         mesh=mesh,
         in_specs=(P(None, None, "model"), P("model", None)),

@@ -9,13 +9,11 @@ import warnings
 
 import pytest
 
-# Seed gap: some test modules need deps/modules this container doesn't have
-# (`hypothesis` is not installed; `repro.dist` is absent from the seed).
-# Gate them at collection so the rest of the suite still runs — remove the
-# entries here as the gaps are filled in.
+# Seed gap: some test modules need deps this container doesn't have
+# (`hypothesis` is not installed). Gate them at collection so the rest of
+# the suite still runs — remove entries as the gaps are filled in.
+# (`repro.dist` was restored in PR 2; its former gate entries are gone.)
 _GATED = {
-    "repro.dist": ["test_dist.py", "test_models.py", "test_perf_variants.py",
-                   "test_system.py", "test_trainer.py"],
     "hypothesis": ["test_optimizer.py", "test_serving.py"],
 }
 collect_ignore = []

@@ -98,8 +98,8 @@ SUBPROC = textwrap.dedent(
     from repro.launch.specs import build_cell
     from repro.training.train_step import TrainConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh((2, 4))
     cfg = get_config("llama3-8b").reduced(d_model=128, n_layers=2, n_heads=8,
                                           n_kv_heads=4, head_dim=16, d_ff=256,
                                           vocab=512, vocab_pad_multiple=64)
@@ -108,7 +108,10 @@ SUBPROC = textwrap.dedent(
         r = build_cell(cfg, cell, mesh, TrainConfig())
         c = jax.jit(r.fn, in_shardings=r.in_shardings,
                     donate_argnums=r.donate_argnums).lower(*r.args).compile()
-    print(json.dumps({"ok": True, "flops": (c.cost_analysis() or {}).get("flops", 0)}))
+    ca = c.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
+    print(json.dumps({"ok": True, "flops": ca.get("flops", 0)}))
     """
 )
 

@@ -117,6 +117,7 @@ def test_compressed_psum_single_axis():
     error feedback captures exactly the residual."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.dist import shard_map
     from repro.launch.mesh import make_host_mesh
 
     mesh = make_host_mesh((1, 1), axes=("pod", "model"))
@@ -126,7 +127,7 @@ def test_compressed_psum_single_axis():
     def f(g, e):
         return compressed_psum(g, e, "pod")
 
-    out, new_e = jax.shard_map(
+    out, new_e = shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False
     )(g, e)
     np.testing.assert_allclose(

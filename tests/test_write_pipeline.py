@@ -1,15 +1,19 @@
 """Write pipeline: WriteBatch semantics, leader/follower group commit,
-BValue batched fan-out + roll race, MemTable sorted-view cache, and the
-BValue flush barrier."""
+pipelined leader handoff (v2: overlap, sequence-ordered publication,
+adaptive group sizing, sharded memtable apply), BValue batched fan-out +
+roll race, MemTable sorted-view cache, and the BValue flush barrier."""
 import os
 import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 
 import pytest
 
 from repro.core import DB, DBConfig, WriteBatch
 from repro.core.bvalue import BValueManager
 from repro.core.memtable import MemTable
-from repro.core.record import kTypeValue
+from repro.core.record import decode_entries, kTypeValue
+from repro.core.wal import replay_wal
 
 SMALL = dict(
     memtable_size=64 << 10,
@@ -177,6 +181,265 @@ def test_group_commit_disabled_baseline(tmp_db_dir):
         assert s["avg_group_size"] == 1.0
     finally:
         db.close()
+
+
+# ---------------------------------------------------------------------------
+# pipelined commit (write pipeline v2)
+# ---------------------------------------------------------------------------
+
+def _slow_fsync(monkeypatch, delay_s: float):
+    """Make WAL fsyncs observably slow (GIL released during the sleep, like
+    a real fsync) so commit groups genuinely overlap."""
+    import repro.core.wal as wal_mod
+
+    real = os.fsync
+
+    def slow(fd):
+        time.sleep(delay_s)
+        return real(fd)
+
+    monkeypatch.setattr(wal_mod.os, "fsync", slow)
+
+
+def test_pipelined_handoff_overlaps_fsync(tmp_db_dir, monkeypatch):
+    """With a slow fsync, the next leader must form+write its group while
+    the previous group's fsync is in flight: observed pipeline depth > 1."""
+    _slow_fsync(monkeypatch, 0.01)
+    db = mk(tmp_db_dir, wal="sync", memtable_size=16 << 20)
+    nthreads, n = 8, 30
+
+    def writer(t):
+        for i in range(n):
+            db.put(f"t{t}k{i:04d}".encode(), b"v" * 128)
+
+    try:
+        ts = [threading.Thread(target=writer, args=(t,)) for t in range(nthreads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        s = db.stats.snapshot()
+        assert s["user_writes"] == nthreads * n
+        assert s["pipeline_depth_max"] >= 2, s["pipeline_depth_hist"]
+        for t in range(nthreads):
+            for i in range(0, n, 7):
+                assert db.get(f"t{t}k{i:04d}".encode()) == b"v" * 128
+    finally:
+        db.close()
+
+
+def test_pipelined_disabled_is_single_outstanding(tmp_db_dir, monkeypatch):
+    """wal_pipelined_commit=False restores PR 1's depth-1 pipeline."""
+    _slow_fsync(monkeypatch, 0.005)
+    db = mk(tmp_db_dir, wal="sync", wal_pipelined_commit=False, memtable_size=16 << 20)
+    nthreads, n = 6, 20
+
+    def writer(t):
+        for i in range(n):
+            db.put(f"t{t}k{i:04d}".encode(), b"v" * 64)
+
+    try:
+        ts = [threading.Thread(target=writer, args=(t,)) for t in range(nthreads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        s = db.stats.snapshot()
+        assert s["user_writes"] == nthreads * n
+        assert s["pipeline_depth_max"] <= 1
+    finally:
+        db.close()
+
+
+def test_pipelined_crash_recovery_no_commit_order_hole(tmp_db_dir, monkeypatch):
+    """Crash under pipelined sync commits: (a) the WAL byte stream is in
+    strictly ascending sequence order — replay can never surface group N+1
+    without group N — and (b) every ACKED write survives recovery."""
+    _slow_fsync(monkeypatch, 0.002)
+    db = mk(tmp_db_dir, wal="sync", memtable_size=16 << 20)
+    nthreads, n = 6, 40
+    acked: dict[bytes, bytes] = {}
+    lock = threading.Lock()
+
+    def writer(t):
+        for i in range(n):
+            k, v = f"t{t}k{i:04d}".encode(), (b"%d.%d|" % (t, i)) * 20
+            db.put(k, v)
+            with lock:
+                acked[k] = v
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(nthreads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    db.close(crash=True)  # memtable NOT flushed
+    logs = sorted(f for f in os.listdir(tmp_db_dir) if f.startswith("wal_"))
+    assert logs
+    seqs = []
+    for name in logs:
+        for payload in replay_wal(os.path.join(tmp_db_dir, name)):
+            seq, _ = decode_entries(payload)
+            seqs.append(seq)
+    assert seqs == sorted(seqs), "WAL file order diverged from sequence order"
+    assert len(seqs) == len(set(seqs))
+    db2 = mk(tmp_db_dir, wal="sync")
+    try:
+        for k, v in acked.items():
+            assert db2.get(k) == v, k
+    finally:
+        db2.close()
+
+
+def test_covered_fsync_skipped(tmp_db_dir, monkeypatch):
+    """Pipelined groups whose ticket a later-started fsync already covered
+    skip their own fsync (wal_fsync_skips > 0 under a slow-fsync pileup)."""
+    _slow_fsync(monkeypatch, 0.01)
+    db = mk(tmp_db_dir, wal="sync", memtable_size=16 << 20, wal_pipeline_depth=8,
+            wal_pipeline_min_fill=1)  # eager handoff: force groups to stack
+    nthreads, n = 8, 25
+
+    def writer(t):
+        for i in range(n):
+            db.put(f"t{t}k{i:04d}".encode(), b"v" * 64)
+
+    try:
+        ts = [threading.Thread(target=writer, args=(t,)) for t in range(nthreads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        s = db.stats.snapshot()
+        assert s["user_writes"] == nthreads * n
+        assert s["wal_fsync_skips"] > 0, s
+        # skips never weaken durability accounting: every group either
+        # fsynced or was covered by one
+        assert s["wal_fsyncs"] + s["wal_fsync_skips"] >= s["group_commits"]
+    finally:
+        db.close()
+
+
+def test_adaptive_cap_tracks_latency_target(tmp_db_dir, monkeypatch):
+    """The latency-target controller shrinks the effective byte cap to the
+    floor under a slow fsync and grows it to the ceiling under a fast one."""
+    import repro.core.wal as wal_mod
+
+    # slow: persist EWMA far above the 4 ms default target -> floor
+    monkeypatch.setattr(wal_mod.os, "fsync", lambda fd: time.sleep(0.012))
+    db = mk(tmp_db_dir + "_slow", wal="sync", memtable_size=16 << 20)
+    try:
+        for i in range(25):
+            db.put(f"k{i:03d}".encode(), b"v" * 64)
+        g = db.stats.snapshot()["gauges"]
+        assert g["wal_group_effective_bytes"] == db.cfg.wal_group_min_bytes, g
+        assert g["wal_persist_ewma_s"] > db.cfg.wal_group_target_latency_s
+    finally:
+        db.close()
+
+    # fast: fsync is a no-op -> EWMA under target/2 -> ceiling
+    monkeypatch.setattr(wal_mod.os, "fsync", lambda fd: None)
+    db = mk(tmp_db_dir + "_fast", wal="sync", memtable_size=16 << 20)
+    try:
+        for i in range(40):
+            db.put(f"k{i:03d}".encode(), b"v" * 64)
+        g = db.stats.snapshot()["gauges"]
+        assert g["wal_group_effective_bytes"] == db.cfg.wal_group_max_bytes, g
+    finally:
+        db.close()
+
+
+def test_adaptive_disabled_uses_fixed_cap(tmp_db_dir):
+    db = mk(tmp_db_dir, wal="sync", wal_group_adaptive=False)
+    try:
+        for i in range(10):
+            db.put(f"k{i}".encode(), b"v" * 64)
+        assert "wal_group_effective_bytes" not in db.stats.snapshot()["gauges"]
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# sharded memtable apply
+# ---------------------------------------------------------------------------
+
+def test_memtable_add_group_sharded_matches_sequential():
+    """Hash-sharded group apply is bit-identical to the sequential apply,
+    including cross-batch overwrites (per-key seq order preserved)."""
+    seq_mt, sh_mt = MemTable(), MemTable()
+    applies = []
+    for b in range(5):
+        entries = [
+            (kTypeValue, f"k{(b * 31 + i) % 97:03d}".encode(), bytes([b]) * (10 + i % 7))
+            for i in range(50)
+        ]
+        applies.append((100 + b, entries))
+    seq_prevs = []
+    for seq, entries in applies:
+        seq_prevs.extend(seq_mt.add_batch(seq, entries))
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        sh_prevs = sh_mt.add_group_sharded(applies, pool, 4)
+    assert list(seq_mt.sorted_items()) == list(sh_mt.sorted_items())
+    assert seq_mt.approximate_size == sh_mt.approximate_size
+    assert sorted(seq_prevs) == sorted(sh_prevs)
+    assert (seq_mt.first_seq, seq_mt.last_seq) == (sh_mt.first_seq, sh_mt.last_seq)
+
+
+def test_db_shards_huge_group_apply(tmp_db_dir):
+    """A group over the entry threshold goes through the sharded apply and
+    stays fully readable (and durable across reopen)."""
+    db = mk(
+        tmp_db_dir, wal="sync", memtable_size=32 << 20,
+        memtable_shard_apply_entries=64, memtable_apply_shards=4,
+        value_threshold=1 << 20,
+    )
+    b = WriteBatch()
+    for i in range(500):
+        b.put(f"k{i:04d}".encode(), bytes([i % 251]) * 40)
+    try:
+        db.write(b)
+        s = db.stats.snapshot()
+        assert s["memtable_shard_applies"] >= 1
+        assert s["user_writes"] == 500
+        for i in range(0, 500, 37):
+            assert db.get(f"k{i:04d}".encode()) == bytes([i % 251]) * 40
+    finally:
+        db.close(crash=True)
+    db2 = mk(tmp_db_dir, wal="sync")
+    try:
+        for i in range(0, 500, 11):
+            assert db2.get(f"k{i:04d}".encode()) == bytes([i % 251]) * 40
+    finally:
+        db2.close()
+
+
+def test_pipelined_rotation_preserves_durability(tmp_db_dir):
+    """Tiny memtable: rotations interleave with pipelined commits; every
+    acked write must survive a crash (rotation only happens with the
+    pipeline drained, so no WAL record is stranded in a dropped file)."""
+    db = mk(tmp_db_dir, wal="sync", memtable_size=8 << 10)
+    nthreads, n = 4, 40
+    acked: dict[bytes, bytes] = {}
+    lock = threading.Lock()
+
+    def writer(t):
+        for i in range(n):
+            k, v = f"t{t}k{i:04d}".encode(), (b"%d:%d|" % (t, i)) * 40
+            db.put(k, v)
+            with lock:
+                acked[k] = v
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(nthreads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    db.close(crash=True)
+    db2 = mk(tmp_db_dir, wal="sync")
+    try:
+        for k, v in acked.items():
+            assert db2.get(k) == v, k
+    finally:
+        db2.close()
 
 
 # ---------------------------------------------------------------------------
