@@ -22,6 +22,16 @@ WAL_MODES = ["off", "async", "sync"]
 KEY_SIZE = 16
 
 
+def zipf_indices(rng, n_records: int, count: int, theta: float = 0.99) -> np.ndarray:
+    """Standard YCSB zipfian sample via rejection-free inverse CDF
+    approximation (shared by ycsb.py and readpath.py so their hot-set
+    workloads stay comparable)."""
+    ranks = np.arange(1, n_records + 1, dtype=np.float64)
+    probs = 1.0 / ranks**theta
+    probs /= probs.sum()
+    return rng.choice(n_records, size=count, p=probs)
+
+
 def make_db(system: str, wal_mode: str, workdir: str | None = None, **overrides) -> tuple[DB, str]:
     path = workdir or tempfile.mkdtemp(prefix=f"bench_{system}_{wal_mode}_")
     kw = dict(

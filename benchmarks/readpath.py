@@ -1,0 +1,230 @@
+"""Read-path micro-benchmark: shared block cache + restart-point blocks.
+
+Measures point-get and short-scan ops/s over a multi-level LSM across the
+PR-3 read-stack grid:
+
+* workload — ``uniform`` (random over the whole keyspace) vs ``zipfian``
+  (YCSB-style hot set, theta 0.99: the workload a block cache exists for),
+  plus ``scan`` (``scan(start, 10)`` from uniform-random starts);
+* cache — shared block cache on (default capacity) vs ``block_cache_bytes=0``;
+* format — SSTable block format ``v2`` (restart points, intra-block binary
+  search) vs ``v1`` (the pre-PR-3 linear-decode blocks).
+
+Each (format, cache) variant gets its own DB, filled identically (inline
+values — the bench isolates the key/metadata path from BValue separation)
+with a small memtable so the data spreads over L0/L1/L2, then compacted to
+quiescence. Measurement rounds are interleaved ACROSS variants (round-robin,
+like ``benchmarks/writepath.py``) so a slow container-I/O period hits every
+variant equally; the MEDIAN round is recorded (``--repeat N``).
+
+Emits ``BENCH_readpath.json``. Row schema (one row = one ``cells`` entry)::
+
+    workload            str    "uniform" | "zipfian" | "scan"
+    format              int    1 | 2 (sstable_format_version of the DB)
+    cache               bool   block cache enabled for this DB
+    n                   int    timed operations in the recorded round
+    seconds             float  wall time of the recorded round
+    ops_per_s           float  n / seconds
+    block_cache_hit_rate float cache hit rate at round end (0.0 cache-off)
+    block_cache_hits/misses/evictions  int  cumulative cache counters
+    samples_ops_per_s   list   every round's ops/s, ascending (median recorded)
+
+``summary`` holds the trajectory numbers:
+
+* ``zipfian_cache_speedup_v2`` — zipfian point-get ops/s, cache on ÷ off,
+  v2 blocks (the headline: the acceptance floor is 2.0);
+* ``zipfian_cache_speedup_v1`` — same on v1 blocks;
+* ``uniform_v2_over_v1_cache_off`` — uniform point-gets, v2 ÷ v1 with the
+  cache disabled (isolates restart-point binary search vs linear decode —
+  the only cells where the block format is actually in the lookup loop;
+  must be >= ~1.0);
+* ``uniform_cache_speedup_v2`` / ``scan_cache_speedup_v2`` — secondary
+  dimensions.
+
+The summary deliberately carries NO cache-on v1-vs-v2 ratio: warm cached
+blocks serve from materialized key→entry dicts, a code path identical for
+both formats, so that ratio only measures DB-instance noise (allocator
+layout, build order — empirically ±10% either way on this container). The
+raw cache-on cells stay in ``cells`` for transparency.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import DB, DBConfig
+
+from .common import zipf_indices
+
+VALUE_SIZE = 100  # inline (< value_threshold): isolates the key/block path
+KEY_FMT = "user%012d"
+
+VARIANTS = [  # (format_version, cache_enabled)
+    (2, True),
+    (2, False),
+    (1, True),
+    (1, False),
+]
+
+
+def _build_db(fmt: int, cache: bool, records: int) -> tuple[DB, str]:
+    path = tempfile.mkdtemp(prefix=f"rp_v{fmt}_{'c' if cache else 'n'}_")
+    db = DB(
+        path,
+        DBConfig(
+            separation_mode="wal",
+            wal_mode="off",  # fill speed; reads never touch the WAL
+            value_threshold=4096,
+            memtable_size=256 << 10,  # small: force rotations + compactions
+            # drain L0 completely: compaction timing is nondeterministic, and
+            # two variants ending with different L0 file counts would pay
+            # different per-get candidate/bloom costs — the grid must compare
+            # formats and caching over IDENTICAL tree shapes.
+            l0_compaction_trigger=1,
+            sstable_format_version=fmt,
+            block_cache_bytes=(8 << 20) if cache else 0,
+        ),
+    )
+    val = b"\x5a" * VALUE_SIZE
+    for i in range(records):
+        db.put((KEY_FMT % i).encode(), val)
+    db.flush()
+    db.compact_all()
+    return db, path
+
+
+def _time_gets(db: DB, keys: list[bytes]) -> float:
+    get = db.get
+    t0 = time.monotonic()
+    for k in keys:
+        if get(k) is None:
+            raise RuntimeError("benchmark key missing")
+    return time.monotonic() - t0
+
+
+def _time_scans(db: DB, starts: list[bytes], count: int) -> float:
+    scan = db.scan
+    t0 = time.monotonic()
+    for s in starts:
+        scan(s, count)
+    return time.monotonic() - t0
+
+
+def run(records: int = 8000, ops: int = 12000, scans: int = 600,
+        scan_count: int = 10, repeat: int = 3) -> dict:
+    rng = np.random.default_rng(42)
+    zipf_keys = [(KEY_FMT % i).encode() for i in zipf_indices(rng, records, ops)]
+    uni_keys = [(KEY_FMT % i).encode() for i in rng.integers(0, records, size=ops)]
+    starts = [(KEY_FMT % i).encode() for i in rng.integers(0, records, size=scans)]
+
+    dbs: dict[tuple[int, bool], tuple[DB, str]] = {}
+    cells: list[dict] = []
+    try:
+        for fmt, cache in VARIANTS:
+            dbs[(fmt, cache)] = _build_db(fmt, cache, records)
+            print(f"built v{fmt} cache={'on' if cache else 'off'}", flush=True)
+        # warm every variant identically (cache-on variants fill their LRU;
+        # cache-off variants get the page cache equally hot)
+        for db, _ in dbs.values():
+            _time_gets(db, zipf_keys[: ops // 4])
+            _time_gets(db, uni_keys[: ops // 4])
+
+        workloads = {
+            "zipfian": lambda db: (len(zipf_keys), _time_gets(db, zipf_keys)),
+            "uniform": lambda db: (len(uni_keys), _time_gets(db, uni_keys)),
+            "scan": lambda db: (len(starts), _time_scans(db, starts, scan_count)),
+        }
+        samples: dict[tuple, list[dict]] = {
+            (w, fmt, cache): [] for w in workloads for fmt, cache in VARIANTS
+        }
+        for _ in range(repeat):
+            for workload, fn in workloads.items():
+                for fmt, cache in VARIANTS:
+                    db, _ = dbs[(fmt, cache)]
+                    n, dt = fn(db)
+                    st = db.stats.snapshot()
+                    samples[(workload, fmt, cache)].append({
+                        "workload": workload,
+                        "format": fmt,
+                        "cache": cache,
+                        "n": n,
+                        "seconds": dt,
+                        "ops_per_s": n / dt,
+                        "block_cache_hit_rate": st["block_cache_hit_rate"],
+                        "block_cache_hits": st["block_cache_hits"],
+                        "block_cache_misses": st["block_cache_misses"],
+                        "block_cache_evictions": st["block_cache_evictions"],
+                    })
+        for key, rounds in samples.items():
+            ranked = sorted(rounds, key=lambda c: c["ops_per_s"])
+            cell = ranked[len(ranked) // 2]
+            cell["samples_ops_per_s"] = [round(c["ops_per_s"], 1) for c in ranked]
+            cells.append(cell)
+            workload, fmt, cache = key
+            print(
+                f"{workload:8s} v{fmt} cache={'on ' if cache else 'off'}: "
+                f"{cell['ops_per_s']:9.0f} ops/s  "
+                f"hit_rate={cell['block_cache_hit_rate']:.2f}",
+                flush=True,
+            )
+    finally:
+        for db, path in dbs.values():
+            try:
+                db.close()
+            finally:
+                shutil.rmtree(path, ignore_errors=True)
+
+    def cell(workload, fmt, cache):
+        return next(
+            c for c in cells
+            if c["workload"] == workload and c["format"] == fmt and c["cache"] == cache
+        )["ops_per_s"]
+
+    summary = {
+        "zipfian_cache_speedup_v2": cell("zipfian", 2, True) / cell("zipfian", 2, False),
+        "zipfian_cache_speedup_v1": cell("zipfian", 1, True) / cell("zipfian", 1, False),
+        "uniform_cache_speedup_v2": cell("uniform", 2, True) / cell("uniform", 2, False),
+        "uniform_v2_over_v1_cache_off": cell("uniform", 2, False) / cell("uniform", 1, False),
+        "scan_cache_speedup_v2": cell("scan", 2, True) / cell("scan", 2, False),
+    }
+    return {
+        "config": {
+            "records": records, "ops": ops, "scans": scans,
+            "scan_count": scan_count, "value_size": VALUE_SIZE, "repeat": repeat,
+        },
+        "cells": cells,
+        "summary": summary,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+
+    def positive(v: str) -> int:
+        n = int(v)
+        if n < 1:
+            raise argparse.ArgumentTypeError("must be >= 1")
+        return n
+
+    ap.add_argument("--records", type=positive, default=8000)
+    ap.add_argument("--ops", type=positive, default=12000)
+    ap.add_argument("--scans", type=positive, default=600)
+    ap.add_argument("--scan-count", type=positive, default=10)
+    ap.add_argument("--repeat", type=positive, default=3,
+                    help="median-of-N per cell, rounds interleaved across variants")
+    ap.add_argument("--out", default="BENCH_readpath.json")
+    args = ap.parse_args()
+    res = run(records=args.records, ops=args.ops, scans=args.scans,
+              scan_count=args.scan_count, repeat=args.repeat)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print("summary:", {k: round(v, 2) for k, v in res["summary"].items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,13 @@
 """Paper Fig. 8 — YCSB Workload A (50% update / 50% read, zipfian keys)
 against the three systems. Per the paper: 16 B keys, 8 KiB values,
 preloaded records; we report insert/update/read mean + p99 latencies.
+
+Read-path dimensions beyond the paper (PR 3): every variant also runs a
+short-scan phase (YCSB-E-style ``scan(start, 10)`` from zipfian starts)
+and reports the shared block-cache hit rate; the ``bvlsm-blockcache``
+variant re-runs BVLSM with ``block_cache_bytes=0`` so the block cache's
+contribution to read/scan latency is isolated the same way the BVCache
+ablation isolates big-value caching.
 """
 from __future__ import annotations
 
@@ -10,24 +17,18 @@ import time
 
 import numpy as np
 
-from .common import cleanup, gen_value, make_db
-
-
-def zipf_indices(rng, n_records: int, count: int, theta: float = 0.99) -> np.ndarray:
-    # standard YCSB zipfian via rejection-free inverse CDF approximation
-    ranks = np.arange(1, n_records + 1, dtype=np.float64)
-    probs = 1.0 / ranks**theta
-    probs /= probs.sum()
-    return rng.choice(n_records, size=count, p=probs)
+from .common import cleanup, gen_value, make_db, zipf_indices
 
 
 def run(records: int = 5000, ops: int = 4000, value_size: int = 8192,
         wal: str = "async", systems=("rocksdb", "blobdb", "bvlsm"),
-        bvcache_ablation: bool = True) -> list[dict]:
+        bvcache_ablation: bool = True, block_cache_ablation: bool = True,
+        scan_count: int = 10) -> list[dict]:
     out = []
     rng = np.random.default_rng(42)
     idx = zipf_indices(rng, records, ops)
     coins = rng.uniform(size=ops)
+    scan_idx = zipf_indices(rng, records, max(1, ops // 8))
     val = gen_value(value_size, 3)
     variants = [(s_, wal, {}) for s_ in systems]
     if bvcache_ablation:
@@ -35,8 +36,13 @@ def run(records: int = 5000, ops: int = 4000, value_size: int = 8192,
         # the cache's optimization value on recently-written reads)
         variants.append(("bvlsm_sync+cache", "sync", {}))
         variants.append(("bvlsm_sync-cache", "sync", {"bvcache_enabled": False}))
+    if block_cache_ablation:
+        # PR-3 ablation: same system, block cache off — read/scan deltas
+        # against plain "bvlsm" isolate the shared block cache
+        variants.append(("bvlsm-blockcache", wal, {"block_cache_bytes": 0}))
     for system, wal_mode, overrides in variants:
         real_system = system.split("_sync")[0] if "_sync" in system else system
+        real_system = real_system.split("-blockcache")[0]
         db, path = make_db(real_system, wal_mode, **overrides)
         try:
             ins_lat = []
@@ -60,7 +66,15 @@ def run(records: int = 5000, ops: int = 4000, value_size: int = 8192,
                     v = db.get(key)
                     read_lat.append(time.monotonic() - t0)
                     assert v is not None
+
+            scan_lat = []
+            for i in scan_idx:
+                t0 = time.monotonic()
+                got = db.scan(f"user{i:012d}".encode(), scan_count)
+                scan_lat.append(time.monotonic() - t0)
+                assert got
             cache = db.bvcache.stats()
+            st = db.stats.snapshot()
         finally:
             cleanup(db, path)
 
@@ -78,14 +92,18 @@ def run(records: int = 5000, ops: int = 4000, value_size: int = 8192,
             "update_p99_us": us(upd_lat, 99),
             "read_us": us(read_lat),
             "read_p99_us": us(read_lat, 99),
+            "scan_us": us(scan_lat),
+            "scan_p99_us": us(scan_lat, 99),
             "load_mb_s": records * value_size / 1e6 / load_s,
             "bvcache_hit_rate": cache["hit_rate"],
+            "block_cache_hit_rate": st["block_cache_hit_rate"],
         }
         out.append(rec)
         print(
-            f"ycsb-a {system:8s}: insert={rec['insert_us']:7.1f}us "
+            f"ycsb-a {system:16s}: insert={rec['insert_us']:7.1f}us "
             f"update={rec['update_us']:7.1f}us read={rec['read_us']:7.1f}us "
-            f"(p99 {rec['read_p99_us']:7.1f}us) cache_hit={cache['hit_rate']:.2f}",
+            f"(p99 {rec['read_p99_us']:7.1f}us) scan={rec['scan_us']:7.1f}us "
+            f"bvcache={cache['hit_rate']:.2f} blockcache={rec['block_cache_hit_rate']:.2f}",
             flush=True,
         )
     return out

@@ -1,0 +1,137 @@
+"""Shared LRU cache over decoded SSTable data blocks.
+
+One cache instance is owned by the DB and handed to every
+:class:`~repro.core.sstable.SSTableReader` through the
+:class:`~repro.core.manifest.VersionSet`, so foreground gets, scans, and
+compaction all read the same decoded blocks. Entries are keyed
+``(file_no, block_idx)`` and charged by decoded payload bytes
+(:attr:`Block.charge`) — the cache holds *decoded* blocks, so a hit skips
+both the pread and the decompress/trailer parse.
+
+Lock sharding: the key hash picks one of ``shards`` independent
+(lock, OrderedDict) pairs, so concurrent readers on different blocks never
+serialize on one mutex. Each shard gets ``capacity / shards`` bytes;
+eviction is plain LRU within the shard.
+
+Dropped files need no explicit invalidation: file numbers are never
+reused (``VersionSet.next_file_no`` is monotonic), so a dead file's blocks
+simply age out of the LRU order. ``evict_file`` exists to reclaim them
+eagerly after compaction unlinks an input.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+
+class _Shard:
+    __slots__ = ("lock", "map", "bytes", "capacity", "hits", "misses", "evictions")
+
+    def __init__(self, capacity: int):
+        self.lock = threading.Lock()
+        # value = [block, charged_bytes]: the charge is remembered at
+        # insert/recharge time so accounting stays exact even though a
+        # block's live charge grows when it materializes
+        self.map: OrderedDict[tuple[int, int], list] = OrderedDict()
+        self.bytes = 0
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def _evict_locked(self) -> None:
+        while self.bytes > self.capacity and self.map:
+            _, (_, charged) = self.map.popitem(last=False)
+            self.bytes -= charged
+            self.evictions += 1
+
+
+class BlockCache:
+    """Sharded LRU over decoded blocks; thread-safe; ``capacity_bytes <= 0``
+    disables caching entirely (every ``get`` misses, ``put`` is a no-op)."""
+
+    def __init__(self, capacity_bytes: int, shards: int = 8):
+        self.capacity = max(0, capacity_bytes)
+        n = max(1, shards)
+        self._shards = [_Shard(self.capacity // n) for _ in range(n)]
+        self._n = n
+
+    def _shard(self, key: tuple[int, int]) -> _Shard:
+        return self._shards[hash(key) % self._n]
+
+    def get(self, key: tuple[int, int]):
+        s = self._shard(key)
+        with s.lock:
+            ent = s.map.get(key)
+            if ent is None:
+                s.misses += 1
+                return None
+            s.map.move_to_end(key)
+            s.hits += 1
+            return ent[0]
+
+    def peek(self, key: tuple[int, int]):
+        """Read-through lookup for bypass streams (compaction): returns the
+        cached block WITHOUT promoting it to MRU and without touching the
+        hit/miss counters, so one-shot background sweeps neither reorder
+        the foreground working set nor dilute the foreground hit rate."""
+        s = self._shard(key)
+        with s.lock:
+            ent = s.map.get(key)
+            return None if ent is None else ent[0]
+
+    def put(self, key: tuple[int, int], block) -> None:
+        if self.capacity <= 0:
+            return
+        # the block will re-charge itself here when it materializes its
+        # parsed form (Block._materialize), keeping the byte budget honest
+        block._cache = self
+        block._cache_key = key
+        charge = block.charge
+        s = self._shard(key)
+        with s.lock:
+            old = s.map.pop(key, None)
+            if old is not None:
+                s.bytes -= old[1]
+            s.map[key] = [block, charge]
+            s.bytes += charge
+            s._evict_locked()
+
+    def recharge(self, key: tuple[int, int], block) -> None:
+        """Re-account one resident block whose live ``charge`` grew (it
+        materialized its parsed entries); evicts if now over budget.
+        No-op if the block was evicted or replaced in the meantime."""
+        s = self._shard(key)
+        with s.lock:
+            ent = s.map.get(key)
+            if ent is None or ent[0] is not block:
+                return
+            new = block.charge
+            s.bytes += new - ent[1]
+            ent[1] = new
+            s._evict_locked()
+
+    def evict_file(self, file_no: int) -> None:
+        """Drop every cached block of one (just-unlinked) table."""
+        for s in self._shards:
+            with s.lock:
+                dead = [k for k in s.map if k[0] == file_no]
+                for k in dead:
+                    s.bytes -= s.map.pop(k)[1]
+
+    @property
+    def size_bytes(self) -> int:
+        return sum(s.bytes for s in self._shards)
+
+    def stats(self) -> dict:
+        hits = sum(s.hits for s in self._shards)
+        misses = sum(s.misses for s in self._shards)
+        total = hits + misses
+        return {
+            "block_cache_hits": hits,
+            "block_cache_misses": misses,
+            "block_cache_evictions": sum(s.evictions for s in self._shards),
+            "block_cache_bytes": self.size_bytes,
+            "block_cache_entries": sum(len(s.map) for s in self._shards),
+            "block_cache_hit_rate": hits / total if total else 0.0,
+        }

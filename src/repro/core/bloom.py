@@ -1,6 +1,13 @@
 """Bloom filter for SSTable key lookups (Kirsch–Mitzenmacher double hashing),
 matching LevelDB's ~10 bits/key default. Serialized form:
 ``[k u8][nbits u32][bitmap bytes]``.
+
+New filters round ``nbits`` up to a power of two so every probe reduces
+with a bitmask instead of a ``%`` division (the probe loop is the hottest
+pure-Python code on a bloom-negative get). The serialized form is
+self-describing — ``nbits`` rides in the header — so filters encoded by
+older builds (arbitrary ``nbits``) still decode; ``may_contain`` falls back
+to ``%`` only for those legacy non-power-of-two sizes.
 """
 from __future__ import annotations
 
@@ -17,30 +24,41 @@ def _hash2(key: bytes) -> tuple[int, int]:
 
 
 class BloomFilter:
-    __slots__ = ("k", "nbits", "bits")
+    __slots__ = ("k", "nbits", "bits", "_mask")
 
     def __init__(self, k: int, nbits: int, bits: bytearray):
         self.k = k
         self.nbits = nbits
         self.bits = bits
+        # power-of-two sizes (every filter built by this code) probe with a
+        # mask; legacy arbitrary sizes keep the modulo path
+        self._mask = nbits - 1 if nbits & (nbits - 1) == 0 else None
 
     @classmethod
     def build(cls, keys: list[bytes], bits_per_key: int = 10) -> "BloomFilter":
         n = max(1, len(keys))
-        nbits = max(64, n * bits_per_key)
+        nbits = 1 << (max(64, n * bits_per_key) - 1).bit_length()  # next pow2
+        mask = nbits - 1
         k = max(1, min(30, int(bits_per_key * 0.69)))  # ln2 * bits/key
-        bits = bytearray((nbits + 7) // 8)
+        bits = bytearray(nbits // 8)
         for key in keys:
             h1, h2 = _hash2(key)
             for i in range(k):
-                b = (h1 + i * h2) % nbits
+                b = (h1 + i * h2) & mask
                 bits[b >> 3] |= 1 << (b & 7)
         return cls(k, nbits, bits)
 
     def may_contain(self, key: bytes) -> bool:
         h1, h2 = _hash2(key)
-        nbits = self.nbits
         bits = self.bits
+        mask = self._mask
+        if mask is not None:
+            for i in range(self.k):
+                b = (h1 + i * h2) & mask
+                if not bits[b >> 3] & (1 << (b & 7)):
+                    return False
+            return True
+        nbits = self.nbits
         for i in range(self.k):
             b = (h1 + i * h2) % nbits
             if not bits[b >> 3] & (1 << (b & 7)):

@@ -48,7 +48,10 @@ class Compactor:
         db = self.db
         cfg = db.cfg
         file_no = db.versions.new_file_no()
-        writer = SSTableWriter(table_path(db.path, file_no), cfg.block_size, cfg.compression)
+        writer = SSTableWriter(
+            table_path(db.path, file_no), cfg.block_size, cfg.compression,
+            cfg.sstable_format_version, cfg.block_restart_interval,
+        )
         n_written = 0
         for key, seq, type_, value in mem.sorted_items():
             if (
@@ -134,7 +137,14 @@ class Compactor:
         out_level = level + 1
         v = db.versions.current
         bottom = all(not v.levels[l] for l in range(out_level + 1, cfg.num_levels))
-        iters = [db.versions.reader(f.file_no) for f in inputs + overlaps]
+        # read through the shared block cache but (by default) never
+        # populate it: a one-shot merge stream would evict the foreground
+        # working set for blocks it touches exactly once.
+        fill = not cfg.block_cache_compaction_bypass
+        iters = [
+            db.versions.reader(f.file_no).iter_all(fill_cache=fill)
+            for f in inputs + overlaps
+        ]
         read_bytes = sum(f.size for f in inputs + overlaps)
 
         target = max(cfg.memtable_size, 4 << 20)
@@ -163,7 +173,8 @@ class Compactor:
             if writer is None:
                 file_no = db.versions.new_file_no()
                 writer = SSTableWriter(
-                    table_path(db.path, file_no), cfg.block_size, cfg.compression
+                    table_path(db.path, file_no), cfg.block_size, cfg.compression,
+                    cfg.sstable_format_version, cfg.block_restart_interval,
                 )
             writer.add(key, seq, type_, value)
             if writer._offset >= target:

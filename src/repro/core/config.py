@@ -81,6 +81,21 @@ class DBConfig:
     # --- sstable ---
     block_size: int = 4096
     compression: bool = False
+    # on-disk block format the WRITERS emit: 2 = restart-point blocks
+    # (intra-block binary search), 1 = the pre-restart linear format.
+    # Readers always decode both, so mixed-version DB directories are fine.
+    sstable_format_version: int = 2
+    block_restart_interval: int = 16  # entries per restart point (v2 blocks)
+    # --- shared block cache (read path) ---
+    # LRU over decoded data blocks, shared by gets/scans/compaction across
+    # every SSTable, keyed (file_no, block_idx), charged by decoded bytes.
+    # 0 disables caching entirely.
+    block_cache_bytes: int = 8 << 20
+    block_cache_shards: int = 8  # independent lock+LRU shards
+    # compaction streams read THROUGH the cache but do not populate it, so
+    # a one-shot merge can't evict the foreground working set. False lets
+    # compaction warm the cache (useful when compaction output is hot).
+    block_cache_compaction_bypass: bool = True
     # --- BValue multi-queue store (paper §III-C) ---
     num_bvalue_queues: int = 4
     bvalue_dispatch: str = "round_robin"  # round_robin | least_loaded

@@ -62,6 +62,7 @@ import threading
 import time
 from collections import deque
 
+from .blockcache import BlockCache
 from .bvalue import BValueManager
 from .bvcache import BVCache
 from .gc import BValueGC, DeadValueTracker
@@ -139,7 +140,16 @@ class DB:
         self._persist_ewma: float | None = None
         self._mt_pool = None  # lazy ThreadPoolExecutor for sharded apply
 
-        self.versions = VersionSet(path, self.cfg.num_levels)
+        # shared decoded-block cache (read path): one LRU for every SSTable
+        # reader — foreground gets, scans, and (read-through only, by
+        # default) compaction. None when disabled so readers skip lookups.
+        self.block_cache = (
+            BlockCache(self.cfg.block_cache_bytes, self.cfg.block_cache_shards)
+            if self.cfg.block_cache_bytes > 0
+            else None
+        )
+        self.stats.register_block_cache(self.block_cache)
+        self.versions = VersionSet(path, self.cfg.num_levels, self.block_cache)
         self.versions.open()
         self._seq = self.versions.last_seq
 
@@ -509,9 +519,10 @@ class DB:
     # ------------------------------------------------------------------
     def get(self, key: bytes) -> bytes | None:
         """Point lookup: newest version wins (MemTables, then L0
-        newest-first, then deeper levels); separated values resolve through
-        the BVCache / BValue store. Returns None for absent or deleted
-        keys."""
+        newest-first, then deeper levels). SSTable blocks are fetched
+        through the shared block cache before any pread; separated values
+        then resolve through the BVCache / BValue store. Returns None for
+        absent or deleted keys."""
         # lock-free against background work: the (memtables, version) pair
         # is snapshotted under the mutex, but a compaction may finish and
         # unlink this snapshot's input files while we walk it. The reader
@@ -566,6 +577,12 @@ class DB:
         Like :meth:`get`, the snapshot walk races background compaction
         (input files can vanish mid-merge); the whole scan restarts on a
         torn snapshot.
+
+        Iterator fan-out is lazy: L0 files overlap so each contributes its
+        own iterator, but every sorted level (L1+) feeds the heap merge ONE
+        concatenating iterator that binary-searches the file list and opens
+        a file only when the merge cursor actually reaches it — a short
+        scan touches O(levels) files, not O(all files).
         """
         for _attempt in range(8):
             with self.mutex:
@@ -577,9 +594,9 @@ class DB:
                     if f.largest >= start:
                         iters.append(self.versions.reader(f.file_no).iter_from(start))
                 for level in range(1, len(version.levels)):
-                    for f in version.levels[level]:
-                        if f.largest >= start:
-                            iters.append(self.versions.reader(f.file_no).iter_from(start))
+                    files = version.files_from(level, start)
+                    if files:
+                        iters.append(self._level_concat_iter(files, start))
                 out: list[tuple[bytes, bytes]] = []
                 last = None
                 for key, _seq, type_, value in _merge_iters(iters):
@@ -598,6 +615,16 @@ class DB:
                 continue  # snapshot superseded mid-scan — restart
             return out
         raise RuntimeError("scan() could not obtain a stable version snapshot")
+
+    def _level_concat_iter(self, files, start: bytes):
+        """Lazily chain one sorted level's tables: a reader is opened only
+        when the previous file is exhausted (or, for the first file, when
+        the heap merge first pulls from this level)."""
+        first = True
+        for f in files:
+            it = self.versions.reader(f.file_no).iter_from(start if first else f.smallest)
+            first = False
+            yield from it
 
     # ------------------------------------------------------------------
     # maintenance / lifecycle

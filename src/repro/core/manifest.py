@@ -41,6 +41,20 @@ class Version:
                 out.append(f)
         return out
 
+    def files_from(self, level: int, start: bytes):
+        """Files in a SORTED level (L1+) that may hold keys >= ``start``,
+        in key order — binary search for the first candidate, so a lazy
+        concatenating scan iterator does no per-file work up front."""
+        files = self.levels[level]
+        lo, hi = 0, len(files)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if files[mid].largest < start:
+                lo = mid + 1
+            else:
+                hi = mid
+        return files[lo:]
+
     def candidates_for_get(self, key: bytes):
         """Yield (level, FileMetadata) newest-first for a point lookup."""
         # L0 files may overlap — newest first (we append newest at index 0).
@@ -62,9 +76,12 @@ class Version:
 
 
 class VersionSet:
-    def __init__(self, directory: str, num_levels: int):
+    def __init__(self, directory: str, num_levels: int, block_cache=None):
         self.dir = directory
         self.num_levels = num_levels
+        # shared decoded-block cache handed to every SSTableReader (None =
+        # caching disabled); owned by the DB, shared with gets/scans/compaction
+        self.block_cache = block_cache
         self.current = Version(num_levels)
         self.last_seq = 0
         self.next_file_no = 1
@@ -132,7 +149,7 @@ class VersionSet:
             return r
         # construct OUTSIDE the lock (opens the file + loads its index);
         # on a race the loser's never-shared reader is closed immediately
-        r = SSTableReader(table_path(self.dir, file_no))
+        r = SSTableReader(table_path(self.dir, file_no), file_no, self.block_cache)
         with self._lock:
             existing = self._readers.get(file_no)
             if existing is None:
@@ -157,6 +174,10 @@ class VersionSet:
                 self._retired = self._retired[-32:]
         for r in to_close:
             r.close()
+        if self.block_cache is not None:
+            # file numbers are never reused, so stale blocks could only
+            # waste capacity — reclaim them eagerly anyway
+            self.block_cache.evict_file(file_no)
 
     def close(self) -> None:
         if self._manifest is not None:

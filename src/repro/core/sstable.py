@@ -7,16 +7,36 @@ File layout::
 * data block — entries sorted by user key:
   ``varint(klen) key varint(seq) type(1B) varint(vlen) value``;
   1-byte compression flag + optional zstd per block.
+
+  **Format v2** appends a restart-point trailer to the (pre-compression)
+  block payload: ``[u32 offset x R][u32 R]`` where each offset points at an
+  entry boundary, one per ``restart_interval`` entries. Point lookups
+  binary-search the restart array (decoding only one key per probe) and
+  then decode at most ``restart_interval`` entries — replacing v1's
+  full-block linear decode. Entries are not prefix-compressed, so every
+  restart offset is self-parseable.
 * filter block — :class:`~repro.core.bloom.BloomFilter` over user keys.
 * index block — msgpack list of ``(last_key, offset, length)``.
-* footer — fixed 40 B: filter_off, filter_len, index_off, index_len, magic.
+* footer — v1: fixed 40 B ``filter_off, filter_len, index_off, index_len,
+  magic``; v2: fixed 48 B with a ``version`` field before a new magic.
+  Readers dispatch on the trailing magic, so v1 tables written by older
+  code keep decoding forever (compat rule: readers support every version
+  ≤ FORMAT_VERSION; writers emit ``DBConfig.sstable_format_version``).
 
 Within a table every user key appears at most once (the engine has no
 snapshot support; MemTable dedups and compaction keeps the newest version),
 which keeps point lookups single-probe.
+
+Decoded blocks are wrapped in :class:`Block` objects so a shared
+:class:`~repro.core.blockcache.BlockCache` can hold them across reads: the
+first access decodes lazily (restart binary search / early-exit scan), and
+a block that is hit again — i.e. one that stayed cached — materializes a
+parsed entry list + key index once, making every later lookup a dict/bisect
+operation instead of byte parsing.
 """
 from __future__ import annotations
 
+import bisect
 import os
 import struct
 from dataclasses import dataclass
@@ -36,8 +56,14 @@ except ImportError:  # pragma: no cover - environment-dependent
 from .bloom import BloomFilter
 from .record import decode_varint, encode_varint
 
-_FOOTER = struct.Struct("<QQQQQ")
-_MAGIC = 0xB7_15_3D_CA_FE_10_57_01
+_FOOTER_V1 = struct.Struct("<QQQQQ")
+_FOOTER_V2 = struct.Struct("<QQQQQQ")
+_MAGIC_V1 = 0xB7_15_3D_CA_FE_10_57_01
+_MAGIC_V2 = 0xB7_15_3D_CA_FE_10_57_02
+_U32 = struct.Struct("<I")
+
+#: newest on-disk format this build writes (and the max it can read)
+FORMAT_VERSION = 2
 
 
 @dataclass(slots=True)
@@ -61,13 +87,25 @@ def table_path(directory: str, file_no: int) -> str:
 
 
 class SSTableWriter:
-    def __init__(self, path: str, block_size: int = 4096, compression: bool = False):
+    def __init__(
+        self,
+        path: str,
+        block_size: int = 4096,
+        compression: bool = False,
+        format_version: int = FORMAT_VERSION,
+        restart_interval: int = 16,
+    ):
+        if not 1 <= format_version <= FORMAT_VERSION:
+            raise ValueError(f"unsupported sstable format_version {format_version}")
         self.path = path
         self.block_size = block_size
         self.compression = compression
+        self.format_version = format_version
+        self.restart_interval = max(1, restart_interval)
         self._f = open(path, "wb")
         self._block: list[bytes] = []
         self._block_bytes = 0
+        self._restarts: list[int] = []
         self._index: list[tuple[bytes, int, int]] = []
         self._keys: list[bytes] = []
         self._offset = 0
@@ -90,6 +128,8 @@ class SSTableWriter:
                 value,
             )
         )
+        if len(self._block) % self.restart_interval == 0:
+            self._restarts.append(self._block_bytes)
         self._block.append(ent)
         self._block_bytes += len(ent)
         self._keys.append(key)
@@ -101,6 +141,9 @@ class SSTableWriter:
         if not self._block:
             return
         raw = b"".join(self._block)
+        if self.format_version >= 2:
+            raw += b"".join(_U32.pack(o) for o in self._restarts)
+            raw += _U32.pack(len(self._restarts))
         if self.compression and _ZCTX is not None:
             comp = _ZCTX.compress(raw)
             blob = b"\x01" + comp if len(comp) < len(raw) else b"\x00" + raw
@@ -111,6 +154,7 @@ class SSTableWriter:
         self._offset += len(blob)
         self._block = []
         self._block_bytes = 0
+        self._restarts = []
 
     def finish(self, file_no: int) -> FileMetadata:
         if self._block:
@@ -121,11 +165,20 @@ class SSTableWriter:
         index = msgpack.packb([[k, o, l] for k, o, l in self._index])
         index_off = filter_off + len(bloom)
         self._f.write(index)
-        self._f.write(_FOOTER.pack(filter_off, len(bloom), index_off, len(index), _MAGIC))
+        if self.format_version >= 2:
+            footer = _FOOTER_V2.pack(
+                filter_off, len(bloom), index_off, len(index),
+                self.format_version, _MAGIC_V2,
+            )
+        else:
+            footer = _FOOTER_V1.pack(
+                filter_off, len(bloom), index_off, len(index), _MAGIC_V1
+            )
+        self._f.write(footer)
         self._f.flush()
         os.fsync(self._f.fileno())
         self._f.close()
-        size = index_off + len(index) + _FOOTER.size
+        size = index_off + len(index) + len(footer)
         return FileMetadata(file_no, size, self.smallest or b"", self.largest or b"", self._count)
 
     def abandon(self) -> None:
@@ -133,7 +186,7 @@ class SSTableWriter:
         os.unlink(self.path)
 
 
-def _decode_block(blob: bytes) -> bytes:
+def _decompress(blob: bytes) -> bytes:
     if blob[0] == 1:
         if _DCTX is None:
             raise IOError("zstd-compressed block but the zstandard module is unavailable")
@@ -141,84 +194,261 @@ def _decode_block(blob: bytes) -> bytes:
     return blob[1:]
 
 
-def _iter_block(raw: bytes):
-    pos = 0
-    n = len(raw)
-    while pos < n:
-        klen, pos = decode_varint(raw, pos)
-        key = raw[pos : pos + klen]
-        pos += klen
-        seq, pos = decode_varint(raw, pos)
-        type_ = raw[pos]
-        pos += 1
-        vlen, pos = decode_varint(raw, pos)
-        value = raw[pos : pos + vlen]
-        pos += vlen
-        yield key, seq, type_, value
+def _parse_entry(raw: bytes, pos: int) -> tuple[bytes, int, int, bytes, int]:
+    """Decode one entry at ``pos``; returns (key, seq, type, value, next_pos)."""
+    klen, pos = decode_varint(raw, pos)
+    key = raw[pos : pos + klen]
+    pos += klen
+    seq, pos = decode_varint(raw, pos)
+    type_ = raw[pos]
+    pos += 1
+    vlen, pos = decode_varint(raw, pos)
+    value = raw[pos : pos + vlen]
+    pos += vlen
+    return key, seq, type_, value, pos
+
+
+def _entry_key(raw: bytes, pos: int) -> bytes:
+    """Decode only the user key of the entry at ``pos`` (restart probes)."""
+    klen, pos = decode_varint(raw, pos)
+    return raw[pos : pos + klen]
+
+
+class Block:
+    """One decoded data block: entry bytes plus (v2) the restart array.
+
+    Access-adaptive decoding: the first :meth:`get` stays lazy — restart
+    binary search on v2, early-exit linear scan on v1 — so one-shot reads
+    (cache disabled, compaction) never materialize anything. A second
+    ``get`` on the same object means the block survived in the cache, so it
+    pays one full parse and serves every later lookup from a key→entry dict
+    and every iteration from the parsed list.
+    """
+
+    __slots__ = (
+        "raw", "limit", "restarts", "_gets", "_entries", "_keys", "_kv",
+        "_mat_extra", "_cache", "_cache_key",
+    )
+
+    def __init__(self, blob: bytes):
+        if blob[0] > 1:  # reserved for future block encodings
+            raise IOError(f"unknown block encoding {blob[0]}")
+        raw = _decompress(blob)
+        self.restarts: tuple[int, ...] | None = None
+        self.limit = len(raw)
+        self.raw = raw
+        self._gets = 0
+        self._entries: list[tuple[bytes, int, int, bytes]] | None = None
+        self._keys: list[bytes] | None = None
+        self._kv: dict | None = None
+        self._mat_extra = 0  # extra bytes held by the materialized structures
+        self._cache = None  # set by BlockCache.put; recharged on materialize
+        self._cache_key: tuple[int, int] | None = None
+
+    @classmethod
+    def from_blob(cls, blob: bytes, version: int) -> "Block":
+        blk = cls(blob)
+        if version >= 2:
+            raw = blk.raw
+            (n_restarts,) = _U32.unpack_from(raw, len(raw) - 4)
+            trailer = 4 + 4 * n_restarts
+            blk.restarts = struct.unpack_from(f"<{n_restarts}I", raw, len(raw) - trailer)
+            blk.limit = len(raw) - trailer
+        return blk
+
+    @property
+    def charge(self) -> int:
+        """Cache accounting: decoded payload bytes + fixed object overhead,
+        plus the parsed-structure estimate once the block materializes (the
+        cache is re-charged at that point — see ``_materialize``)."""
+        return len(self.raw) + 64 + self._mat_extra
+
+    # -- point lookup ---------------------------------------------------
+    def get(self, key: bytes):
+        """Return (key, seq, type, value) or None."""
+        if self._kv is None:
+            self._gets += 1
+            if self._gets < 2:
+                return self._lazy_get(key)
+            self._materialize()
+        ent = self._kv.get(key)
+        return None if ent is None else (key, *ent)
+
+    def _lazy_get(self, key: bytes):
+        raw, limit = self.raw, self.limit
+        pos = 0
+        if self.restarts:
+            # binary search the restart array: find the LAST restart whose
+            # key is <= target; only one key is decoded per probe.
+            restarts = self.restarts
+            lo, hi = 0, len(restarts) - 1
+            while lo < hi:
+                mid = (lo + hi + 1) // 2
+                if _entry_key(raw, restarts[mid]) <= key:
+                    lo = mid
+                else:
+                    hi = mid - 1
+            pos = restarts[lo]
+        while pos < limit:
+            k, seq, type_, value, pos = _parse_entry(raw, pos)
+            if k == key:
+                return k, seq, type_, value
+            if k > key:
+                return None
+        return None
+
+    def _materialize(self) -> None:
+        entries = []
+        pos = 0
+        raw, limit = self.raw, self.limit
+        while pos < limit:
+            k, seq, type_, value, pos = _parse_entry(raw, pos)
+            entries.append((k, seq, type_, value))
+        # publication order matters: other threads gate on _kv (get) and
+        # _entries (iteration), so every side structure must be complete
+        # before EITHER gate field is assigned — _keys first, _kv next,
+        # _entries last. Each assignment publishes a fully-built object, so
+        # a concurrent reader sees either the lazy path or the fast path,
+        # never a half-built one.
+        self._keys = [e[0] for e in entries]
+        self._kv = {e[0]: (e[1], e[2], e[3]) for e in entries}
+        # parsed copies hold the key/value bytes again plus per-entry
+        # object overhead (tuple + dict/list slots)
+        self._mat_extra = sum(len(e[0]) * 2 + len(e[3]) for e in entries) + 120 * len(entries)
+        self._entries = entries
+        cache = self._cache
+        if cache is not None:
+            cache.recharge(self._cache_key, self)
+
+    # -- iteration ------------------------------------------------------
+    def __iter__(self):
+        if self._entries is not None:
+            yield from self._entries
+            return
+        pos = 0
+        raw, limit = self.raw, self.limit
+        while pos < limit:
+            k, seq, type_, value, pos = _parse_entry(raw, pos)
+            yield k, seq, type_, value
+
+    def iter_from(self, start: bytes):
+        if self._entries is not None:
+            yield from self._entries[bisect.bisect_left(self._keys, start):]
+            return
+        raw, limit = self.raw, self.limit
+        pos = 0
+        if self.restarts:
+            restarts = self.restarts
+            lo, hi = 0, len(restarts) - 1
+            while lo < hi:
+                mid = (lo + hi + 1) // 2
+                if _entry_key(raw, restarts[mid]) < start:
+                    lo = mid
+                else:
+                    hi = mid - 1
+            pos = restarts[lo]
+        while pos < limit:
+            k, seq, type_, value, pos = _parse_entry(raw, pos)
+            if k >= start:
+                yield k, seq, type_, value
 
 
 class SSTableReader:
-    def __init__(self, path: str):
+    """Random + sequential access to one table.
+
+    ``cache`` (a :class:`~repro.core.blockcache.BlockCache`) is shared
+    across every reader of a DB; blocks are keyed ``(file_no, block_idx)``.
+    ``fill_cache=False`` on the iteration APIs reads through the cache but
+    never populates it (compaction bypass — one-shot streams should not
+    evict the foreground working set).
+    """
+
+    def __init__(self, path: str, file_no: int = 0, cache=None):
         self.path = path
+        self.file_no = file_no
+        self.cache = cache
         self._f = open(path, "rb")
-        self._f.seek(-_FOOTER.size, os.SEEK_END)
-        filter_off, filter_len, index_off, index_len, magic = _FOOTER.unpack(
-            self._f.read(_FOOTER.size)
-        )
-        if magic != _MAGIC:
+        self._f.seek(0, os.SEEK_END)
+        file_size = self._f.tell()
+        tail = os.pread(self._f.fileno(), min(file_size, _FOOTER_V2.size), max(0, file_size - _FOOTER_V2.size))
+        (magic,) = struct.unpack_from("<Q", tail, len(tail) - 8)
+        if magic == _MAGIC_V1:
+            filter_off, filter_len, index_off, index_len, _ = _FOOTER_V1.unpack(
+                tail[len(tail) - _FOOTER_V1.size:]
+            )
+            self.format_version = 1
+        elif magic == _MAGIC_V2:
+            filter_off, filter_len, index_off, index_len, version, _ = _FOOTER_V2.unpack(tail)
+            if version > FORMAT_VERSION:
+                raise IOError(
+                    f"{path}: sstable format v{version} is newer than this build (v{FORMAT_VERSION})"
+                )
+            self.format_version = version
+        else:
             raise IOError(f"bad SSTable magic in {path}")
-        self._f.seek(filter_off)
-        self.bloom = BloomFilter.decode(self._f.read(filter_len))
-        self._f.seek(index_off)
+        self.bloom = BloomFilter.decode(os.pread(self._f.fileno(), filter_len, filter_off))
         self.index = [
-            (bytes(k), o, l) for k, o, l in msgpack.unpackb(self._f.read(index_len))
+            (bytes(k), o, l)
+            for k, o, l in msgpack.unpackb(os.pread(self._f.fileno(), index_len, index_off))
         ]
 
-    def _read_block(self, idx: int) -> bytes:
+    def _read_block(self, idx: int, fill_cache: bool = True) -> Block:
+        cache = self.cache
+        if cache is not None:
+            key = (self.file_no, idx)
+            # bypass streams peek: no MRU promotion, no hit/miss accounting
+            blk = cache.get(key) if fill_cache else cache.peek(key)
+            if blk is not None:
+                return blk
         _, off, length = self.index[idx]
         # positional read: one reader object is shared by foreground gets
         # and background flush/compaction iterators, and a seek+read pair
         # would interleave offsets between threads (silently decoding the
         # wrong block). pread has no cursor, so it is race-free.
-        return _decode_block(os.pread(self._f.fileno(), length, off))
+        blk = Block.from_blob(
+            os.pread(self._f.fileno(), length, off), self.format_version
+        )
+        if cache is not None and fill_cache:
+            cache.put(key, blk)
+        return blk
+
+    def _seek_block(self, key: bytes) -> int:
+        """Index of the first block whose last_key >= key (or len(index))."""
+        index = self.index
+        lo, hi = 0, len(index) - 1
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if index[mid][0] < key:
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
 
     def get(self, key: bytes):
         """Returns (found, seq, type, value)."""
         if not self.bloom.may_contain(key):
             return False, 0, 0, b""
-        lo, hi = 0, len(self.index) - 1
-        # first block whose last_key >= key
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if self.index[mid][0] < key:
-                lo = mid + 1
-            else:
-                hi = mid
+        lo = self._seek_block(key)
         if lo >= len(self.index) or self.index[lo][0] < key:
             return False, 0, 0, b""
-        for k, seq, type_, value in _iter_block(self._read_block(lo)):
-            if k == key:
-                return True, seq, type_, value
-            if k > key:
-                break
-        return False, 0, 0, b""
+        ent = self._read_block(lo).get(key)
+        if ent is None:
+            return False, 0, 0, b""
+        return True, ent[1], ent[2], ent[3]
 
     def __iter__(self):
-        for i in range(len(self.index)):
-            yield from _iter_block(self._read_block(i))
+        yield from self.iter_all()
 
-    def iter_from(self, start: bytes):
-        lo, hi = 0, len(self.index) - 1
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if self.index[mid][0] < start:
-                lo = mid + 1
-            else:
-                hi = mid
-        for i in range(lo, len(self.index)):
-            for item in _iter_block(self._read_block(i)):
-                if item[0] >= start:
-                    yield item
+    def iter_all(self, fill_cache: bool = True):
+        for i in range(len(self.index)):
+            yield from self._read_block(i, fill_cache)
+
+    def iter_from(self, start: bytes, fill_cache: bool = True):
+        lo = self._seek_block(start)
+        if lo < len(self.index):
+            yield from self._read_block(lo, fill_cache).iter_from(start)
+        for i in range(lo + 1, len(self.index)):
+            yield from self._read_block(i, fill_cache)
 
     def close(self) -> None:
         self._f.close()

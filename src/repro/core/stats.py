@@ -39,6 +39,12 @@ class EngineStats:
     * ``compaction_bytes`` / ``compaction_read_bytes`` / ``compaction_count``
     * ``group_commits`` / ``group_writers`` / ``group_entries`` — group
       commit totals; ``memtable_shard_applies`` — groups applied sharded
+    * ``block_cache_hits`` / ``block_cache_misses`` /
+      ``block_cache_evictions`` / ``block_cache_bytes`` /
+      ``block_cache_entries`` / ``block_cache_hit_rate`` — shared block
+      cache (pulled live from the registered BlockCache; all-zero when the
+      cache is disabled). Every ratio in ``snapshot()`` reads 0.0 on a
+      fresh DB rather than dividing by zero.
 
     Derived (properties, also in ``snapshot()``): ``device_bytes``,
     ``write_amp``, ``fsyncs_per_write``, ``avg_group_size``,
@@ -59,6 +65,13 @@ class EngineStats:
         self.group_size_hist: dict[int, int] = defaultdict(int)  # pow2 bucket -> count
         self.pipeline_depth_hist: dict[int, int] = defaultdict(int)  # depth -> count
         self.gauges: dict[str, float] = {}  # last-value gauges (adaptive caps, ...)
+        self._block_cache = None  # BlockCache; its counters merge into snapshot()
+
+    def register_block_cache(self, cache) -> None:
+        """Attach the DB's shared BlockCache so ``snapshot()`` carries its
+        hit/miss/eviction counters (the cache keeps them shard-local for
+        lock-free-ish reads; we pull on demand instead of pushing per-get)."""
+        self._block_cache = cache
 
     def add(self, name: str, n: int = 1) -> None:
         with self._lock:
@@ -118,6 +131,7 @@ class EngineStats:
 
     @property
     def fsyncs_per_write(self) -> float:
+        # fresh DB (zero writes) must read 0.0, never ZeroDivisionError
         writes = self.counters["user_writes"]
         syncs = self.counters["wal_fsyncs"] + self.counters["bvalue_fsyncs"]
         return syncs / writes if writes else 0.0
@@ -126,6 +140,12 @@ class EngineStats:
     def avg_group_size(self) -> float:
         groups = self.counters["group_commits"]
         return self.counters["group_writers"] / groups if groups else 0.0
+
+    @property
+    def block_cache_hit_rate(self) -> float:
+        if self._block_cache is None:
+            return 0.0
+        return self._block_cache.stats()["block_cache_hit_rate"]
 
     def interval_throughput(self, interval_s: float = 10.0) -> list[tuple[float, float]]:
         """(t_end, MB/s) per interval — the paper's 10-second instant curve."""
@@ -174,4 +194,11 @@ class EngineStats:
         d["pipeline_depth_hist"] = depth_hist
         d["pipeline_depth_max"] = max(depth_hist, default=0)
         d["gauges"] = gauges
+        if self._block_cache is not None:
+            d.update(self._block_cache.stats())
+        else:
+            d.update(
+                block_cache_hits=0, block_cache_misses=0, block_cache_evictions=0,
+                block_cache_bytes=0, block_cache_entries=0, block_cache_hit_rate=0.0,
+            )
         return d
