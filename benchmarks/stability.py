@@ -1,12 +1,31 @@
 """Paper Fig. 9 — sustained-write I/O stability.
 
-Engine layer: continuous random 4 KiB-value writes for --seconds per
-system; report per-interval instant throughput, mean, and σ (the paper's
-claim: BVLSM has the smallest σ; RocksDB oscillates with compaction; BlobDB
-collapses after its in-memory absorption phase).
+Three layers:
 
-Framework layer (the DESIGN.md §3 jitter mapping): train-step wall-time
-jitter with synchronous vs BVLSM-async checkpointing.
+* **engine** — continuous random 4 KiB-value writes for ``--seconds`` per
+  system; report per-interval instant throughput, mean, σ, cv (σ/mean) and
+  the stall tail (p99 ms) — the paper's claim: BVLSM has the smallest σ;
+  RocksDB oscillates with compaction; BlobDB collapses after its in-memory
+  absorption phase.
+* **ablation** — the background-scheduler jitter win on bvlsm: a
+  sustained (saturating) mixed-size overwrite workload over a pre-filled
+  key window (steady level structure, so σ is not inflated by the
+  empty-tree ramp) with *driver-side* interval accounting (GC-internal
+  rewrites don't masquerade as foreground throughput), run interleaved
+  with median-of-rounds cv (use odd ``--rounds``; with an even count the
+  upper median is reported), against (a) the full background
+  stack — prioritized job scheduler with parallel lock-disjoint
+  compactions, partitioned subcompactions, and the shared background-I/O
+  token bucket — vs (b) single-thread unlimited mode
+  (``background_threads=1, max_subcompactions=1, bg_io_bytes_per_sec=0``).
+  ``summary.ablation_cv_scheduled < summary.ablation_cv_unthrottled``
+  is the committed trajectory gate.
+* **ckpt** — train-step wall-time jitter with synchronous vs BVLSM-async
+  checkpointing (the DESIGN.md §3 mapping); skipped with ``--skip-ckpt``.
+
+Output (``--out``): one JSON dict ``{schema, engine, ablation, summary,
+ckpt}`` — committed as ``BENCH_stability.json`` and uploaded by CI next to
+the writepath/readpath artifacts.
 """
 from __future__ import annotations
 
@@ -19,40 +38,189 @@ import numpy as np
 from .common import cleanup, gen_value, make_db
 
 
+def _run_sustained(db, seconds: float, values, n_keys: int, interval: float,
+                   warmup: bool = False, fg_gc_every: float = 0.0,
+                   gc_threshold: float = 0.4) -> dict:
+    """Write for ``seconds`` cycling a bounded key window (sustained
+    overwrites keep compaction + value-log-GC pressure up); returns the
+    per-interval *foreground* throughput series + engine jitter counters.
+
+    ``warmup`` first writes the whole window once and quiesces, so the
+    measurement starts from a steady level structure instead of an empty
+    tree (an empty-tree ramp adds a throughput trend that inflates σ with
+    workload-independent noise).
+
+    ``fg_gc_every > 0`` reproduces the pre-scheduler reclamation story:
+    the writer itself calls ``gc_collect`` inline every that-many seconds
+    (foreground, unthrottled) — the dips it tears into the series are
+    exactly what promoting GC to a rate-limited background job removes.
+
+    The series is accounted *driver-side* (bytes the foreground writer
+    acked per interval bucket) rather than from the engine's user-bytes
+    timeline, so a background GC pass's internal rewrites don't masquerade
+    as foreground throughput."""
+    nvals = len(values)
+    if warmup:
+        for i in range(n_keys):
+            db.put(f"{i:016d}".encode(), values[i % nvals])
+        db.flush()
+        db.wait_idle()
+    t0 = time.monotonic()
+    t_end = t0 + seconds
+    buckets: dict[int, int] = {}
+    next_gc = t0 + fg_gc_every if fg_gc_every > 0 else None
+    gc_passes = 0
+    i = 0
+    now = t0
+    while now < t_end:
+        if next_gc is not None and now >= next_gc:
+            db.gc_collect(gc_threshold)  # foreground: the writer IS the GC
+            gc_passes += 1
+            next_gc = time.monotonic() + fg_gc_every
+        v = values[i % nvals]
+        db.put(f"{i % n_keys:016d}".encode(), v)
+        i += 1
+        now = time.monotonic()
+        buckets[int((now - t0) / interval)] = (
+            buckets.get(int((now - t0) / interval), 0) + 16 + len(v)
+        )
+    st = db.stats.snapshot()
+    n_full = int(seconds / interval)  # drop the trailing partial bucket
+    series = [
+        (round((b + 1) * interval, 1), round(buckets.get(b, 0) / interval / 1e6, 2))
+        for b in range(n_full)
+    ]
+    rates = np.array([r for _, r in series] or [0.0])
+    return {
+        "ops": i,
+        "gc_passes": gc_passes if fg_gc_every > 0 else st["jobs"].get("gc", {}).get("count", 0),
+        "intervals": len(rates),
+        "mean_mb_s": float(rates.mean()),
+        "std_mb_s": float(rates.std()),
+        "min_mb_s": float(rates.min()),
+        "max_mb_s": float(rates.max()),
+        "cv": float(rates.std() / rates.mean()) if rates.mean() else 0.0,
+        "stall_s": st["stall_seconds"],
+        "stall_events": st["stall_events"],
+        "stall_p99_ms": st["stall_p99_ms"],
+        "stall_stop_s": st.get("stall_stop_seconds", 0.0),
+        "stall_delay_s": st.get("stall_delay_seconds", 0.0),
+        "rate_limiter_waits": st["rate_limiter_waits"],
+        "rate_limiter_wait_s": st["rate_limiter_wait_seconds"],
+        "subcompactions": st["subcompactions"],
+        "jobs": st["jobs"],
+        "series": series,
+    }
+
+
 def engine_stability(seconds: float = 20.0, value_size: int = 4096,
                      interval: float = 1.0, systems=("rocksdb", "blobdb", "bvlsm")) -> list[dict]:
+    """The paper's three-system comparison (Fig. 9 workload: sustained
+    unique-key 4 KiB writes, async WAL)."""
     out = []
-    val = gen_value(value_size, 5)
+    vals = [gen_value(value_size, 5)]
     for system in systems:
         db, path = make_db(system, "async")
         try:
-            t_end = time.monotonic() + seconds
-            i = 0
-            while time.monotonic() < t_end:
-                db.put(f"{i:016d}".encode(), val)
-                i += 1
-            series = db.stats.interval_throughput(interval)
+            rec = _run_sustained(db, seconds, vals, n_keys=1 << 60, interval=interval)
         finally:
             cleanup(db, path)
-        rates = np.array([r for _, r in series if r > 0] or [0.0])
-        rec = {
-            "bench": "stability",
-            "system": system,
-            "intervals": len(rates),
-            "mean_mb_s": float(rates.mean()),
-            "std_mb_s": float(rates.std()),
-            "min_mb_s": float(rates.min()),
-            "max_mb_s": float(rates.max()),
-            "cv": float(rates.std() / rates.mean()) if rates.mean() else 0.0,
-            "series": [(round(t, 1), round(r, 2)) for t, r in series],
-        }
+        rec = {"bench": "stability", "system": system, **rec}
         out.append(rec)
         print(
             f"stability {system:8s}: mean={rec['mean_mb_s']:7.1f} MB/s "
             f"σ={rec['std_mb_s']:6.1f} cv={rec['cv']:.3f} "
+            f"stall_p99={rec['stall_p99_ms']:.1f}ms "
             f"[{rec['min_mb_s']:.0f}..{rec['max_mb_s']:.0f}]",
             flush=True,
         )
+    return out
+
+
+#: the two sides of the scheduler ablation. Both must reclaim the dead
+#: BValue bytes the overwrite workload produces; each uses its era's
+#: mechanism — that asymmetry (foreground unthrottled pass vs scheduled
+#: rate-limited job) is precisely the jitter lever under test, alongside
+#: parallel lock-disjoint compactions and the shared I/O token bucket.
+ABLATION_VARIANTS = {
+    # the full background stack: 2 compaction threads, partitioned
+    # subcompactions, token-bucket-limited background writes, and GC
+    # promoted to a threshold-triggered background job
+    "scheduled": dict(
+        background_threads=2,
+        max_subcompactions=2,
+        bg_io_bytes_per_sec=12 << 20,
+        gc_auto=True,
+        gc_dead_ratio_trigger=0.4,
+    ),
+    # pre-scheduler story: one background thread, unlimited I/O, GC runs
+    # foreground+unthrottled from the writer (fg_gc_every below)
+    "unthrottled": dict(
+        background_threads=1,
+        max_subcompactions=1,
+        bg_io_bytes_per_sec=0,
+        gc_auto=False,
+    ),
+}
+
+#: GC/compaction-heavy sustained-overwrite workload shared by both sides:
+#: mixed value sizes (50% 1 KiB inline / 50% 8 KiB separated) over a small
+#: key window that the run overwrites several times, with small BValue
+#: files so sealed-file dead ratios actually cross the GC trigger mid-run
+ABLATION_DB = dict(
+    memtable_size=1 << 20,
+    level1_max_bytes=4 << 20,
+    l0_compaction_trigger=4,
+    value_threshold=4096,
+    bvalue_max_file_bytes=2 << 20,
+)
+
+ABLATION_KEYS = 4000
+
+#: cadence of the baseline's foreground GC passes (seconds)
+ABLATION_FG_GC_EVERY = 5.0
+
+
+def scheduler_ablation(seconds: float = 10.0, interval: float = 1.0,
+                       rounds: int = 3) -> list[dict]:
+    """bvlsm jitter with/without the background stack, at steady state
+    (pre-filled key window). Rounds interleave the variants (A B B A ...)
+    so machine drift hits both equally; each variant's headline cv is the
+    MEDIAN across rounds (single rounds on a shared container are noisy;
+    the median is the representative one)."""
+    values = [gen_value(1 << 10, 11), gen_value(8 << 10, 13)]
+    per_variant: dict[str, list[dict]] = {name: [] for name in ABLATION_VARIANTS}
+    for r in range(rounds):
+        order = list(ABLATION_VARIANTS) if r % 2 == 0 else list(reversed(ABLATION_VARIANTS))
+        for name in order:
+            cfg = ABLATION_VARIANTS[name]
+            db, path = make_db("bvlsm", "async", **ABLATION_DB, **cfg)
+            try:
+                rec = _run_sustained(
+                    db, seconds, values, n_keys=ABLATION_KEYS, interval=interval,
+                    warmup=True,
+                    fg_gc_every=0.0 if cfg.get("gc_auto") else ABLATION_FG_GC_EVERY,
+                )
+            finally:
+                cleanup(db, path)
+            per_variant[name].append(rec)
+            print(
+                f"ablation  {name:12s} r{r}: mean={rec['mean_mb_s']:6.1f} MB/s "
+                f"cv={rec['cv']:.3f} stall_p99={rec['stall_p99_ms']:.0f}ms "
+                f"gc_passes={rec['gc_passes']} rl_waits={rec['rate_limiter_waits']} "
+                f"subcompactions={rec['subcompactions']}",
+                flush=True,
+            )
+    out = []
+    for name, recs in per_variant.items():
+        ranked = sorted(recs, key=lambda r: r["cv"])
+        median = ranked[len(ranked) // 2]
+        out.append({
+            "bench": "stability_ablation", "variant": name,
+            "config": ABLATION_VARIANTS[name], "rounds": len(recs),
+            "fg_gc_every": 0.0 if ABLATION_VARIANTS[name].get("gc_auto") else ABLATION_FG_GC_EVERY,
+            "all_cv": [round(r["cv"], 4) for r in recs], **median,
+        })
     return out
 
 
@@ -107,11 +275,39 @@ def checkpoint_jitter(steps: int = 60, ckpt_interval: int = 10) -> list[dict]:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seconds", type=float, default=20.0)
+    ap.add_argument("--interval", type=float, default=1.0)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="ablation rounds per variant (odd → true median)")
+    ap.add_argument("--skip-ckpt", action="store_true",
+                    help="engine layers only (CI smoke)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    res = engine_stability(args.seconds) + checkpoint_jitter()
+    engine = engine_stability(args.seconds, interval=args.interval)
+    ablation = scheduler_ablation(args.seconds, interval=args.interval, rounds=args.rounds)
+    by_variant = {r["variant"]: r for r in ablation}
+    summary = {
+        "bvlsm_cv": next(r["cv"] for r in engine if r["system"] == "bvlsm"),
+        "ablation_cv_scheduled": by_variant["scheduled"]["cv"],
+        "ablation_cv_unthrottled": by_variant["unthrottled"]["cv"],
+        "ablation_stall_p99_ms_scheduled": by_variant["scheduled"]["stall_p99_ms"],
+        "ablation_stall_p99_ms_unthrottled": by_variant["unthrottled"]["stall_p99_ms"],
+        "jitter_win": by_variant["scheduled"]["cv"] < by_variant["unthrottled"]["cv"],
+    }
+    print(
+        f"summary: cv scheduled={summary['ablation_cv_scheduled']:.3f} "
+        f"vs unthrottled={summary['ablation_cv_unthrottled']:.3f} "
+        f"→ jitter_win={summary['jitter_win']}",
+        flush=True,
+    )
+    res = {
+        "schema": "stability/v2",
+        "engine": engine,
+        "ablation": ablation,
+        "summary": summary,
+        "ckpt": [] if args.skip_ckpt else checkpoint_jitter(),
+    }
     if args.out:
         json.dump(res, open(args.out, "w"), indent=2)
 

@@ -1,4 +1,4 @@
-"""Flush + leveled compaction, run by a background worker thread.
+"""Flush + leveled compaction, run as jobs on the background scheduler.
 
 The write-amplification mechanics the paper targets live here: with
 ``separation_mode="none"`` every compaction rewrites full values across
@@ -6,16 +6,30 @@ levels; with ``"flush"`` (BlobDB) values leave the pipeline at flush time;
 with ``"wal"`` (BVLSM) they never enter it. All three modes share this exact
 code — the benchmark deltas isolate the separation stage.
 
-Stall behaviour mirrors RocksDB: L0 at ``slowdown_trigger`` delays writers,
-at ``stop_trigger`` blocks them — the source of the I/O jitter in the
-paper's Fig. 2/9.
+Jitter engineering (the paper's Fig. 9 claim) is layered on top:
+
+* **Lock-aware picking** — :meth:`Compactor.pick` skips files whose
+  compaction lock (see :class:`~repro.core.manifest.VersionSet`) is held by
+  a running job, so several compaction jobs proceed concurrently on
+  disjoint input sets. Levels are tried in descending score order: if the
+  hottest level is locked out, the next-most-urgent one runs instead.
+* **Partitioned subcompactions** — one level-N→N+1 compaction splits its
+  key range at input-file boundaries into up to ``max_subcompactions``
+  shards; each shard heap-merges only its range and writes its own output
+  tables. All shards commit as ONE atomic manifest edit, so a crash
+  mid-subcompaction leaves either the old file set or the new one — never
+  a mix (orphan outputs are swept on reopen).
+* **Rate-limited writes** — every flush/compaction output byte draws from
+  the DB's shared token bucket (:mod:`.ratelimiter`), flushes at high
+  priority, compactions at low, so a merge burst cannot starve foreground
+  WAL/BValue fsyncs.
 """
 from __future__ import annotations
 
 import heapq
-import threading
-import traceback
+import os
 
+from .ratelimiter import IO_CHUNK, PRI_HIGH, PRI_LOW
 from .record import ValueOffset, kTypeDeletion, kTypeValue, kTypeValuePtr
 from .sstable import SSTableWriter, table_path
 
@@ -47,12 +61,14 @@ class Compactor:
     def flush_memtable(self, mem) -> None:
         db = self.db
         cfg = db.cfg
+        limiter = db.rate_limiter
         file_no = db.versions.new_file_no()
         writer = SSTableWriter(
             table_path(db.path, file_no), cfg.block_size, cfg.compression,
             cfg.sstable_format_version, cfg.block_restart_interval,
         )
         n_written = 0
+        pending_io = 0
         for key, seq, type_, value in mem.sorted_items():
             if (
                 cfg.separation_mode == "flush"
@@ -66,6 +82,11 @@ class Compactor:
             else:
                 writer.add(key, seq, type_, value)
             n_written += 1
+            pending_io += len(key) + len(value)
+            if pending_io >= IO_CHUNK:
+                limiter.request(pending_io, PRI_HIGH)
+                pending_io = 0
+        limiter.request(pending_io, PRI_HIGH)
         if n_written == 0:
             writer.abandon()
             return
@@ -82,8 +103,6 @@ class Compactor:
         # this memtable's WAL is now redundant — delete it
         if getattr(mem, "wal_no", None) is not None:
             try:
-                import os
-
                 os.unlink(db._wal_path(mem.wal_no))
             except OSError:
                 pass
@@ -91,61 +110,217 @@ class Compactor:
     # ------------------------------------------------------------------
     # compaction picking
     # ------------------------------------------------------------------
-    def pick(self):
-        """Returns (level, [input files Ln], [input files Ln+1]) or None."""
+    def pick(self, locked=frozenset()):
+        """Returns (level, [input files Ln], [input files Ln+1]) or None,
+        never selecting a file whose compaction lock is held (``locked``).
+        Levels are tried in descending score order so a locked-out hottest
+        level doesn't block all background progress."""
         db = self.db
         cfg = db.cfg
         v = db.versions.current
-        # L0 score by file count; deeper levels by byte ratio.
-        best_level, best_score = -1, 1.0
+        scored: list[tuple[float, int]] = []
         score0 = len(v.levels[0]) / cfg.l0_compaction_trigger
-        if score0 >= best_score:
-            best_level, best_score = 0, score0
+        if score0 >= 1.0:
+            scored.append((score0, 0))
         for level in range(1, cfg.num_levels - 1):
             score = v.level_bytes(level) / cfg.level_max_bytes(level)
-            if score > best_score:
-                best_level, best_score = level, score
-        if best_level < 0:
-            return None
-        level = best_level
+            if score > 1.0:
+                scored.append((score, level))
+        scored.sort(reverse=True)
+        for _score, level in scored:
+            picked = self._pick_level(v, level, locked)
+            if picked is not None:
+                return picked
+        return None
+
+    def _pick_level(self, v, level: int, locked):
+        db = self.db
+        cfg = db.cfg
         if level == 0:
             inputs = list(v.levels[0])
-            if not inputs:
+            if not inputs or any(f.file_no in locked for f in inputs):
+                # L0 files overlap arbitrarily — at most one L0 job at a time
                 return None
             smallest = min(f.smallest for f in inputs)
             largest = max(f.largest for f in inputs)
-        else:
-            # round-robin pointer within the level (LevelDB style)
-            ptr = db.versions.compaction_ptr.get(level, b"")
-            files = v.levels[level]
-            pick_file = next((f for f in files if f.smallest > ptr), files[0])
+            overlaps = v.files_touching(1, smallest, largest)
+            if any(f.file_no in locked for f in overlaps):
+                return None
+            return 0, inputs, overlaps
+        # round-robin pointer within the level (LevelDB style), skipping
+        # files locked by running jobs. The full Ln+1 overlap set always
+        # rides along: truncating it (as the pre-scheduler code did) left
+        # the merged output overlapping the dropped files, breaking the
+        # sorted-level disjointness that point lookups binary-search on.
+        # max_compaction_input_bytes instead steers the *choice*: prefer a
+        # file whose job fits the cap, falling back to the smallest
+        # oversized one so progress is still guaranteed.
+        files = v.levels[level]
+        if not files:
+            return None
+        ptr = db.versions.compaction_ptr.get(level, b"")
+        start = next((i for i, f in enumerate(files) if f.smallest > ptr), 0)
+        fallback = None  # (total, pick_file, overlaps) of the smallest oversized job
+        for off in range(len(files)):
+            pick_file = files[(start + off) % len(files)]
+            if pick_file.file_no in locked:
+                continue
+            overlaps = v.files_touching(level + 1, pick_file.smallest, pick_file.largest)
+            if any(f.file_no in locked for f in overlaps):
+                continue
+            total = pick_file.size + sum(f.size for f in overlaps)
+            if total > cfg.max_compaction_input_bytes:
+                if fallback is None or total < fallback[0]:
+                    fallback = (total, pick_file, overlaps)
+                continue
             db.versions.compaction_ptr[level] = pick_file.smallest
-            inputs = [pick_file]
-            smallest, largest = pick_file.smallest, pick_file.largest
-        overlaps = v.files_touching(level + 1, smallest, largest)
-        total = sum(f.size for f in inputs) + sum(f.size for f in overlaps)
-        if level > 0 and total > cfg.max_compaction_input_bytes and len(overlaps) > 1:
-            overlaps = overlaps[: max(1, len(overlaps) // 2)]
-        return level, inputs, overlaps
+            return level, [pick_file], overlaps
+        if fallback is not None:
+            _total, pick_file, overlaps = fallback
+            db.versions.compaction_ptr[level] = pick_file.smallest
+            return level, [pick_file], overlaps
+        return None
 
     # ------------------------------------------------------------------
     # compaction run
     # ------------------------------------------------------------------
-    def run(self, level: int, inputs, overlaps) -> None:
+    def run(self, level: int, inputs, overlaps, subtasks=None) -> None:
+        """Merge ``inputs`` (Ln) + ``overlaps`` (Ln+1) into new Ln+1 tables
+        and commit the swap as one atomic manifest edit.
+
+        ``subtasks`` (callable: list of thunks → list of results) fans the
+        key-range shards out across the scheduler's subcompaction pool;
+        None runs them sequentially (same result, one thread)."""
         db = self.db
         cfg = db.cfg
         out_level = level + 1
         v = db.versions.current
         bottom = all(not v.levels[l] for l in range(out_level + 1, cfg.num_levels))
-        # read through the shared block cache but (by default) never
-        # populate it: a one-shot merge stream would evict the foreground
-        # working set for blocks it touches exactly once.
         fill = not cfg.block_cache_compaction_bypass
-        iters = [
-            db.versions.reader(f.file_no).iter_all(fill_cache=fill)
-            for f in inputs + overlaps
-        ]
         read_bytes = sum(f.size for f in inputs + overlaps)
+
+        bounds = self._subcompaction_bounds(inputs, overlaps, cfg.max_subcompactions)
+        ranges = list(zip([None] + bounds, bounds + [None]))
+
+        def shard_thunk(lo, hi):
+            def go():
+                try:
+                    return self._run_range(level, inputs, overlaps, lo, hi, bottom, fill), None
+                except BaseException as e:
+                    return [], e
+
+            return go
+
+        thunks = [shard_thunk(lo, hi) for lo, hi in ranges]
+        if len(thunks) == 1 or subtasks is None:
+            results = [t() for t in thunks]
+        else:
+            results = subtasks(thunks)
+            db.stats.add("subcompactions", len(thunks))
+        metas = []
+        err: BaseException | None = None
+        for shard_metas, shard_err in results:
+            metas.extend(shard_metas)
+            if shard_err is not None and err is None:
+                err = shard_err
+        if err is not None:
+            # no manifest edit happened: drop every shard's output so the
+            # live process never leaks tables (reopen would sweep them too)
+            for m in metas:
+                try:
+                    os.unlink(table_path(db.path, m.file_no))
+                except OSError:
+                    pass
+            raise err
+        metas.sort(key=lambda m: m.smallest)
+
+        written = sum(m.size for m in metas)
+        db.stats.add("compaction_bytes", written)
+        db.stats.add("compaction_read_bytes", read_bytes)
+        db.stats.add("compaction_count")
+        edit = {
+            "add": [(out_level, m.to_wire()) for m in metas],
+            "delete": [(level, f.file_no) for f in inputs]
+            + [(out_level, f.file_no) for f in overlaps],
+        }
+        db.versions.log_and_apply(edit)
+        for f in inputs + overlaps:
+            db.versions.drop_reader(f.file_no)
+            try:
+                os.unlink(table_path(db.path, f.file_no))
+            except OSError:
+                pass
+
+    def _subcompaction_bounds(self, inputs, overlaps, max_shards: int) -> list[bytes]:
+        """Choose up to ``max_shards - 1`` split keys from the input files'
+        natural boundaries, weighted by file size so shards carry roughly
+        equal bytes. When file boundaries alone can't split the range —
+        the common L0→L1 case where every L0 file spans the whole key
+        window — fall back to sampling block boundaries from the largest
+        input's index. Returns an ascending list of keys; shard i covers
+        ``[bounds[i-1], bounds[i])`` (half-open, first/last unbounded)."""
+        if max_shards <= 1:
+            return []
+        points = sorted((f.smallest, f.size) for f in inputs + overlaps)
+        total = sum(sz for _, sz in points)
+        if len(points) < 2 or total <= 0:
+            return []
+        bounds: list[bytes] = []
+        acc = 0
+        target = total / min(max_shards, len(points))
+        for key, sz in points:
+            if acc >= target * (len(bounds) + 1) and (not bounds or key > bounds[-1]):
+                bounds.append(key)
+                if len(bounds) >= max_shards - 1:
+                    break
+            acc += sz
+        if len(bounds) < max_shards - 1:
+            bounds = self._augment_bounds_from_index(
+                inputs + overlaps, bounds, max_shards
+            )
+        return bounds
+
+    def _augment_bounds_from_index(self, files, bounds: list[bytes], max_shards: int):
+        """Merge index-block boundary keys of the largest input into the
+        split set and re-pick evenly — overlapping inputs then still shard
+        into balanced ranges. Best-effort: any failure (reader gone, empty
+        index) keeps the file-boundary bounds."""
+        try:
+            big = max(files, key=lambda f: f.size)
+            index = self.db.versions.reader(big.file_no).index
+            if len(index) < 2:
+                return bounds
+            lo, hi = min(f.smallest for f in files), max(f.largest for f in files)
+            cand = sorted(
+                {k for k, _off, _len in index[:-1] if lo < k <= hi} | set(bounds)
+            )
+            if not cand:
+                return bounds
+            n = min(max_shards - 1, len(cand))
+            step = len(cand) / (n + 1)
+            picked = sorted({cand[min(len(cand) - 1, int(step * (i + 1)))] for i in range(n)})
+            return picked
+        except Exception:
+            return bounds
+
+    def _run_range(self, level, inputs, overlaps, lo, hi, bottom, fill):
+        """One subcompaction shard: merge keys in ``[lo, hi)`` (None =
+        unbounded) into fresh Ln+1 tables; returns their FileMetadata.
+        Shards touch disjoint key ranges, so per-shard version dedup and
+        dead-pointer tracking are exactly as correct as the serial merge."""
+        db = self.db
+        cfg = db.cfg
+        limiter = db.rate_limiter
+        iters = []
+        for f in inputs + overlaps:
+            if lo is not None and f.largest < lo:
+                continue
+            if hi is not None and f.smallest >= hi:
+                continue
+            r = db.versions.reader(f.file_no)
+            iters.append(
+                r.iter_from(lo, fill_cache=fill) if lo is not None else r.iter_all(fill_cache=fill)
+            )
 
         target = max(cfg.memtable_size, 4 << 20)
         writer = None
@@ -162,103 +337,46 @@ class Compactor:
                 writer = None
 
         last_key = None
-        for key, seq, type_, value in _merge_iters(iters):
-            if key == last_key:
-                if type_ == kTypeValuePtr:  # shadowed big value → dead
-                    db.dead_tracker.on_dead(ValueOffset.decode(value))
-                continue  # older version shadowed (no snapshots)
-            last_key = key
-            if type_ == kTypeDeletion and bottom:
-                continue  # tombstone reached the bottom — drop it
-            if writer is None:
-                file_no = db.versions.new_file_no()
-                writer = SSTableWriter(
-                    table_path(db.path, file_no), cfg.block_size, cfg.compression,
-                    cfg.sstable_format_version, cfg.block_restart_interval,
-                )
-            writer.add(key, seq, type_, value)
-            if writer._offset >= target:
-                roll()
-        roll()
-
-        written = sum(m.size for m in metas)
-        db.stats.add("compaction_bytes", written)
-        db.stats.add("compaction_read_bytes", read_bytes)
-        db.stats.add("compaction_count")
-        edit = {
-            "add": [(out_level, m.to_wire()) for m in metas],
-            "delete": [(level, f.file_no) for f in inputs]
-            + [(out_level, f.file_no) for f in overlaps],
-        }
-        db.versions.log_and_apply(edit)
-        for f in inputs + overlaps:
-            db.versions.drop_reader(f.file_no)
-            try:
-                import os
-
-                os.unlink(table_path(db.path, f.file_no))
-            except OSError:
-                pass
-
-
-class BackgroundWorker(threading.Thread):
-    """Single background thread servicing flushes then compactions,
-    mirroring a 1-thread RocksDB pool (container has 1 vCPU)."""
-
-    def __init__(self, db):
-        super().__init__(name="lsm-background", daemon=True)
-        self.db = db
-        self.cv = threading.Condition()
-        self._stop_requested = False
-        self.error: Exception | None = None
-        self.compactor = Compactor(db)
-
-    def signal(self) -> None:
-        with self.cv:
-            self.cv.notify()
-
-    def stop(self) -> None:
-        with self.cv:
-            self._stop_requested = True
-            self.cv.notify()
-        self.join(timeout=60)
-
-    def _work_available(self) -> bool:
-        db = self.db
-        if db.immutables:
-            return True
-        return self.compactor.pick() is not None
-
-    def run(self) -> None:
-        db = self.db
+        pending_io = 0
         try:
-            while True:
-                with self.cv:
-                    while not self._stop_requested and not self._work_available():
-                        self.cv.wait(timeout=0.2)
-                    if self._stop_requested and not self._work_available():
-                        return
-                # 1) flushes take priority (unblock writers)
-                mem = None
-                with db.mutex:
-                    if db.immutables:
-                        mem = db.immutables[0]
-                if mem is not None:
-                    self.compactor.flush_memtable(mem)
-                    with db.mutex:
-                        # crash-close may have cleared the list under us
-                        if db.immutables and db.immutables[0] is mem:
-                            db.immutables.pop(0)
-                        db.writer_cv.notify_all()
-                    continue
-                # 2) one compaction step
-                picked = self.compactor.pick()
-                if picked is not None:
-                    self.compactor.run(*picked)
-                    with db.mutex:
-                        db.writer_cv.notify_all()
-        except Exception as e:  # surface to foreground instead of dying silently
-            self.error = e
-            traceback.print_exc()
-            with db.mutex:
-                db.writer_cv.notify_all()
+            for key, seq, type_, value in _merge_iters(iters):
+                if hi is not None and key >= hi:
+                    break  # the next shard owns [hi, ...)
+                if key == last_key:
+                    if type_ == kTypeValuePtr:  # shadowed big value → dead
+                        db.dead_tracker.on_dead(ValueOffset.decode(value))
+                    continue  # older version shadowed (no snapshots)
+                last_key = key
+                if type_ == kTypeDeletion and bottom:
+                    continue  # tombstone reached the bottom — drop it
+                if writer is None:
+                    file_no = db.versions.new_file_no()
+                    writer = SSTableWriter(
+                        table_path(db.path, file_no), cfg.block_size, cfg.compression,
+                        cfg.sstable_format_version, cfg.block_restart_interval,
+                    )
+                writer.add(key, seq, type_, value)
+                pending_io += len(key) + len(value)
+                if pending_io >= IO_CHUNK:
+                    limiter.request(pending_io, PRI_LOW)
+                    pending_io = 0
+                if writer._offset >= target:
+                    roll()
+            roll()
+        except BaseException:
+            # a failed shard must not leak its outputs: abandon the
+            # in-progress writer (closes + unlinks) and drop the tables it
+            # already rolled — run() only cleans up *returned* metas
+            if writer is not None:
+                try:
+                    writer.abandon()
+                except OSError:
+                    pass
+            for m in metas:
+                try:
+                    os.unlink(table_path(db.path, m.file_no))
+                except OSError:
+                    pass
+            raise
+        limiter.request(pending_io, PRI_LOW)
+        return metas

@@ -78,6 +78,39 @@ class DBConfig:
     level1_max_bytes: int = 64 << 20
     level_size_multiplier: int = 10
     max_compaction_input_bytes: int = 256 << 20
+    # --- background job scheduler ---
+    # flush jobs run on a dedicated high-priority pool so a long compaction
+    # can never starve the flush that unblocks writers; compaction and GC
+    # jobs share the low-priority pool (its width is also the cap on
+    # concurrent compaction jobs — inputs are lock-disjoint).
+    flush_threads: int = 1
+    background_threads: int = 2
+    # one compaction splits its key range into up to this many shards, each
+    # merging + writing its own output tables; all shards commit as one
+    # atomic manifest edit. 1 disables partitioning.
+    max_subcompactions: int = 2
+    # --- background I/O rate limiter ---
+    # shared token bucket for every background byte written (compaction
+    # output, flush, GC rewrites); flushes draw at high priority. 0 =
+    # unlimited (limiter disabled, zero overhead).
+    bg_io_bytes_per_sec: int = 0
+    bg_io_refill_period_s: float = 0.005
+    # --- delayed-write controller (replaces binary slowdown stalls) ---
+    # above l0_slowdown_trigger / soft_pending_compaction_bytes, writers pay
+    # a per-byte delay at a rate that decays ×0.8 while the backlog grows
+    # and recovers ×1.25 as compaction catches up; at l0_stop_trigger /
+    # hard_pending_compaction_bytes they block outright.
+    delayed_write_rate: int = 32 << 20  # initial/max delayed rate, bytes/s
+    delayed_write_min_rate: int = 1 << 20  # decay floor
+    soft_pending_compaction_bytes: int = 64 << 20
+    hard_pending_compaction_bytes: int = 256 << 20
+    # --- background BValue GC ---
+    # when enabled, a GC pass is scheduled (low priority) as soon as a
+    # sealed BValue file's dead ratio crosses the trigger — typically right
+    # after a compaction drops superseded pointers. The manual
+    # ``DB.gc_collect`` API stays as a synchronous wrapper either way.
+    gc_auto: bool = False
+    gc_dead_ratio_trigger: float = 0.7
     # --- sstable ---
     block_size: int = 4096
     compression: bool = False

@@ -54,6 +54,12 @@ pre-pipeline one-record-one-fsync path (the benchmark baseline).
 ``EngineStats`` exposes the group-size and pipeline-depth histograms,
 ``fsyncs_per_write``, and the adaptive-cap gauges so all three
 optimizations are observable.
+
+Background work (flush, compaction, GC) runs on the prioritized job
+scheduler (:mod:`.scheduler`), with writer throttling handled by the
+continuous delayed-write controller in :meth:`DB._maybe_stall_locked` and
+background output bytes paced by the shared token bucket
+(:mod:`.ratelimiter`). See ``docs/ARCHITECTURE.md`` §"Background jobs".
 """
 from __future__ import annotations
 
@@ -65,11 +71,13 @@ from collections import deque
 from .blockcache import BlockCache
 from .bvalue import BValueManager
 from .bvcache import BVCache
-from .gc import BValueGC, DeadValueTracker
-from .compaction import BackgroundWorker, _merge_iters
+from .gc import DeadValueTracker
+from .compaction import _merge_iters
 from .config import DBConfig
 from .manifest import VersionSet
 from .memtable import MemTable
+from .ratelimiter import RateLimiter
+from .scheduler import BackgroundCoordinator, WriteController
 from .record import (
     ValueOffset,
     decode_entries,
@@ -90,11 +98,27 @@ class _Writer:
     the post-separation size — what actually lands in the WAL record — and
     is what group formation charges against ``wal_group_max_bytes``, so a
     batch of separated big values (tiny ValueOffset entries) doesn't
-    spuriously cap the group."""
+    spuriously cap the group.
 
-    __slots__ = ("entries", "count", "user_bytes", "entry_bytes", "seq", "done", "error")
+    ``precondition`` (RocksDB WriteCallback analogue) makes the commit
+    conditional: the group leader evaluates it under the DB mutex at
+    seq-assignment time and, if it fails — or an earlier batch in the same
+    group writes one of this batch's keys — the batch is emptied and acked
+    with ``skipped=True`` instead of being written. GC value rewrites use
+    this so a concurrent foreground overwrite can never be shadowed by a
+    resurrected stale value."""
 
-    def __init__(self, entries: list[tuple[int, bytes, bytes]], user_bytes: int):
+    __slots__ = (
+        "entries", "count", "user_bytes", "entry_bytes", "seq", "done", "error",
+        "precondition", "skipped",
+    )
+
+    def __init__(
+        self,
+        entries: list[tuple[int, bytes, bytes]],
+        user_bytes: int,
+        precondition=None,
+    ):
         self.entries = entries
         self.count = len(entries)
         self.user_bytes = user_bytes
@@ -102,6 +126,8 @@ class _Writer:
         self.seq = 0
         self.done = False
         self.error: BaseException | None = None
+        self.precondition = precondition
+        self.skipped = False
 
 
 class _Group:
@@ -153,6 +179,24 @@ class DB:
         self.versions.open()
         self._seq = self.versions.last_seq
 
+        # shared token bucket for ALL background writes (compaction output,
+        # flush tables, GC rewrites); rate 0 = unlimited, zero overhead
+        self.rate_limiter = RateLimiter(
+            self.cfg.bg_io_bytes_per_sec, self.cfg.bg_io_refill_period_s, stats=self.stats
+        )
+        # continuous delayed-write controller state (leader-only, under mutex).
+        # _delay_debt accumulates every published group's post-separation
+        # bytes; the next leader entering the delay region pays for ALL of
+        # it, so the aggregate ingest tracks the controller rate even though
+        # followers never lead (charging only the leader's own batch would
+        # let a group commit ~group-size times the target rate).
+        self._write_controller = WriteController(self.cfg)
+        self._delay_debt = 0
+        # GC rewrites re-enter the foreground write path from a background
+        # thread; this marker exempts them from the hard stall (they would
+        # otherwise deadlock a single-thread low pool waiting on themselves)
+        self._bg_local = threading.local()
+
         self.bvcache = BVCache(self.cfg.bvcache_bytes, self.cfg.bvcache_policy)
         self.dead_tracker = DeadValueTracker()
         self.bvalue = BValueManager(
@@ -177,9 +221,9 @@ class DB:
         self._recover()
         self._open_wal()
 
-        self.worker = BackgroundWorker(self)
-        self.worker.start()
         self._closed = False
+        self.bg = BackgroundCoordinator(self)
+        self.bg.maybe_schedule()  # recovery may have left flushable state
 
     # ------------------------------------------------------------------
     # recovery
@@ -236,7 +280,11 @@ class DB:
         if len(batch):
             self._commit(list(batch._ops))
 
-    def _commit(self, ops: list[tuple[int, bytes, bytes]]) -> None:
+    def _commit(
+        self, ops: list[tuple[int, bytes, bytes]], precondition=None
+    ) -> bool:
+        """Commit one batch; returns False iff a ``precondition`` made the
+        leader skip it (see :class:`_Writer`)."""
         cfg = self.cfg
         # --- Phase 1: WAL-time separation happens OUTSIDE the DB mutex and
         # outside the writer group: parallel callers stream values onto
@@ -275,7 +323,7 @@ class DB:
                 ops[i] = (kTypeValuePtr, key, voff.encode())
 
         # --- Phase 2: join the write group. ---
-        w = _Writer(ops, user_bytes)
+        w = _Writer(ops, user_bytes, precondition)
         with self.mutex:
             self._writers.append(w)
             if self._pending:
@@ -289,6 +337,7 @@ class DB:
                 self._lead_group_locked(w)
         if w.error is not None:
             raise w.error
+        return not w.skipped
 
     def _lead_group_locked(self, leader: _Writer) -> None:
         """Called with the mutex held by the writer at the queue head: run
@@ -301,8 +350,8 @@ class DB:
         """
         cfg = self.cfg
         try:
-            if self.worker.error is not None:
-                raise RuntimeError("background worker failed") from self.worker.error
+            if self.bg.error is not None:
+                raise RuntimeError("background job failed") from self.bg.error
             self._maybe_stall_locked()
         except BaseException as e:  # fail fast: only the leader is charged
             popped = self._writers.popleft()
@@ -346,6 +395,8 @@ class DB:
                 group.append(w)
                 n_entries += w.count
                 n_bytes += w.entry_bytes
+        if any(w.precondition is not None for w in group):
+            self._check_preconditions_locked(group)
         for w in group:
             self._seq += 1
             w.seq = self._seq
@@ -409,10 +460,21 @@ class DB:
             try:
                 total_entries = sum(w.count for w in group)
                 total_bytes = sum(w.user_bytes for w in group)
+                # post-separation bytes: what actually lands in the LSM and
+                # drives compaction debt — the delayed-write controller's
+                # currency (paid by the next leader entering the region)
+                self._delay_debt += sum(w.entry_bytes for w in group)
                 prevs = self._apply_group_locked(group, total_entries)
+                had_ptr_dead = False
                 for prev in prevs:
                     if prev[1] == kTypeValuePtr:
                         self.dead_tracker.on_dead(ValueOffset.decode(prev[2]))
+                        had_ptr_dead = True
+                if had_ptr_dead:
+                    # memtable overwrites can push a sealed BValue file past
+                    # the GC trigger with no flush/compaction edge in sight
+                    # — this is the one dead-ratio edge those hooks miss
+                    self.bg._maybe_schedule_gc()
                 self.stats.mark_user_writes(total_entries, total_bytes)
                 self.stats.record_group(len(group), total_entries)
             except BaseException as e:  # must still ack the group below, or
@@ -435,6 +497,46 @@ class DB:
             self._rotation_pending = False
             self._rotate_memtable_locked()
             self._pipeline_cv.notify_all()
+
+    def _check_preconditions_locked(self, group: list[_Writer]) -> None:
+        """Evaluate conditional batches (RocksDB WriteCallback analogue)
+        under the mutex, at seq-assignment time: any published state is
+        visible to the check, any later write gets a higher sequence and
+        legitimately supersedes. Two windows the state check can't see are
+        closed by key-collision scans: earlier batches in this very group,
+        and earlier *pipelined groups* that hold lower sequence numbers
+        but have not published to the memtable yet (``self._pending`` is
+        stable under the mutex; a group is either pending — caught here —
+        or applied — caught by the state check — never neither). A failed
+        batch is emptied and acked as skipped; any value it already
+        separated is reported dead."""
+        seen_keys: set[bytes] = {
+            k
+            for grp in self._pending
+            for w_ in grp.writers
+            for _t, k, _v in w_.entries
+        }
+        for w in group:
+            if w.precondition is not None:
+                try:
+                    ok = w.precondition() and not any(
+                        k in seen_keys for _t, k, _v in w.entries
+                    )
+                except BaseException:
+                    ok = False  # fail safe: skip, never resurrect
+                if not ok:
+                    for type_, _k, v in w.entries:
+                        if type_ == kTypeValuePtr:
+                            # the separated copy phase 1 wrote is now
+                            # unreferenced — let GC reclaim it
+                            self.dead_tracker.on_dead(ValueOffset.decode(v))
+                    w.entries = []
+                    w.count = 0
+                    w.entry_bytes = 0
+                    w.skipped = True
+                    continue
+            for _t, k, _v in w.entries:
+                seen_keys.add(k)
 
     def _apply_group_locked(self, group: list[_Writer], total_entries: int) -> list:
         """MemTable apply for one group: bulk per-batch, or hash-sharded
@@ -483,27 +585,74 @@ class DB:
         self.stats.set_gauge("wal_group_effective_bytes", self._group_cap_bytes)
         self.stats.set_gauge("wal_persist_ewma_s", self._persist_ewma)
 
-    def _maybe_stall_locked(self) -> None:
+    def _pending_compaction_bytes(self) -> int:
+        """Estimate of the compaction debt (RocksDB's
+        ``estimated_pending_compaction_bytes``): every byte above a level's
+        target plus all of L0 once it crosses the compaction trigger."""
         cfg = self.cfg
+        v = self.versions.current
+        total = 0
+        if len(v.levels[0]) >= cfg.l0_compaction_trigger:
+            total += v.level_bytes(0)
+        for level in range(1, cfg.num_levels - 1):
+            total += max(0, v.level_bytes(level) - cfg.level_max_bytes(level))
+        return total
+
+    def _maybe_stall_locked(self) -> None:
+        """Writer throttling, two regimes (called by the group leader):
+
+        * **stop** — immutables full, L0 at ``l0_stop_trigger``, or
+          compaction debt past the hard limit: block on ``writer_cv`` until
+          a background job completion clears the trigger (CV-signalled by
+          the scheduler; the timeout is only a lost-wakeup safety net).
+        * **delay** — above the soft thresholds the
+          :class:`~.scheduler.WriteController` converts the bytes committed
+          since the last controller charge (``_delay_debt`` — every
+          published group's bytes, so followers' bytes are paid for even
+          though only leaders sleep) into a sleep at the current
+          delayed-write rate, which decays while the backlog grows and
+          recovers as compaction catches up — a smooth throughput ramp
+          instead of on/off oscillation. The sleep releases the DB mutex
+          (the leader still heads the writer queue, so no second leader
+          can form), keeping reads and job-completion hooks unblocked.
+
+        Background-originated writes (GC rewrites) skip both regimes: they
+        are already rate-limited at the token bucket, and stalling them
+        could deadlock the low-priority pool against itself."""
+        cfg = self.cfg
+        if getattr(self._bg_local, "exempt", False):
+            return
         t0 = None
+        # the estimate walks every level's file list — compute it once per
+        # wakeup and reuse for both the stop condition and the controller,
+        # instead of twice per commit on the hot path
+        pending = self._pending_compaction_bytes()
         while (
             len(self.immutables) >= cfg.max_immutables
             or len(self.versions.current.levels[0]) >= cfg.l0_stop_trigger
+            or pending >= cfg.hard_pending_compaction_bytes
         ):
-            if self.worker.error is not None:
-                raise RuntimeError("background worker failed") from self.worker.error
+            if self.bg.error is not None:
+                raise RuntimeError("background job failed") from self.bg.error
             if t0 is None:
                 t0 = time.monotonic()
-            self.worker.signal()
+                self.bg.maybe_schedule()
             self.writer_cv.wait(timeout=0.05)
+            pending = self._pending_compaction_bytes()
         if t0 is not None:
-            self.stats.add_stall(time.monotonic() - t0)
-        l0 = len(self.versions.current.levels[0])
-        if l0 >= cfg.l0_slowdown_trigger:
-            # RocksDB delayed-write: back off proportionally to L0 excess.
-            delay = min(0.001 * (l0 - cfg.l0_slowdown_trigger + 1), 0.01)
-            self.stats.add_stall(delay)
-            time.sleep(delay)
+            self.stats.add_stall(time.monotonic() - t0, kind="stop")
+        delay = self._write_controller.delay_for(
+            len(self.versions.current.levels[0]), pending, max(self._delay_debt, 1)
+        )
+        self._delay_debt = 0  # charged (or the region is inactive: stale
+        # debt must not snowball into one giant first delay on entry)
+        if delay > 0:
+            self.stats.add_stall(delay, kind="delay")
+            self.mutex.release()
+            try:
+                time.sleep(delay)
+            finally:
+                self.mutex.acquire()
 
     def _rotate_memtable_locked(self) -> None:
         if self.wal is not None:
@@ -512,7 +661,7 @@ class DB:
         self.immutables.append(self.mem)
         self.mem = MemTable()
         self._open_wal()
-        self.worker.signal()
+        self.bg.maybe_schedule()  # turn the new immutable into a flush job
 
     # ------------------------------------------------------------------
     # read path
@@ -647,24 +796,18 @@ class DB:
             self.wal.flush()
 
     def wait_idle(self, compactions: bool = True, timeout: float = 120.0) -> None:
-        t0 = time.monotonic()
-        while time.monotonic() - t0 < timeout:
-            if self.worker.error is not None:
-                raise RuntimeError("background worker failed") from self.worker.error
-            with self.mutex:
-                busy = bool(self.immutables)
-            if not busy and compactions:
-                busy = self.worker.compactor.pick() is not None
-            if not busy:
-                return
-            self.worker.signal()
-            time.sleep(0.005)
-        raise TimeoutError("wait_idle timed out")
+        """Block until background work is quiescent. Signalled by the job
+        scheduler's completion CV — no sleep-polling, and no ``pick()``
+        probes while idle (the coordinator schedules exhaustively at every
+        completion edge, so idleness is a pure counter condition)."""
+        self.bg.wait_idle(compactions=compactions, timeout=timeout)
 
     def gc_collect(self, threshold: float = 0.5) -> dict:
         """Reclaim BValue files whose dead ratio ≥ threshold (beyond-paper
-        extension — see core/gc.py)."""
-        return BValueGC(self, threshold).collect()
+        extension — see core/gc.py). Synchronous wrapper over the same
+        pass the scheduler runs when ``gc_auto`` is on; a shared lock keeps
+        manual and auto GC from ever running concurrently."""
+        return self.bg.run_gc(threshold)
 
     def compact_all(self) -> None:
         """Drive compaction to quiescence (test/benchmark helper)."""
@@ -680,23 +823,18 @@ class DB:
         self._closed = True
         if not crash:
             self.bvalue.flush()
-        self.worker.stop() if not crash else self._crash_stop_worker()
+        else:
+            # crash simulation: queued flush jobs are discarded and the
+            # immutables stay unflushed — reopening recovers from the WAL
+            with self.mutex:
+                self.immutables.clear()
+        self.bg.stop(crash=crash)
         if self.wal is not None:
             self.wal.close(drop_buffered=crash)
         self.bvalue.close()
         self.versions.close()
         if self._mt_pool is not None:
             self._mt_pool.shutdown(wait=True)
-
-    def _crash_stop_worker(self) -> None:
-        # crash simulation: stop the worker without flushing memtables
-        with self.worker.cv:
-            self.worker._stop_requested = True
-            self.worker.cv.notify()
-        # prevent the "stop" path from seeing pending work
-        with self.mutex:
-            self.immutables.clear()
-        self.worker.join(timeout=30)
 
     # convenience --------------------------------------------------------
     def __enter__(self) -> "DB":

@@ -16,6 +16,13 @@ the multi-queue layout:
   re-pointed records are durable (same WAL-ordering argument as checkpoint
   commit), and a crash mid-GC leaves only duplicate live values, never
   missing ones.
+
+Scheduling: GC normally runs as a low-priority job on the background
+scheduler, triggered when a compaction pushes a sealed file past
+``DBConfig.gc_dead_ratio_trigger`` (``gc_auto``). ``DB.gc_collect`` is the
+synchronous wrapper over the same pass. Either way the rewrites draw from
+the shared background-I/O token bucket at low priority, and the pass bails
+out between files when the DB is closing.
 """
 from __future__ import annotations
 
@@ -23,7 +30,8 @@ import os
 import threading
 from collections import defaultdict
 
-from .record import ValueOffset, kTypeValuePtr
+from .ratelimiter import PRI_LOW
+from .record import ValueOffset, kTypeValue, kTypeValuePtr
 
 
 class DeadValueTracker:
@@ -73,34 +81,98 @@ class BValueGC:
         """Files still being appended to (never collect the active tail)."""
         return {q.file_id for q in self.db.bvalue.queues}
 
-    def collect(self) -> dict:
-        """One GC pass. Returns stats. Runs from the caller's thread (the
-        benchmark/TEST calls it explicitly; a deployment would hang it off
-        the background worker on a dead-ratio trigger)."""
+    def _stopping(self) -> bool:
         db = self.db
-        cands = db.dead_tracker.candidates(self.threshold, exclude=self._live_files())
-        for fid in cands:
-            moved = 0
-            # the LSM view is the truth: rewrite every live pointer into fid
-            for key, _ in db.scan(b"", 1 << 30):
-                rec = self._pointer_for(key)
-                if rec is None or rec.file_id != fid:
-                    continue
-                value = db.bvalue.get(rec)
-                db.put(key, value)  # re-separates → fresh ValueOffset
-                moved += 1
-            db.flush()
-            path = db.bvalue.file_path(fid)
-            try:
-                size = os.path.getsize(path)
-                os.unlink(path)
-            except OSError:
-                size = 0
-            db.bvalue.drop_reader(fid)
-            db.dead_tracker.forget(fid)
-            self.collected_files += 1
-            self.reclaimed_bytes += size
-            self.rewritten_values += moved
+        return db._closed or db.bg._stopping
+
+    def collect(self) -> dict:
+        """One GC pass. Returns stats. Runs from a scheduler thread
+        (``gc_auto``) or synchronously via ``DB.gc_collect``."""
+        db = self.db
+        cands = set(db.dead_tracker.candidates(self.threshold, exclude=self._live_files()))
+        if not cands or self._stopping():
+            return self._stats()
+        # ONE scan over the live key space serves every candidate file: the
+        # LSM view is the truth, so collect (key -> pointer) per candidate.
+        live_ptrs: dict[int, list[bytes]] = {fid: [] for fid in cands}
+        for n, (key, _) in enumerate(db.scan(b"", 1 << 30)):
+            if (n & 1023) == 0 and self._stopping():
+                return self._stats()  # closing: don't finish an O(DB) walk
+            rec = self._pointer_for(key)
+            if rec is not None and rec.file_id in live_ptrs:
+                live_ptrs[rec.file_id].append(key)
+        # GC rewrites re-enter the foreground put path from a background
+        # thread: exempt them from the writer stall (the token bucket below
+        # is their throttle) so they can't deadlock the low-priority pool.
+        db._bg_local.exempt = True
+        try:
+            for fid in cands:
+                if self._stopping():
+                    break
+                moved = 0
+                file_clean = True  # every live pointer provably moved out
+                for j, key in enumerate(live_ptrs[fid]):
+                    if (j & 255) == 0 and self._stopping():
+                        return self._stats()  # closing mid-file: the file
+                        # is NOT unlinked, so bailing here loses nothing
+                    # re-check: the pointer may have been superseded (or the
+                    # key deleted) since the scan — only rewrite live ones
+                    rec = self._pointer_for(key)
+                    if rec is None or rec.file_id != fid:
+                        continue
+                    value = db.bvalue.get(rec)
+                    db.rate_limiter.request(len(key) + len(value), PRI_LOW)
+
+                    # conditional re-insert (fresh ValueOffset via the
+                    # normal separation path): the commit leader re-checks
+                    # the pointer at seq-assignment time, so a concurrent
+                    # foreground overwrite of `key` can never be shadowed
+                    # by this resurrected old value
+                    def _still_current(k=key, want=rec):
+                        cur = self._pointer_for(k)
+                        return (
+                            cur is not None
+                            and cur.file_id == want.file_id
+                            and cur.offset == want.offset
+                        )
+
+                    if db._commit(
+                        [(kTypeValue, key, value)], precondition=_still_current
+                    ):
+                        moved += 1
+                        continue
+                    # skipped: a supersede is fine (the key's value lives
+                    # elsewhere now), but a precondition that merely ERRORED
+                    # leaves the pointer live in fid — unlinking then would
+                    # orphan it. Fresh offsets are never reused, so "still
+                    # points into fid" can only mean the error path.
+                    try:
+                        cur = self._pointer_for(key)
+                    except RuntimeError:
+                        cur = rec  # can't prove it moved: keep the file
+                    if cur is not None and cur.file_id == fid:
+                        file_clean = False
+                if self._stopping():
+                    break
+                if not file_clean:
+                    continue  # leave fid for a later, calmer pass
+                db.flush()
+                path = db.bvalue.file_path(fid)
+                try:
+                    size = os.path.getsize(path)
+                    os.unlink(path)
+                except OSError:
+                    size = 0
+                db.bvalue.drop_reader(fid)
+                db.dead_tracker.forget(fid)
+                self.collected_files += 1
+                self.reclaimed_bytes += size
+                self.rewritten_values += moved
+        finally:
+            db._bg_local.exempt = False
+        return self._stats()
+
+    def _stats(self) -> dict:
         return {
             "collected_files": self.collected_files,
             "reclaimed_bytes": self.reclaimed_bytes,
@@ -108,17 +180,31 @@ class BValueGC:
         }
 
     def _pointer_for(self, key: bytes) -> ValueOffset | None:
-        """Fetch the authoritative ValueOffset for `key` (or None)."""
+        """Fetch the authoritative ValueOffset for `key` (or None). Like
+        ``DB.get``, the version-snapshot walk races concurrent compaction
+        (an input table can be unlinked mid-walk) — retry on a superseded
+        snapshot instead of surfacing the torn read."""
         db = self.db
-        with db.mutex:
-            tables = [db.mem, *reversed(db.immutables)]
-            version = db.versions.current
-        for t in tables:
-            found, type_, value = t.get(key)
-            if found:
-                return ValueOffset.decode(value) if type_ == kTypeValuePtr else None
-        for _lvl, fmeta in version.candidates_for_get(key):
-            found, _seq, type_, value = db.versions.reader(fmeta.file_no).get(key)
-            if found:
-                return ValueOffset.decode(value) if type_ == kTypeValuePtr else None
-        return None
+        for _attempt in range(8):
+            with db.mutex:
+                tables = [db.mem, *reversed(db.immutables)]
+                version = db.versions.current
+            for t in tables:
+                found, type_, value = t.get(key)
+                if found:
+                    return ValueOffset.decode(value) if type_ == kTypeValuePtr else None
+            try:
+                for _lvl, fmeta in version.candidates_for_get(key):
+                    found, _seq, type_, value = db.versions.reader(fmeta.file_no).get(key)
+                    if found:
+                        return ValueOffset.decode(value) if type_ == kTypeValuePtr else None
+            except (OSError, ValueError):
+                if db.versions.current is version:
+                    raise  # stable snapshot: real I/O or corruption error
+                continue  # snapshot superseded mid-walk — take a fresh one
+            if db.versions.current is version or _attempt == 7:
+                return None
+        # every attempt died on a torn snapshot: treating that as "no live
+        # pointer" would let collect() unlink a file without rewriting this
+        # key — surface the instability instead (the pass retries later)
+        raise RuntimeError("GC could not obtain a stable version snapshot")

@@ -21,18 +21,26 @@ MANIFEST_NAME = "MANIFEST"
 class Version:
     """Immutable snapshot of the LSM level structure."""
 
-    __slots__ = ("levels",)
+    __slots__ = ("levels", "_level_bytes")
 
     def __init__(self, num_levels: int, levels=None):
         self.levels: list[list[FileMetadata]] = (
             levels if levels is not None else [[] for _ in range(num_levels)]
         )
+        self._level_bytes: list[int] | None = None
 
     def clone(self) -> "Version":
         return Version(len(self.levels), [list(lv) for lv in self.levels])
 
     def level_bytes(self, level: int) -> int:
-        return sum(f.size for f in self.levels[level])
+        # memoized on first read: a Version is immutable once installed
+        # (clones are only mutated before publication), and the write path
+        # consults level sizes on every commit — O(levels), not O(files)
+        cache = self._level_bytes
+        if cache is None:
+            cache = [sum(f.size for f in lv) for lv in self.levels]
+            self._level_bytes = cache
+        return cache[level]
 
     def files_touching(self, level: int, smallest: bytes, largest: bytes):
         out = []
@@ -91,6 +99,11 @@ class VersionSet:
         self._readers: dict[int, SSTableReader] = {}
         self._retired: list[SSTableReader] = []  # dropped, close-deferred
         self.compaction_ptr: dict[int, bytes] = {}
+        # per-file compaction locks: a file is locked from pick time until
+        # its job's manifest edit commits, so concurrent compaction jobs
+        # can never claim overlapping inputs (and a locked file is only
+        # ever deleted by the job holding its lock).
+        self._compacting: set[int] = set()
 
     # -- manifest log -----------------------------------------------------
     def _manifest_path(self) -> str:
@@ -103,7 +116,28 @@ class VersionSet:
                 buf = f.read()
             for payload in iter_framed_records(buf):
                 self._apply(msgpack.unpackb(payload))
+        self._sweep_orphans()
         self._manifest = open(path, "ab", buffering=0)
+
+    def _sweep_orphans(self) -> None:
+        """Delete .sst files not referenced by any level — the outputs of a
+        flush/compaction (or individual subcompaction shards) that crashed
+        before its atomic manifest edit. Also bumps ``next_file_no`` past
+        every on-disk table so a recovered counter can never collide."""
+        live = {f.file_no for lv in self.current.levels for f in lv}
+        for name in os.listdir(self.dir):
+            if not name.endswith(".sst"):
+                continue
+            try:
+                no = int(name[: -len(".sst")])
+            except ValueError:
+                continue
+            self.next_file_no = max(self.next_file_no, no + 1)
+            if no not in live:
+                try:
+                    os.unlink(os.path.join(self.dir, name))
+                except OSError:
+                    pass
 
     def _apply(self, edit: dict) -> None:
         v = self.current.clone()
@@ -141,6 +175,23 @@ class VersionSet:
             no = self.next_file_no
             self.next_file_no += 1
             return no
+
+    def try_lock_files(self, file_nos) -> bool:
+        """Atomically acquire the compaction lock on every file in
+        ``file_nos`` — all or nothing. Returns False if any is held."""
+        with self._lock:
+            if any(no in self._compacting for no in file_nos):
+                return False
+            self._compacting.update(file_nos)
+            return True
+
+    def unlock_files(self, file_nos) -> None:
+        with self._lock:
+            self._compacting.difference_update(file_nos)
+
+    def locked_files(self) -> set[int]:
+        with self._lock:
+            return set(self._compacting)
 
     def reader(self, file_no: int) -> SSTableReader:
         with self._lock:

@@ -1,0 +1,102 @@
+"""Shared token-bucket rate limiter for background I/O.
+
+Every background byte written — compaction output, MemTable→L0 flush, GC
+value rewrites — draws tokens from one bucket (``DBConfig.
+bg_io_bytes_per_sec``), so a compaction burst can never monopolize the
+device bandwidth the foreground WAL/BValue fsyncs need. This is the
+RocksDB ``GenericRateLimiter`` idea, simplified:
+
+* The bucket refills continuously at ``bytes_per_sec`` up to a small burst
+  allowance; a request may drive the balance negative (deficit model), in
+  which case *later* requests wait for the balance to recover — large
+  writes are never split, they just push their cost onto the next caller.
+* Two priorities: ``PRI_HIGH`` (flush — it unblocks writers, so making it
+  wait would turn background throttling into foreground stop-stalls) is
+  *accounted but never blocked*: it deducts its bytes and returns, and the
+  deficit it creates pushes back on ``PRI_LOW`` (compaction / GC), which
+  queues FIFO until the balance recovers.
+* ``bytes_per_sec == 0`` disables limiting entirely: ``request`` is a
+  no-op, so the default configuration has zero overhead.
+
+Waits are accounted to ``EngineStats`` (``rate_limiter_waits`` /
+``rate_limiter_wait_seconds``) so the stability benchmark can show how
+much background work was deferred.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+PRI_HIGH = 0  # flush: unblocks foreground writers
+PRI_LOW = 1  # compaction / GC: pure background
+
+#: background writers charge the limiter in chunks of at most this many
+#: bytes, so a single huge request can't stall the bucket for seconds
+IO_CHUNK = 256 << 10
+
+
+class RateLimiter:
+    def __init__(
+        self,
+        bytes_per_sec: int,
+        refill_period_s: float = 0.005,
+        stats=None,
+    ):
+        self.rate = int(bytes_per_sec)
+        self._period = refill_period_s
+        self._stats = stats
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._waiters: deque = deque()  # LOW requests, FIFO
+        self._available = float(max(0, self.rate) * refill_period_s)
+        self._burst = max(float(IO_CHUNK), self.rate * 0.05)
+        self._last_refill = time.monotonic()
+
+    @property
+    def enabled(self) -> bool:
+        return self.rate > 0
+
+    def request(self, nbytes: int, priority: int = PRI_LOW) -> float:
+        """Block until ``nbytes`` of background I/O budget is granted.
+
+        Returns the seconds spent waiting (0.0 on the fast path). Unlimited
+        (rate 0) or non-positive requests return immediately.
+        """
+        if self.rate <= 0 or nbytes <= 0:
+            return 0.0
+        me = object()
+        t0 = None
+        with self._cv:
+            if priority == PRI_HIGH:
+                # charge the bucket but never wait: the deficit defers
+                # queued LOW work instead of stalling the flush path
+                self._refill_locked()
+                self._available -= nbytes
+                return 0.0
+            self._waiters.append(me)
+            while True:
+                self._refill_locked()
+                if self._available > 0.0 and self._waiters[0] is me:
+                    self._available -= nbytes  # may go negative: deficit
+                    self._waiters.popleft()
+                    self._cv.notify_all()
+                    break
+                if t0 is None:
+                    t0 = time.monotonic()
+                # wake at the next refill edge (or when the head changes)
+                self._cv.wait(timeout=self._period)
+        if t0 is None:
+            return 0.0
+        waited = time.monotonic() - t0
+        if self._stats is not None:
+            self._stats.add("rate_limiter_waits")
+            self._stats.add("rate_limiter_wait_seconds", waited)
+        return waited
+
+    def _refill_locked(self) -> None:
+        now = time.monotonic()
+        dt = now - self._last_refill
+        if dt > 0:
+            self._available = min(self._burst, self._available + dt * self.rate)
+            self._last_refill = now

@@ -21,6 +21,7 @@ counts groups whose durability was covered by a later-started fsync.
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from collections import defaultdict
@@ -39,6 +40,14 @@ class EngineStats:
     * ``compaction_bytes`` / ``compaction_read_bytes`` / ``compaction_count``
     * ``group_commits`` / ``group_writers`` / ``group_entries`` — group
       commit totals; ``memtable_shard_applies`` — groups applied sharded
+    * ``job_{flush,compaction,gc}_count`` (+ the ``jobs`` table with wall
+      seconds per kind) — background scheduler jobs; ``subcompactions`` —
+      key-range shards fanned out by partitioned compactions
+    * ``rate_limiter_waits`` / ``rate_limiter_wait_seconds`` — background
+      I/O token-bucket backpressure
+    * ``stall_stop_seconds`` / ``stall_delay_seconds`` — hard stops vs
+      delayed-write-controller delays; ``stall_hist`` (pow2 ms bucket →
+      count) and ``stall_p99_ms`` — the stall tail
     * ``block_cache_hits`` / ``block_cache_misses`` /
       ``block_cache_evictions`` / ``block_cache_bytes`` /
       ``block_cache_entries`` / ``block_cache_hit_rate`` — shared block
@@ -64,6 +73,9 @@ class EngineStats:
         self.timeline: list[tuple[float, int]] = []  # (t, user_bytes_acked)
         self.group_size_hist: dict[int, int] = defaultdict(int)  # pow2 bucket -> count
         self.pipeline_depth_hist: dict[int, int] = defaultdict(int)  # depth -> count
+        self.stall_hist: dict[int, int] = defaultdict(int)  # pow2 ms bucket -> count
+        self._stall_samples: list[float] = []  # capped reservoir for p99
+        self.job_seconds: dict[str, float] = defaultdict(float)  # kind -> wall s
         self.gauges: dict[str, float] = {}  # last-value gauges (adaptive caps, ...)
         self._block_cache = None  # BlockCache; its counters merge into snapshot()
 
@@ -77,10 +89,40 @@ class EngineStats:
         with self._lock:
             self.counters[name] += n
 
-    def add_stall(self, seconds: float) -> None:
+    def add_stall(self, seconds: float, kind: str = "stall") -> None:
+        """One writer stall/delay event. ``kind`` splits hard stops from
+        controller delays (``stall_stop_seconds`` / ``stall_delay_seconds``)
+        and every event lands in the pow2-millisecond ``stall_hist`` plus a
+        capped sample reservoir feeding ``stall_p99_ms``."""
         with self._lock:
             self.stall_seconds += seconds
             self.stall_events += 1
+            self.counters[f"stall_{kind}_seconds"] += seconds
+            ms = seconds * 1e3
+            self.stall_hist[1 << max(0, int(ms).bit_length())] += 1
+            # true reservoir sample: every event over the run has equal
+            # probability of being retained, so stall_p99_ms reflects the
+            # whole run, not just its first 10k events
+            if len(self._stall_samples) < 10_000:
+                self._stall_samples.append(seconds)
+            else:
+                j = random.randrange(self.stall_events)
+                if j < 10_000:
+                    self._stall_samples[j] = seconds
+
+    def record_job(self, kind: str, seconds: float) -> None:
+        """Completion of one background job (flush/compaction/gc): counts
+        and total wall seconds per kind feed the ``jobs`` snapshot table."""
+        with self._lock:
+            self.counters[f"job_{kind}_count"] += 1
+            self.job_seconds[kind] += seconds
+
+    def stall_p99_ms(self) -> float:
+        with self._lock:
+            samples = sorted(self._stall_samples)
+        if not samples:
+            return 0.0
+        return samples[min(len(samples) - 1, int(len(samples) * 0.99))] * 1e3
 
     def mark_user_write(self, nbytes: int) -> None:
         self.mark_user_writes(1, nbytes)
@@ -170,6 +212,14 @@ class EngineStats:
             d = dict(self.counters)
             hist = dict(sorted(self.group_size_hist.items()))
             depth_hist = dict(sorted(self.pipeline_depth_hist.items()))
+            stall_hist = dict(sorted(self.stall_hist.items()))
+            jobs = {
+                kind: {
+                    "count": self.counters.get(f"job_{kind}_count", 0),
+                    "seconds": secs,
+                }
+                for kind, secs in sorted(self.job_seconds.items())
+            }
             gauges = dict(self.gauges)
         for k in (
             "wal_bytes",
@@ -193,6 +243,12 @@ class EngineStats:
         d["group_size_hist"] = hist
         d["pipeline_depth_hist"] = depth_hist
         d["pipeline_depth_max"] = max(depth_hist, default=0)
+        d["stall_hist"] = stall_hist
+        d["stall_p99_ms"] = self.stall_p99_ms()
+        d["jobs"] = jobs
+        d.setdefault("rate_limiter_waits", 0)
+        d.setdefault("rate_limiter_wait_seconds", 0.0)
+        d.setdefault("subcompactions", 0)
         d["gauges"] = gauges
         if self._block_cache is not None:
             d.update(self._block_cache.stats())

@@ -1,0 +1,515 @@
+"""Background job scheduler: parallel subcompactions, per-file compaction
+locks, crash atomicity of the single manifest edit, the shared background
+I/O rate limiter, the delayed-write controller, and auto-GC scheduling."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DB, DBConfig
+from repro.core.compaction import Compactor
+from repro.core.ratelimiter import PRI_HIGH, PRI_LOW, RateLimiter
+from repro.core.scheduler import WriteController
+from repro.core.sstable import FileMetadata
+
+
+def _db(tmp, **kw):
+    cfg = dict(
+        separation_mode="wal",
+        wal_mode="sync",
+        memtable_size=64 << 10,
+        value_threshold=4096,
+        level1_max_bytes=128 << 10,
+        l0_compaction_trigger=2,
+        max_subcompactions=3,
+        background_threads=2,
+    )
+    cfg.update(kw)
+    return DB(tmp, DBConfig(**cfg))
+
+
+def _fill(db, n, value_size=512, seed=0, prefix="k"):
+    rng = np.random.default_rng(seed)
+    vals = {}
+    for i in range(n):
+        k = f"{prefix}{i:06d}".encode()
+        v = rng.bytes(value_size)
+        db.put(k, v)
+        vals[k] = v
+    return vals
+
+
+def _sst_files(path):
+    return {int(f[:-4]) for f in os.listdir(path) if f.endswith(".sst")}
+
+
+# ---------------------------------------------------------------------------
+# parallel subcompactions
+# ---------------------------------------------------------------------------
+def test_subcompactions_split_and_preserve_reads(tmp_db_dir):
+    db = _db(tmp_db_dir)
+    try:
+        vals = _fill(db, 1500, value_size=512)
+        vals.update(_fill(db, 1500, value_size=512, seed=1))  # overwrite all
+        db.flush()
+        db.compact_all()
+        st = db.stats.snapshot()
+        assert st["compaction_count"] >= 1
+        # the workload spans many input files, so at least one compaction
+        # must have fanned out into range shards
+        assert st["subcompactions"] >= 2, st["subcompactions"]
+        for k, v in vals.items():
+            assert db.get(k) == v, k
+        # merged view stays sorted and deduped across shard boundaries
+        out = db.scan(b"", 5000)
+        keys = [k for k, _ in out]
+        assert keys == sorted(set(keys))
+        assert len(keys) == 1500
+    finally:
+        db.close()
+
+
+def test_subcompaction_bounds_partition_key_space():
+    class _FakeDB:
+        pass
+
+    comp = Compactor(_FakeDB())
+    files = [
+        FileMetadata(i, 1000, f"{i:02d}a".encode(), f"{i:02d}z".encode(), 10)
+        for i in range(8)
+    ]
+    bounds = comp._subcompaction_bounds(files[:2], files[2:], 4)
+    assert 1 <= len(bounds) <= 3
+    assert bounds == sorted(bounds)
+    assert len(set(bounds)) == len(bounds)
+    # every bound is a real file boundary inside the key span
+    starts = {f.smallest for f in files}
+    assert all(b in starts for b in bounds)
+    assert comp._subcompaction_bounds(files[:1], [], 4) == []  # single file
+    assert comp._subcompaction_bounds(files[:2], files[2:], 1) == []  # disabled
+
+
+# ---------------------------------------------------------------------------
+# per-file compaction locks / concurrent jobs
+# ---------------------------------------------------------------------------
+def test_concurrent_compaction_inputs_never_overlap(tmp_db_dir):
+    db = _db(tmp_db_dir, background_threads=3, memtable_size=32 << 10)
+    inflight: set[int] = set()
+    overlap_errors: list[str] = []
+    lock = threading.Lock()
+    real_run = Compactor.run
+
+    def spying_run(self, level, inputs, overlaps, subtasks=None):
+        nos = {f.file_no for f in inputs + overlaps}
+        with lock:
+            if inflight & nos:
+                overlap_errors.append(f"overlap: {inflight & nos}")
+            inflight.update(nos)
+        try:
+            return real_run(self, level, inputs, overlaps, subtasks=subtasks)
+        finally:
+            with lock:
+                inflight.difference_update(nos)
+
+    Compactor.run = spying_run
+    try:
+        for round_ in range(3):
+            _fill(db, 1200, value_size=256, seed=round_)
+            db.flush()
+        db.compact_all()
+        assert not overlap_errors, overlap_errors
+        assert db.stats.snapshot()["compaction_count"] >= 2
+    finally:
+        Compactor.run = real_run
+        db.close()
+
+
+def test_pick_skips_locked_files(tmp_db_dir):
+    # trigger=100 keeps the event-driven scheduler from compacting L0 away
+    # while we fill; lowering it afterwards makes the files pickable
+    db = _db(tmp_db_dir, l0_compaction_trigger=100)
+    try:
+        _fill(db, 600, value_size=512)
+        db.flush()  # several L0 files exist
+        db.cfg.l0_compaction_trigger = 2
+        comp = db.bg.compactor
+        picked = comp.pick(db.versions.locked_files())
+        assert picked is not None
+        level, inputs, overlaps = picked
+        nos = [f.file_no for f in inputs + overlaps]
+        assert db.versions.try_lock_files(nos)
+        # all of L0 is locked now: no second L0 job may form, and the lock
+        # acquisition itself is all-or-nothing
+        assert comp.pick(db.versions.locked_files()) is None
+        assert not db.versions.try_lock_files([nos[0]])
+        db.versions.unlock_files(nos)
+        assert comp.pick(db.versions.locked_files()) is not None
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# crash atomicity
+# ---------------------------------------------------------------------------
+def test_crash_mid_subcompaction_keeps_manifest_atomic(tmp_db_dir):
+    # hold compaction off (trigger=100) until the failure hook is armed
+    db = _db(tmp_db_dir, l0_compaction_trigger=100)
+    vals = _fill(db, 1200, value_size=512)
+    db.flush()
+    tables_before = _sst_files(tmp_db_dir)
+    assert len(tables_before) >= 2
+
+    real_range = Compactor._run_range
+    fail = {"armed": True}
+
+    def failing_range(self, level, inputs, overlaps, lo, hi, bottom, fill):
+        if fail["armed"] and lo is not None:  # die in a non-first shard
+            raise RuntimeError("injected subcompaction crash")
+        return real_range(self, level, inputs, overlaps, lo, hi, bottom, fill)
+
+    Compactor._run_range = failing_range
+    try:
+        db.cfg.l0_compaction_trigger = 2
+        with pytest.raises((TimeoutError, RuntimeError)):
+            db.compact_all()  # surfaces the background job error
+    finally:
+        Compactor._run_range = real_range
+        fail["armed"] = False
+        db.close(crash=True)
+
+    # the failed compaction must not have touched the manifest, and the
+    # reopen sweep must leave a consistent directory: every referenced
+    # table present, every orphan shard output gone
+    db2 = _db(tmp_db_dir, l0_compaction_trigger=100)
+    try:
+        live = {f.file_no for lv in db2.versions.current.levels for f in lv}
+        on_disk = _sst_files(tmp_db_dir)
+        assert live == on_disk, (live, on_disk)
+        assert live == tables_before, (live, tables_before)
+        for k, v in vals.items():
+            assert db2.get(k) == v, k
+        db2.cfg.l0_compaction_trigger = 2
+        db2.compact_all()  # and compaction completes cleanly afterwards
+        for k, v in vals.items():
+            assert db2.get(k) == v, k
+    finally:
+        db2.close()
+
+
+def test_orphan_sstables_swept_on_open(tmp_db_dir):
+    db = _db(tmp_db_dir)
+    vals = _fill(db, 200, value_size=512)
+    db.flush()
+    db.close()
+    orphan = os.path.join(tmp_db_dir, "999123.sst")
+    with open(orphan, "wb") as f:
+        f.write(b"half-written subcompaction output")
+    db2 = _db(tmp_db_dir)
+    try:
+        assert not os.path.exists(orphan)
+        # the swept number can never be reissued and collide
+        assert db2.versions.next_file_no > 999123
+        for k, v in vals.items():
+            assert db2.get(k) == v, k
+    finally:
+        db2.close()
+
+
+# ---------------------------------------------------------------------------
+# condition-variable idle signalling
+# ---------------------------------------------------------------------------
+def test_wait_idle_returns_promptly_and_quiesces(tmp_db_dir):
+    db = _db(tmp_db_dir)
+    try:
+        _fill(db, 800, value_size=512)
+        db.flush()
+        db.compact_all()
+        with db.mutex:
+            assert not db.immutables
+        assert db.bg.sched.outstanding() == 0
+        assert db.bg.compactor.pick(db.versions.locked_files()) is None
+        # an idle DB answers wait_idle in CV time, not poll time
+        t0 = time.monotonic()
+        for _ in range(20):
+            db.wait_idle()
+        assert time.monotonic() - t0 < 1.0
+    finally:
+        db.close()
+
+
+def test_background_error_surfaces_to_writers(tmp_db_dir):
+    db = _db(tmp_db_dir)
+    real_flush = Compactor.flush_memtable
+    Compactor.flush_memtable = lambda self, mem: (_ for _ in ()).throw(
+        RuntimeError("injected flush failure")
+    )
+    try:
+        with pytest.raises(RuntimeError):
+            _fill(db, 4000, value_size=512)  # rotation → failing flush job
+            db.wait_idle(timeout=10)
+    finally:
+        Compactor.flush_memtable = real_flush
+        db.close(crash=True)
+
+
+# ---------------------------------------------------------------------------
+# rate limiter
+# ---------------------------------------------------------------------------
+def test_rate_limiter_paces_throughput():
+    rl = RateLimiter(1 << 20, refill_period_s=0.002)  # 1 MiB/s
+    t0 = time.monotonic()
+    for _ in range(4):
+        rl.request(128 << 10, PRI_LOW)  # 512 KiB total ≈ 0.5 s
+    dt = time.monotonic() - t0
+    assert 0.25 <= dt <= 2.0, dt
+
+
+def test_rate_limiter_disabled_is_free():
+    rl = RateLimiter(0)
+    t0 = time.monotonic()
+    for _ in range(10_000):
+        rl.request(1 << 20, PRI_LOW)
+    assert time.monotonic() - t0 < 0.5
+
+
+def test_rate_limiter_high_priority_served_first():
+    rl = RateLimiter(256 << 10, refill_period_s=0.002)  # slow: 256 KiB/s
+    order: list[str] = []
+    rl.request(128 << 10, PRI_LOW)  # drain the bucket into deficit
+    low = threading.Thread(
+        target=lambda: (rl.request(64 << 10, PRI_LOW), order.append("low"))
+    )
+    low.start()
+    time.sleep(0.05)  # LOW is queued and waiting on the deficit
+    high = threading.Thread(
+        target=lambda: (rl.request(64 << 10, PRI_HIGH), order.append("high"))
+    )
+    high.start()
+    low.join(timeout=10)
+    high.join(timeout=10)
+    assert order and order[0] == "high", order
+
+
+def test_compaction_draws_from_limiter(tmp_db_dir):
+    from repro.core.ratelimiter import PRI_HIGH as _HI
+
+    # trigger=100 holds compaction until the deficit below is in place
+    db = _db(tmp_db_dir, bg_io_bytes_per_sec=1 << 20, l0_compaction_trigger=100)
+    try:
+        _fill(db, 1000, value_size=512)
+        db.flush()
+        # drive the bucket into a deterministic deficit (HIGH charges are
+        # accounted but never block); the compaction's LOW requests must
+        # then wait for the refill regardless of machine speed
+        db.rate_limiter.request(2 << 20, _HI)
+        db.cfg.l0_compaction_trigger = 2
+        db.compact_all()
+        st = db.stats.snapshot()
+        assert st["rate_limiter_waits"] >= 1, st["rate_limiter_waits"]
+        assert st["rate_limiter_wait_seconds"] > 0
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# delayed-write controller
+# ---------------------------------------------------------------------------
+def test_write_controller_ramps_and_recovers():
+    cfg = DBConfig()
+    wc = WriteController(cfg)
+    # below the slowdown region: free
+    assert wc.delay_for(cfg.l0_slowdown_trigger - 1, 0, 1 << 20) == 0.0
+    # entering the region: delay at the full delayed rate
+    d0 = wc.delay_for(cfg.l0_slowdown_trigger, 0, 1 << 20)
+    assert d0 == pytest.approx((1 << 20) / cfg.delayed_write_rate)
+    # backlog worsening: rate decays, delay grows monotonically
+    d1 = wc.delay_for(cfg.l0_slowdown_trigger + 1, 0, 1 << 20)
+    d2 = wc.delay_for(cfg.l0_slowdown_trigger + 2, 0, 1 << 20)
+    assert d2 > d1 > d0
+    # unchanged backlog = sustained pressure: the rate HOLDS (recovering
+    # between flush edges would reintroduce the on/off oscillation)
+    d2b = wc.delay_for(cfg.l0_slowdown_trigger + 2, 0, 1 << 20)
+    assert d2b == pytest.approx(d2)
+    # improving: rate recovers, delay shrinks
+    d3 = wc.delay_for(cfg.l0_slowdown_trigger, 0, 1 << 20)
+    assert d3 < d2
+    # leaving the region resets to free
+    assert wc.delay_for(0, 0, 1 << 20) == 0.0
+    # delay is charged per byte
+    wc2 = WriteController(cfg)
+    small = wc2.delay_for(cfg.l0_slowdown_trigger, 0, 4 << 10)
+    assert small < d0
+
+
+def test_writers_record_smooth_delays_not_just_stops(tmp_db_dir):
+    # slowdown=1 < compaction trigger=2: after the first flush, L0 holds a
+    # file that no compaction will clear, so every commit sits in the
+    # delay region — deterministic controller engagement, no stop stalls
+    db = _db(
+        tmp_db_dir,
+        memtable_size=16 << 10,
+        l0_compaction_trigger=2,
+        l0_slowdown_trigger=1,
+        l0_stop_trigger=20,
+        delayed_write_rate=4 << 20,
+    )
+    try:
+        _fill(db, 400, value_size=256)
+        st = db.stats.snapshot()
+        assert st.get("stall_delay_seconds", 0) > 0, st
+        assert st["stall_hist"], st
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# auto-GC scheduling
+# ---------------------------------------------------------------------------
+def test_auto_gc_triggers_after_compaction(tmp_db_dir):
+    db = _db(
+        tmp_db_dir,
+        value_threshold=512,
+        bvalue_max_file_bytes=32 << 10,
+        gc_auto=True,
+        gc_dead_ratio_trigger=0.4,
+    )
+    try:
+        vals = {}
+        rng = np.random.default_rng(0)
+        for _round in range(3):  # supersede everything repeatedly
+            for i in range(120):
+                k = f"k{i:04d}".encode()
+                v = rng.bytes(2048)
+                db.put(k, v)
+                vals[k] = v
+        db.flush()
+        db.compact_all()  # drops dead pointers → dead ratios rise → GC job
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            if db.stats.snapshot()["job_gc_count"] >= 1:
+                break
+            db.wait_idle()
+            time.sleep(0.01)
+        st = db.stats.snapshot()
+        assert st["job_gc_count"] >= 1, st
+        for k, v in vals.items():
+            assert db.get(k) == v, k
+    finally:
+        db.close()
+
+
+def test_pick_never_truncates_overlaps(tmp_db_dir):
+    db = _db(tmp_db_dir)
+    try:
+        _fill(db, 1500, value_size=512)
+        db.flush()
+        db.compact_all()  # builds a multi-level structure
+        v = db.versions.current
+        level = next(
+            (l for l in range(1, len(v.levels) - 1) if v.levels[l] and v.levels[l + 1]),
+            None,
+        )
+        assert level is not None, [len(lv) for lv in v.levels]
+        # an absurdly small cap must steer the pick, never shrink the
+        # overlap set — a truncated set would leave the merged output
+        # overlapping the dropped Ln+1 files (stale reads)
+        db.cfg.max_compaction_input_bytes = 1
+        picked = db.bg.compactor._pick_level(v, level, frozenset())
+        assert picked is not None
+        _lvl, inputs, overlaps = picked
+        full = v.files_touching(level + 1, inputs[0].smallest, inputs[0].largest)
+        assert [f.file_no for f in overlaps] == [f.file_no for f in full]
+    finally:
+        db.close()
+
+
+def test_precondition_sees_pending_pipelined_groups(tmp_db_dir):
+    from repro.core.db import _Group, _Writer
+    from repro.core.record import kTypeValue
+
+    db = _db(tmp_db_dir)
+    try:
+        db.put(b"k", b"old")
+        # simulate a seq-assigned but not-yet-published pipelined group
+        # carrying a newer write of "k": the conditional batch must be
+        # skipped even though the memtable/version check still passes
+        pend = _Group([_Writer([(kTypeValue, b"k", b"new")], 4)])
+        with db.mutex:
+            db._pending.append(pend)
+            w = _Writer([(kTypeValue, b"k", b"stale")], 6, precondition=lambda: True)
+            db._check_preconditions_locked([w])
+            popped = db._pending.pop()
+            assert popped is pend
+        assert w.skipped and w.entries == []
+        # an unrelated key is unaffected by the pending group
+        w2 = _Writer([(kTypeValue, b"other", b"x")], 6, precondition=lambda: True)
+        with db.mutex:
+            db._check_preconditions_locked([w2])
+        assert not w2.skipped
+    finally:
+        db.close()
+
+
+def test_conditional_commit_skips_when_precondition_fails(tmp_db_dir):
+    from repro.core.record import kTypeValue
+
+    db = _db(tmp_db_dir)
+    try:
+        db.put(b"k", b"v1")
+        assert db._commit([(kTypeValue, b"k", b"stale")], precondition=lambda: False) is False
+        assert db.get(b"k") == b"v1"
+        assert db._commit([(kTypeValue, b"k", b"v2")], precondition=lambda: True) is True
+        assert db.get(b"k") == b"v2"
+    finally:
+        db.close()
+
+
+def test_gc_never_resurrects_concurrent_overwrite(tmp_db_dir):
+    db = _db(tmp_db_dir, value_threshold=512, bvalue_max_file_bytes=16 << 10)
+    try:
+        for i in range(40):
+            db.put(f"g{i:03d}".encode(), b"A" * 2048)
+        for i in range(40):
+            if i != 7:
+                db.put(f"g{i:03d}".encode(), b"B" * 2048)
+        db.flush()
+        db.compact_all()
+        # g007's only version is the old "A" value: GC will try to rewrite
+        # it. Interleave a foreground overwrite between GC's value read and
+        # its conditional re-insert — the precondition must drop the stale
+        # rewrite instead of resurrecting it over the newer value.
+        real_get = db.bvalue.get
+
+        def racing_get(voff, **kw):
+            v = real_get(voff, **kw)
+            if v == b"A" * 2048:
+                db.put(b"g007", b"C" * 2048)
+            return v
+
+        db.bvalue.get = racing_get
+        try:
+            db.gc_collect(threshold=0.0)
+        finally:
+            db.bvalue.get = real_get
+        assert db.get(b"g007") == b"C" * 2048
+    finally:
+        db.close()
+
+
+def test_manual_gc_still_synchronous(tmp_db_dir):
+    db = _db(tmp_db_dir, value_threshold=512, bvalue_max_file_bytes=16 << 10)
+    try:
+        for i in range(60):
+            db.put(f"g{i:03d}".encode(), b"A" * 2048)
+        for i in range(60):
+            db.put(f"g{i:03d}".encode(), b"B" * 2048)
+        db.flush()
+        db.compact_all()
+        stats = db.gc_collect(threshold=0.3)
+        assert stats["collected_files"] >= 1, stats
+        for i in range(60):
+            assert db.get(f"g{i:03d}".encode()) == b"B" * 2048
+    finally:
+        db.close()
