@@ -1,0 +1,75 @@
+"""Collect every ``BENCH_*.json`` in the working directory into ONE
+markdown summary table (ops/s, cv, write_amp where each applies) — CI
+appends the output to ``$GITHUB_STEP_SUMMARY`` so every run shows its
+benchmark numbers without downloading artifacts.
+
+Usage: ``python -m benchmarks.ci_summary [glob ...]`` (default
+``BENCH_*.json``). Tolerant by design: unknown schemas contribute
+whatever of the three columns they carry; a malformed file becomes one
+error row instead of failing the step.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def _fmt(v, nd=2) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        return f"{v:,.{nd}f}"
+    return f"{v:,}"
+
+
+def _rows_for(name: str, res: dict) -> list[tuple]:
+    """(bench, cell-label, ops/s, cv, write_amp) rows for one artifact."""
+    rows = []
+    for c in res.get("cells", []):
+        if "policy" in c:  # writeamp
+            label = f"{c.get('system', '?')}/{c['policy']}"
+            rows.append((name, label, c.get("ops_per_s"), None, c.get("write_amp")))
+        elif "workload" in c:  # readpath
+            label = (
+                f"{c['workload']}/v{c.get('format', '?')}/"
+                f"{'cache' if c.get('cache') else 'nocache'}"
+            )
+            rows.append((name, label, c.get("ops_per_s"), None, None))
+        elif "threads" in c:  # writepath
+            label = f"{c.get('wal', '?')}/t{c['threads']}/{c.get('mode', '?')}"
+            rows.append((name, label, c.get("ops_per_s"), None, c.get("write_amp")))
+        else:
+            rows.append((name, "cell", c.get("ops_per_s"), c.get("cv"), c.get("write_amp")))
+    for c in res.get("engine", []):  # stability
+        rows.append((name, f"engine/{c.get('system', '?')}", None, c.get("cv"), None))
+    for c in res.get("ablation", []):
+        rows.append((name, f"ablation/{c.get('variant', '?')}", None, c.get("cv"), None))
+    return rows
+
+
+def main(patterns: list[str]) -> str:
+    paths = sorted({p for pat in patterns for p in glob.glob(pat)})
+    lines = [
+        "## Benchmark summary",
+        "",
+        "| artifact | cell | ops/s | cv | write_amp |",
+        "|---|---|---:|---:|---:|",
+    ]
+    for path in paths:
+        try:
+            res = json.load(open(path))
+            rows = _rows_for(path, res)
+        except Exception as e:  # one bad artifact must not kill the summary
+            rows = [(path, f"unreadable: {e}", None, None, None)]
+        for bench, label, ops, cv, wa in rows:
+            lines.append(
+                f"| {bench} | {label} | {_fmt(ops, 0)} | {_fmt(cv, 3)} | {_fmt(wa, 3)} |"
+            )
+    if not paths:
+        lines.append("| _none found_ | | | | |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main(sys.argv[1:] or ["BENCH_*.json"]))

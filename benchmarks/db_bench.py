@@ -16,7 +16,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from .common import KEY_SIZE, SYSTEMS, cleanup, gen_keys, make_db, run_fill
+from .common import KEY_SIZE, cleanup, gen_keys, make_db, run_fill
 
 
 def run(pattern: str = "random", mb: int = 48, value_sizes=(4096, 16384, 65536),

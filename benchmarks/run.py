@@ -10,8 +10,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
-import time
 
 
 def main() -> None:

@@ -1,0 +1,202 @@
+"""Write amplification — device bytes written per user byte stored.
+
+The paper's headline pillar: BVLSM's WAL-time separation keeps big values
+out of compaction rewrites. This benchmark isolates the *picking policy's*
+contribution on top of that: the same 64 KiB workload — a sequential fill
+of the key window (the phase where files land with disjoint ranges and a
+write-amp-aware picker promotes them by trivial move instead of rewriting
+them at every level) followed by random overwrites across the window (the
+paper's 64 KiB random-write methodology: 16 B keys, bounded window so
+overwrites keep compaction pressure up) — runs once per cell of
+
+    system  ×  {overlap, fullness}
+
+where ``overlap`` is overlap-ratio scoring + trivial moves
+(``compaction_pick_policy="overlap", trivial_move=True``) and ``fullness``
+is the fullness-only ablation baseline (legacy scoring, every input byte
+rewritten). Byte counters — not timings — are the measurement, so cells
+run single-background-thread for determinism and the workload sequence is
+seeded and identical across cells.
+
+Reported per cell: ``write_amp`` (total device bytes / user bytes — the
+paper's metric), ``compaction_write_amp`` (compaction bytes / user bytes —
+the slice the picking policy controls), ``trivial_moves`` and the raw byte
+counters. Summary carries, per system, the overlap-vs-fullness ratio; the
+committed trajectory gate (and the CI smoke gate) is
+
+    write_amp(overlap) < write_amp(fullness)        [bvlsm, 64 KiB]
+
+Output (``--out``): ``{schema, workload, cells, summary}`` — committed as
+``BENCH_writeamp.json`` and uploaded by CI next to the other artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from .common import KEY_SIZE, cleanup, gen_value, make_db
+
+#: the two sides of the picking ablation
+POLICIES = {
+    "overlap": dict(compaction_pick_policy="overlap", trivial_move=True),
+    "fullness": dict(compaction_pick_policy="fullness", trivial_move=False),
+}
+
+
+def run_cell(
+    system: str,
+    policy: str,
+    keys: list[bytes],
+    value: bytes,
+    memtable_bytes: int,
+    level1_bytes: int,
+) -> dict:
+    """One (system, policy) cell: identical seeded workload, quiesce, read
+    the byte counters."""
+    db, path = make_db(
+        system,
+        "async",
+        memtable_size=memtable_bytes,
+        level1_max_bytes=level1_bytes,
+        l0_compaction_trigger=2,
+        # determinism: byte counters, not throughput, are the measurement
+        background_threads=1,
+        max_subcompactions=1,
+        **POLICIES[policy],
+    )
+    t0 = time.monotonic()
+    try:
+        for k in keys:
+            db.put(k, value)
+        db.flush()
+        db.compact_all()
+        dt = time.monotonic() - t0
+        st = db.stats.snapshot()
+    finally:
+        cleanup(db, path)
+    user = st["user_bytes_written"]
+    return {
+        "bench": "writeamp",
+        "system": system,
+        "policy": policy,
+        "ops": len(keys),
+        "seconds": round(dt, 3),
+        "ops_per_s": round(len(keys) / dt, 1),
+        "user_mb": round(user / 1e6, 2),
+        "device_mb": round(st["device_bytes"] / 1e6, 2),
+        "write_amp": st["write_amp"],
+        "compaction_write_amp": st["compaction_bytes_written"] / user if user else 0.0,
+        "compaction_bytes_written": st["compaction_bytes_written"],
+        "flush_bytes": st["flush_bytes"],
+        "wal_bytes": st["wal_bytes"],
+        "bvalue_bytes": st["bvalue_bytes"],
+        "trivial_moves": st["trivial_moves"],
+        "trivial_move_bytes": st["trivial_move_bytes"],
+        "compaction_count": st["compaction_count"],
+    }
+
+
+def run(
+    ops: int,
+    key_space: int,
+    value_size: int,
+    systems: list[str],
+    memtable_bytes: int,
+    level1_bytes: int,
+    seed: int = 17,
+) -> dict:
+    rng = np.random.default_rng(seed)
+    # phase 1: sequential fill — disjoint table ranges, the trivial-move
+    # showcase; phase 2: random overwrites — the paper's random-write churn
+    ids = list(range(key_space))
+    ids.extend(rng.integers(0, key_space, size=max(0, ops - key_space)))
+    keys = [f"{i:016d}".encode() for i in ids]
+    value = gen_value(value_size, 23)
+    cells = []
+    for system in systems:
+        if system == "bvlsm":
+            mem, l1 = memtable_bytes, level1_bytes
+        else:
+            # values ride the memtable in these systems: scale the level
+            # budgets up so the tree still develops multiple levels without
+            # rotating on every single put (the comparison that matters is
+            # within-system, overlap vs fullness, at identical sizing)
+            mem = max(memtable_bytes, 16 * value_size)
+            l1 = 2 * mem
+        for policy in POLICIES:
+            rec = run_cell(system, policy, keys, value, mem, l1)
+            cells.append(rec)
+            print(
+                f"writeamp {system:8s} {policy:8s}: WA={rec['write_amp']:7.3f} "
+                f"compWA={rec['compaction_write_amp']:7.4f} "
+                f"trivial={rec['trivial_moves']:3d} "
+                f"compactions={rec['compaction_count']:3d} "
+                f"device={rec['device_mb']:.1f}MB",
+                flush=True,
+            )
+    by = {(c["system"], c["policy"]): c for c in cells}
+    summary = {}
+    for system in systems:
+        ov, fu = by[(system, "overlap")], by[(system, "fullness")]
+        summary[f"{system}_write_amp_overlap"] = ov["write_amp"]
+        summary[f"{system}_write_amp_fullness"] = fu["write_amp"]
+        summary[f"{system}_compaction_bytes_saved"] = (
+            fu["compaction_bytes_written"] - ov["compaction_bytes_written"]
+        )
+        summary[f"{system}_writeamp_win"] = ov["write_amp"] < fu["write_amp"]
+    print(
+        "summary: "
+        + " ".join(
+            f"{s}: {summary[f'{s}_write_amp_overlap']:.3f} vs "
+            f"{summary[f'{s}_write_amp_fullness']:.3f} "
+            f"(win={summary[f'{s}_writeamp_win']})"
+            for s in systems
+        ),
+        flush=True,
+    )
+    return {
+        "schema": "writeamp/v1",
+        "workload": {
+            "ops": ops,
+            "key_space": key_space,
+            "key_size": KEY_SIZE,
+            "value_size": value_size,
+            "memtable_bytes": memtable_bytes,
+            "level1_bytes": level1_bytes,
+            "wal_mode": "async",
+            "seed": seed,
+        },
+        "cells": cells,
+        "summary": summary,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ops", type=int, default=12000)
+    ap.add_argument("--key-space", type=int, default=6000,
+                    help="bounded window: ops/key_space ≈ overwrite factor")
+    ap.add_argument("--value-size", type=int, default=64 << 10,
+                    help="paper workload: 64 KiB values")
+    ap.add_argument("--systems", nargs="+", default=["bvlsm", "rocksdb"],
+                    choices=["bvlsm", "blobdb", "rocksdb"])
+    # pointer entries are ~40 B, so the LSM tree only develops a multi-level
+    # structure at small level budgets; the separated 64 KiB payloads land
+    # in BValue files either way
+    ap.add_argument("--memtable-bytes", type=int, default=8 << 10)
+    ap.add_argument("--level1-bytes", type=int, default=8 << 10)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(
+        args.ops, args.key_space, args.value_size, args.systems,
+        args.memtable_bytes, args.level1_bytes,
+    )
+    if args.out:
+        json.dump(res, open(args.out, "w"), indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,15 @@ wrong file.
 
 Dispatch across queues is round-robin or least-loaded (pending bytes),
 matching the paper's "hash or round-robin" scheduler.
+
+Unified I/O budget: when the manager is built with a ``limiter`` (see
+:mod:`.ratelimiter`), every dispatched value charges the shared token
+bucket at reservation time on the *caller's* thread, at the priority
+``io_priority()`` reports for that caller — foreground puts charge
+``PRI_FG`` (accounted, never blocked), while a GC rewrite re-entering
+this path inherits ``PRI_LOW`` and genuinely waits (priority
+inheritance). Charging at dispatch rather than persist time keeps the
+accounting identical for the sync and async write modes.
 """
 from __future__ import annotations
 
@@ -265,6 +274,8 @@ class BValueManager:
         on_persisted=None,
         on_persisted_many=None,
         next_file_id: int = 0,
+        limiter=None,
+        io_priority=None,
     ):
         assert dispatch in ("round_robin", "least_loaded")
         self.dir = directory
@@ -276,6 +287,11 @@ class BValueManager:
         self.max_file_bytes = max_file_bytes
         self.gather_window_s = gather_window_s
         self.stats = stats
+        # unified device budget: charge the shared token bucket at dispatch
+        # time, at the priority the calling context reports (None = no
+        # charging — the pre-unification background-only model)
+        self.limiter = limiter
+        self.io_priority = io_priority
         self.on_persisted = on_persisted
         self.on_persisted_many = on_persisted_many
         self._file_lock = threading.Lock()
@@ -309,7 +325,14 @@ class BValueManager:
         self._rr += 1
         return q
 
+    def _charge(self, nbytes: int) -> None:
+        if self.limiter is not None and self.limiter.enabled and nbytes > 0:
+            pri = self.io_priority() if self.io_priority is not None else None
+            if pri is not None:
+                self.limiter.request(nbytes, pri)
+
     def put(self, key: bytes, value: bytes, sync: bool) -> ValueOffset:
+        self._charge(len(value))
         q = self._pick_queue()
         file_id, off = q.reserve(len(value))
         voff = ValueOffset(file_id, off, len(value), zlib.crc32(value) & 0xFFFFFFFF)
@@ -331,6 +354,7 @@ class BValueManager:
         handed to a writer thread — the DB uses it to insert pinned BVCache
         entries so the persist-completion unpin can never race ahead of the
         insert."""
+        self._charge(sum(len(v) for _, v in items))
         voffs: list[ValueOffset] = []
         per_q: dict[int, list[tuple[int, int, bytes, bytes]]] = {}
         for key, value in items:

@@ -6,6 +6,26 @@ levels; with ``"flush"`` (BlobDB) values leave the pipeline at flush time;
 with ``"wal"`` (BVLSM) they never enter it. All three modes share this exact
 code — the benchmark deltas isolate the separation stage.
 
+Write-amp-aware picking asks one question of every candidate job: how many
+bytes must the device rewrite per byte this job actually moves down?
+
+* **Overlap-ratio scoring** (``compaction_pick_policy="overlap"``) — a
+  job's write amplification is ``1 + overlap_bytes / input_bytes`` (the
+  target-level bytes it drags through the merge). Each over-trigger
+  level's urgency (fullness) is discounted by its cheapest job's
+  amplification, and within a level the file with the smallest overlap
+  ratio is picked — the same debt is cleared for fewer device writes.
+  ``"fullness"`` restores the legacy hottest-level / round-robin-file
+  policy (the write-amp benchmark's ablation baseline).
+* **Trivial moves** — a picked file with zero target-level overlap is
+  promoted by ONE manifest edit: no read, no merge, no tables written
+  (guarded by a grandparent-overlap cap so a wide file is not parked
+  where it makes the next level's future jobs more expensive). Safety
+  rests on the per-file locks plus an interval argument: every concurrent
+  job's output span is closed over the files it locked at pick time, none
+  of which touched the moved file's range — so no later output can
+  straddle it and break sorted-level disjointness.
+
 Jitter engineering (the paper's Fig. 9 claim) is layered on top:
 
 * **Lock-aware picking** — :meth:`Compactor.pick` skips files whose
@@ -18,7 +38,11 @@ Jitter engineering (the paper's Fig. 9 claim) is layered on top:
   shards; each shard heap-merges only its range and writes its own output
   tables. All shards commit as ONE atomic manifest edit, so a crash
   mid-subcompaction leaves either the old file set or the new one — never
-  a mix (orphan outputs are swept on reopen).
+  a mix (orphan outputs are swept on reopen). The shard count is adaptive
+  (``subcompaction_adaptive``): chosen from the live input size and an
+  EWMA of historical per-shard merge throughput, so tiny jobs skip the
+  fan-out entirely and big ones target ``subcompaction_target_seconds``
+  of wall time per shard.
 * **Rate-limited writes** — every flush/compaction output byte draws from
   the DB's shared token bucket (:mod:`.ratelimiter`), flushes at high
   priority, compactions at low, so a merge burst cannot starve foreground
@@ -28,6 +52,7 @@ from __future__ import annotations
 
 import heapq
 import os
+import time
 
 from .ratelimiter import IO_CHUNK, PRI_HIGH, PRI_LOW
 from .record import ValueOffset, kTypeDeletion, kTypeValue, kTypeValuePtr
@@ -54,6 +79,9 @@ def _merge_iters(iters):
 class Compactor:
     def __init__(self, db):
         self.db = db  # back-reference; uses db.versions, db.cfg, db.stats
+        # historical per-shard merge throughput (EWMA, bytes of input per
+        # shard-second) — feeds the adaptive subcompaction shard count
+        self._shard_bytes_per_s = 0.0
 
     # ------------------------------------------------------------------
     # flush
@@ -76,13 +104,19 @@ class Compactor:
                 and len(value) >= cfg.value_threshold
             ):
                 # BlobDB/WiscKey: separate at flush — value goes to the value
-                # log now; only the pointer reaches L0.
+                # log now; only the pointer reaches L0. Under the unified
+                # budget the BValue dispatch charges the value's bytes
+                # itself, so the flush only accounts the pointer entry here.
                 voff = db.bvalue.put(key, value, sync=cfg.sync_flush_io)
-                writer.add(key, seq, kTypeValuePtr, voff.encode())
+                enc = voff.encode()
+                writer.add(key, seq, kTypeValuePtr, enc)
+                pending_io += len(key) + (
+                    len(enc) if db.bvalue.limiter is not None else len(value)
+                )
             else:
                 writer.add(key, seq, type_, value)
+                pending_io += len(key) + len(value)
             n_written += 1
-            pending_io += len(key) + len(value)
             if pending_io >= IO_CHUNK:
                 limiter.request(pending_io, PRI_HIGH)
                 pending_io = 0
@@ -113,8 +147,13 @@ class Compactor:
     def pick(self, locked=frozenset()):
         """Returns (level, [input files Ln], [input files Ln+1]) or None,
         never selecting a file whose compaction lock is held (``locked``).
-        Levels are tried in descending score order so a locked-out hottest
-        level doesn't block all background progress."""
+
+        ``compaction_pick_policy="fullness"``: levels are tried in
+        descending fullness order and the first pickable one wins (the
+        legacy, write-amp-blind policy). ``"overlap"``: every
+        over-trigger level nominates its cheapest job and the winner is
+        the one clearing the most urgency per byte rewritten — fullness
+        divided by the job's write amplification (1 + overlap/input)."""
         db = self.db
         cfg = db.cfg
         v = db.versions.current
@@ -127,11 +166,30 @@ class Compactor:
             if score > 1.0:
                 scored.append((score, level))
         scored.sort(reverse=True)
-        for _score, level in scored:
+        if cfg.compaction_pick_policy != "overlap":
+            for _score, level in scored:
+                picked = self._pick_level(v, level, locked)
+                if picked is not None:
+                    return picked
+            return None
+        best = None
+        best_score = 0.0
+        for fullness, level in scored:
             picked = self._pick_level(v, level, locked)
-            if picked is not None:
-                return picked
-        return None
+            if picked is None:
+                continue
+            _lvl, inputs, overlaps = picked
+            in_bytes = max(1, sum(f.size for f in inputs))
+            ov_bytes = sum(f.size for f in overlaps)
+            score = fullness / (1.0 + ov_bytes / in_bytes)
+            if best is None or score > best_score:
+                best, best_score = picked, score
+        if best is not None and best[0] >= 1:
+            # advance the legacy rotation pointer for the WINNING level
+            # only (evaluated-but-skipped candidates never ran), so
+            # flipping back to "fullness" resumes from a sane position
+            db.versions.compaction_ptr[best[0]] = best[1][0].smallest
+        return best
 
     def _pick_level(self, v, level: int, locked):
         db = self.db
@@ -147,6 +205,11 @@ class Compactor:
             if any(f.file_no in locked for f in overlaps):
                 return None
             return 0, inputs, overlaps
+        files = v.levels[level]
+        if not files:
+            return None
+        if cfg.compaction_pick_policy == "overlap":
+            return self._pick_file_overlap(v, level, files, locked)
         # round-robin pointer within the level (LevelDB style), skipping
         # files locked by running jobs. The full Ln+1 overlap set always
         # rides along: truncating it (as the pre-scheduler code did) left
@@ -155,9 +218,6 @@ class Compactor:
         # max_compaction_input_bytes instead steers the *choice*: prefer a
         # file whose job fits the cap, falling back to the smallest
         # oversized one so progress is still guaranteed.
-        files = v.levels[level]
-        if not files:
-            return None
         ptr = db.versions.compaction_ptr.get(level, b"")
         start = next((i for i, f in enumerate(files) if f.smallest > ptr), 0)
         fallback = None  # (total, pick_file, overlaps) of the smallest oversized job
@@ -181,33 +241,78 @@ class Compactor:
             return level, [pick_file], overlaps
         return None
 
+    def _pick_file_overlap(self, v, level: int, files, locked):
+        """Within-level choice under overlap scoring: the unlocked file
+        whose job rewrites the fewest target-level bytes per input byte
+        (tie-broken by smaller total job size). The full overlap set
+        always rides along — ``max_compaction_input_bytes`` steers the
+        choice among cap-fitting jobs; if none fits, the smallest
+        oversized job runs so progress is still guaranteed."""
+        db = self.db
+        cfg = db.cfg
+        best = None  # (ratio, total, pick_file, overlaps), job fits the cap
+        fallback = None  # (total, pick_file, overlaps), smallest oversized
+        for pick_file in files:
+            if pick_file.file_no in locked:
+                continue
+            overlaps = v.files_touching(level + 1, pick_file.smallest, pick_file.largest)
+            if any(f.file_no in locked for f in overlaps):
+                continue
+            ov_bytes = sum(f.size for f in overlaps)
+            total = pick_file.size + ov_bytes
+            if total > cfg.max_compaction_input_bytes:
+                if fallback is None or total < fallback[0]:
+                    fallback = (total, pick_file, overlaps)
+                continue
+            ratio = ov_bytes / max(1, pick_file.size)
+            if best is None or (ratio, total) < (best[0], best[1]):
+                best = (ratio, total, pick_file, overlaps)
+                if ov_bytes == 0:
+                    break  # zero overlap is the minimum — a trivial-move
+                    # candidate; no later file can score better on ratio
+        if best is not None:
+            _ratio, _total, pick_file, overlaps = best
+        elif fallback is not None:
+            _total, pick_file, overlaps = fallback
+        else:
+            return None
+        return level, [pick_file], overlaps
+
     # ------------------------------------------------------------------
     # compaction run
     # ------------------------------------------------------------------
     def run(self, level: int, inputs, overlaps, subtasks=None) -> None:
         """Merge ``inputs`` (Ln) + ``overlaps`` (Ln+1) into new Ln+1 tables
-        and commit the swap as one atomic manifest edit.
+        and commit the swap as one atomic manifest edit — unless the job
+        qualifies as a **trivial move** (single input, zero target-level
+        overlap), which promotes the file by manifest edit alone.
 
         ``subtasks`` (callable: list of thunks → list of results) fans the
         key-range shards out across the scheduler's subcompaction pool;
         None runs them sequentially (same result, one thread)."""
         db = self.db
         cfg = db.cfg
+        if self._maybe_trivial_move(level, inputs, overlaps):
+            return
         out_level = level + 1
         v = db.versions.current
-        bottom = all(not v.levels[l] for l in range(out_level + 1, cfg.num_levels))
+        bottom = all(not v.levels[lvl] for lvl in range(out_level + 1, cfg.num_levels))
         fill = not cfg.block_cache_compaction_bypass
         read_bytes = sum(f.size for f in inputs + overlaps)
 
-        bounds = self._subcompaction_bounds(inputs, overlaps, cfg.max_subcompactions)
+        bounds = self._subcompaction_bounds(
+            inputs, overlaps, self._choose_shards(read_bytes)
+        )
         ranges = list(zip([None] + bounds, bounds + [None]))
 
         def shard_thunk(lo, hi):
             def go():
+                t0 = time.monotonic()
                 try:
-                    return self._run_range(level, inputs, overlaps, lo, hi, bottom, fill), None
+                    metas = self._run_range(level, inputs, overlaps, lo, hi, bottom, fill)
+                    return metas, None, time.monotonic() - t0
                 except BaseException as e:
-                    return [], e
+                    return [], e, time.monotonic() - t0
 
             return go
 
@@ -219,10 +324,14 @@ class Compactor:
             db.stats.add("subcompactions", len(thunks))
         metas = []
         err: BaseException | None = None
-        for shard_metas, shard_err in results:
+        shard_seconds = 0.0
+        for shard_metas, shard_err, shard_s in results:
             metas.extend(shard_metas)
+            shard_seconds += shard_s
             if shard_err is not None and err is None:
                 err = shard_err
+        if err is None:
+            self._note_shard_rate(read_bytes, shard_seconds)
         if err is not None:
             # no manifest edit happened: drop every shard's output so the
             # live process never leaks tables (reopen would sweep them too)
@@ -250,6 +359,78 @@ class Compactor:
                 os.unlink(table_path(db.path, f.file_no))
             except OSError:
                 pass
+
+    def _maybe_trivial_move(self, level: int, inputs, overlaps) -> bool:
+        """Promote a no-overlap single file to the next level by manifest
+        edit alone — zero bytes read, zero bytes written, no new tables.
+
+        Eligibility: exactly one input, an empty target-level overlap set,
+        and (when ``trivial_move_max_gp_bytes`` > 0) bounded grandparent
+        overlap — parking a file on top of a wide grandparent range only
+        converts this job's savings into a more expensive future job one
+        level down. Safe under concurrency: the input is compaction-locked
+        and every running job's output span is interval-closed over files
+        that were live (and not overlapping this range) at its own pick
+        time, so no concurrent commit can slide a target-level file under
+        the move (see the module docstring)."""
+        db = self.db
+        cfg = db.cfg
+        out_level = level + 1
+        if (
+            not cfg.trivial_move
+            or overlaps
+            or len(inputs) != 1
+            or out_level >= cfg.num_levels
+        ):
+            return False
+        f = inputs[0]
+        if cfg.trivial_move_max_gp_bytes > 0 and out_level + 1 < cfg.num_levels:
+            v = db.versions.current
+            gp = v.overlap_bytes(out_level + 1, f.smallest, f.largest)
+            if gp > cfg.trivial_move_max_gp_bytes:
+                return False
+        db.versions.log_and_apply(
+            {
+                "add": [(out_level, f.to_wire())],
+                "delete": [(level, f.file_no)],
+            }
+        )
+        db.stats.add("trivial_moves")
+        db.stats.add("trivial_move_bytes", f.size)
+        return True
+
+    def _choose_shards(self, input_bytes: int) -> int:
+        """Adaptive subcompaction fan-out: shard count follows the live
+        input size over a per-shard byte target — the historical per-shard
+        merge throughput (EWMA) times ``subcompaction_target_seconds``,
+        floored at ``subcompaction_min_bytes`` (also the cold-start
+        target). Tiny inputs degrade to 1 (no fan-out overhead); the
+        result never exceeds ``max_subcompactions``."""
+        cfg = self.db.cfg
+        if cfg.max_subcompactions <= 1:
+            return 1
+        if not cfg.subcompaction_adaptive:
+            return cfg.max_subcompactions
+        target = max(1, cfg.subcompaction_min_bytes)
+        if self._shard_bytes_per_s > 0.0:
+            target = max(
+                target, int(self._shard_bytes_per_s * cfg.subcompaction_target_seconds)
+            )
+        self.db.stats.set_gauge("subcompaction_target_bytes", target)
+        return int(min(cfg.max_subcompactions, max(1, input_bytes // target)))
+
+    def _note_shard_rate(self, input_bytes: int, shard_seconds: float) -> None:
+        """Fold one completed compaction into the per-shard throughput
+        EWMA (input bytes per cumulative shard-second)."""
+        if shard_seconds <= 1e-6 or input_bytes <= 0:
+            return
+        rate = input_bytes / shard_seconds
+        self._shard_bytes_per_s = (
+            rate
+            if self._shard_bytes_per_s == 0.0
+            else 0.7 * self._shard_bytes_per_s + 0.3 * rate
+        )
+        self.db.stats.set_gauge("subcompaction_bytes_per_s", self._shard_bytes_per_s)
 
     def _subcompaction_bounds(self, inputs, overlaps, max_shards: int) -> list[bytes]:
         """Choose up to ``max_shards - 1`` split keys from the input files'

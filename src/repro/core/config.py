@@ -12,7 +12,7 @@
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(slots=True)
@@ -78,6 +78,22 @@ class DBConfig:
     level1_max_bytes: int = 64 << 20
     level_size_multiplier: int = 10
     max_compaction_input_bytes: int = 256 << 20
+    # --- write-amp-aware compaction picking ---
+    # "overlap": among levels over their trigger, pick the candidate whose
+    # job moves the most bytes per byte rewritten (urgency discounted by
+    # 1 + overlap_bytes/input_bytes, the job's write amplification).
+    # "fullness": the legacy policy — hottest level first, round-robin file
+    # pointer within the level (the write-amp benchmark's ablation baseline).
+    compaction_pick_policy: str = "overlap"  # overlap | fullness
+    # a picked file with ZERO overlap at the target level is promoted by a
+    # manifest edit alone — no read, no rewrite, no new tables. False
+    # restores rewrite-everything (ablation baseline).
+    trivial_move: bool = True
+    # a trivial move is skipped (the file is rewritten instead) when the
+    # moved file would overlap more than this many grandparent-level bytes
+    # — parking a wide file at Ln+1 just makes the future Ln+1→Ln+2 job
+    # more expensive than the rewrite it avoided. 0 = no limit.
+    trivial_move_max_gp_bytes: int = 64 << 20
     # --- background job scheduler ---
     # flush jobs run on a dedicated high-priority pool so a long compaction
     # can never starve the flush that unblocks writers; compaction and GC
@@ -89,12 +105,34 @@ class DBConfig:
     # merging + writing its own output tables; all shards commit as one
     # atomic manifest edit. 1 disables partitioning.
     max_subcompactions: int = 2
+    # adaptive shard count: the number of shards is chosen from the live
+    # input size and the historical per-shard merge throughput (EWMA), so
+    # tiny compactions run unsharded (no fan-out overhead) and huge ones
+    # use the full budget. False always fans out to max_subcompactions.
+    subcompaction_adaptive: bool = True
+    # target wall time for one shard: shards sized ewma_bytes_per_s × this
+    subcompaction_target_seconds: float = 0.5
+    # floor on the per-shard input size (also the pre-history default
+    # target): inputs below this never shard at all
+    subcompaction_min_bytes: int = 256 << 10
     # --- background I/O rate limiter ---
     # shared token bucket for every background byte written (compaction
     # output, flush, GC rewrites); flushes draw at high priority. 0 =
     # unlimited (limiter disabled, zero overhead).
     bg_io_bytes_per_sec: int = 0
     bg_io_refill_period_s: float = 0.005
+    # unified device model: foreground BValue queue writes (WAL-time value
+    # separation) charge the same token bucket at a foreground priority
+    # that is accounted but never blocked — sustained value-log traffic
+    # shrinks the refill available to compaction/GC (floored at
+    # bg_io_min_fraction) instead of the two competing blindly for the
+    # device. GC's value rewrites inherit LOW priority (they block on the
+    # bucket like any background work). False restores the
+    # background-only budget.
+    unified_io_budget: bool = True
+    # fraction of the bucket rate background work always keeps, no matter
+    # how hard the foreground writes (starvation floor)
+    bg_io_min_fraction: float = 0.1
     # --- delayed-write controller (replaces binary slowdown stalls) ---
     # above l0_slowdown_trigger / soft_pending_compaction_bytes, writers pay
     # a per-byte delay at a rate that decays ×0.8 while the backlog grows
@@ -104,6 +142,13 @@ class DBConfig:
     delayed_write_min_rate: int = 1 << 20  # decay floor
     soft_pending_compaction_bytes: int = 64 << 20
     hard_pending_compaction_bytes: int = 256 << 20
+    # overlap-aware debt estimate: pending-compaction bytes count not just
+    # each level's excess but the target- and grandparent-level bytes the
+    # excess will drag through rewrites on its way down (cascaded, each
+    # step's overlap ratio clamped at level_size_multiplier) — the
+    # controller sees real write debt instead of just displaced bytes.
+    # False restores the excess-only estimate.
+    pending_debt_overlap_aware: bool = True
     # --- background BValue GC ---
     # when enabled, a GC pass is scheduled (low priority) as soon as a
     # sealed BValue file's dead ratio crosses the trigger — typically right
@@ -111,6 +156,13 @@ class DBConfig:
     # ``DB.gc_collect`` API stays as a synchronous wrapper either way.
     gc_auto: bool = False
     gc_dead_ratio_trigger: float = 0.7
+    # auto-GC pacing: one scheduled GC job rewrites at most this many live
+    # bytes, then yields its LOW thread; the remaining candidates are
+    # picked up by follow-up job slices (scheduled at the completion
+    # edge), so one huge candidate file can't monopolize a background
+    # thread for seconds. 0 = unsliced (one job runs the whole pass).
+    # Manual ``gc_collect`` is always unsliced.
+    gc_slice_bytes: int = 8 << 20
     # --- sstable ---
     block_size: int = 4096
     compression: bool = False

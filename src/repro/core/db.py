@@ -76,7 +76,7 @@ from .compaction import _merge_iters
 from .config import DBConfig
 from .manifest import VersionSet
 from .memtable import MemTable
-from .ratelimiter import RateLimiter
+from .ratelimiter import PRI_FG, PRI_LOW, RateLimiter
 from .scheduler import BackgroundCoordinator, WriteController
 from .record import (
     ValueOffset,
@@ -179,10 +179,16 @@ class DB:
         self.versions.open()
         self._seq = self.versions.last_seq
 
-        # shared token bucket for ALL background writes (compaction output,
-        # flush tables, GC rewrites); rate 0 = unlimited, zero overhead
+        # shared token bucket for every accounted byte: background writes
+        # (compaction output, flush tables, GC rewrites) block or defer on
+        # it, and — under the unified budget — foreground BValue dispatches
+        # charge it at PRI_FG, shrinking the background refill. rate 0 =
+        # unlimited, zero overhead.
         self.rate_limiter = RateLimiter(
-            self.cfg.bg_io_bytes_per_sec, self.cfg.bg_io_refill_period_s, stats=self.stats
+            self.cfg.bg_io_bytes_per_sec,
+            self.cfg.bg_io_refill_period_s,
+            stats=self.stats,
+            bg_min_fraction=self.cfg.bg_io_min_fraction,
         )
         # continuous delayed-write controller state (leader-only, under mutex).
         # _delay_debt accumulates every published group's post-separation
@@ -212,6 +218,13 @@ class DB:
             on_persisted=self.bvcache.unpin,
             on_persisted_many=self.bvcache.unpin_many,
             next_file_id=self.versions.bvalue_next_file_id,
+            # unified device model: value-log dispatches charge the shared
+            # bucket — foreground puts at PRI_FG (never blocked), GC
+            # rewrites inherit PRI_LOW from their background initiator
+            limiter=self.rate_limiter if self.cfg.unified_io_budget else None,
+            io_priority=lambda: (
+                PRI_LOW if getattr(self._bg_local, "exempt", False) else PRI_FG
+            ),
         )
 
         self.mem = MemTable()
@@ -587,16 +600,48 @@ class DB:
 
     def _pending_compaction_bytes(self) -> int:
         """Estimate of the compaction debt (RocksDB's
-        ``estimated_pending_compaction_bytes``): every byte above a level's
-        target plus all of L0 once it crosses the compaction trigger."""
+        ``estimated_pending_compaction_bytes``).
+
+        Legacy (``pending_debt_overlap_aware=False``): every byte above a
+        level's target plus all of L0 once it crosses the compaction
+        trigger — the *displaced* bytes, not the work to clear them.
+
+        Overlap-aware: each level's excess is multiplied by the write
+        amplification of pushing it one level down (1 + the target level's
+        overlap ratio, clamped at ``level_size_multiplier``), and the
+        rewritten bytes cascade: what lands on the next level may push
+        *it* over target, so the grandparent overlap those bytes will drag
+        along is counted too. The delayed-write controller therefore sees
+        the real device-write debt — and starts delaying — before the
+        fullness-only estimate would."""
         cfg = self.cfg
         v = self.versions.current
-        total = 0
-        if len(v.levels[0]) >= cfg.l0_compaction_trigger:
-            total += v.level_bytes(0)
-        for level in range(1, cfg.num_levels - 1):
-            total += max(0, v.level_bytes(level) - cfg.level_max_bytes(level))
-        return total
+        if not cfg.pending_debt_overlap_aware:
+            total = 0
+            if len(v.levels[0]) >= cfg.l0_compaction_trigger:
+                total += v.level_bytes(0)
+            for level in range(1, cfg.num_levels - 1):
+                total += max(0, v.level_bytes(level) - cfg.level_max_bytes(level))
+            return total
+        debt = 0.0
+        carry = 0.0  # rewritten bytes arriving from the level above
+        for level in range(cfg.num_levels - 1):
+            size = v.level_bytes(level) + carry
+            if level == 0:
+                excess = size if len(v.levels[0]) >= cfg.l0_compaction_trigger else 0.0
+            else:
+                excess = max(0.0, size - cfg.level_max_bytes(level))
+            if excess <= 0.0:
+                carry = 0.0
+                continue
+            ratio = min(
+                float(cfg.level_size_multiplier),
+                v.level_bytes(level + 1) / max(size, 1.0),
+            )
+            written = excess * (1.0 + ratio)
+            debt += written
+            carry = written  # lands one level down: grandparent debt
+        return int(debt)
 
     def _maybe_stall_locked(self) -> None:
         """Writer throttling, two regimes (called by the group leader):

@@ -21,8 +21,18 @@ Scheduling: GC normally runs as a low-priority job on the background
 scheduler, triggered when a compaction pushes a sealed file past
 ``DBConfig.gc_dead_ratio_trigger`` (``gc_auto``). ``DB.gc_collect`` is the
 synchronous wrapper over the same pass. Either way the rewrites draw from
-the shared background-I/O token bucket at low priority, and the pass bails
-out between files when the DB is closing.
+the shared I/O token bucket at low priority (under the unified budget the
+BValue dispatch itself inherits PRI_LOW from the GC context), and the pass
+bails out between files when the DB is closing.
+
+Pacing: an auto-scheduled pass is **sliced** — it rewrites at most
+``DBConfig.gc_slice_bytes`` of live values, then returns its LOW thread to
+the scheduler; the completion edge re-examines the dead ratios and queues
+the next slice. A slice that stops mid-file simply leaves the file for the
+next slice: already-moved keys no longer point into it, so resuming is a
+plain re-scan (idempotent), and the file is only unlinked by the slice
+that proves every live pointer has moved out. Candidates are served
+deadest-first so each slice reclaims the most bytes per rewrite.
 """
 from __future__ import annotations
 
@@ -68,14 +78,40 @@ class DeadValueTracker:
             self.dead_bytes.pop(file_id, None)
             self.total_bytes.pop(file_id, None)
 
+    def signature(self, fids) -> frozenset:
+        """(fid, dead_bytes) fingerprint of a candidate set — dead bytes
+        only grow, so ANY new death in these files changes the signature.
+        The scheduler parks this after a zero-progress GC pass and re-arms
+        as soon as it differs (new candidate OR more deaths in an old
+        one), so a transiently uncollectable set is retried on the next
+        real edge instead of being ignored forever."""
+        with self._lock:
+            return frozenset((fid, self.dead_bytes.get(fid, 0)) for fid in fids)
+
 
 class BValueGC:
-    def __init__(self, db, threshold: float = 0.5):
+    def __init__(
+        self, db, threshold: float = 0.5, max_rewrite_bytes: int = 0, resume=None
+    ):
         self.db = db
         self.threshold = threshold
+        # slice budget: stop the pass (without unlinking the current file)
+        # once this many live bytes have been rewritten; 0 = unsliced
+        self.max_rewrite_bytes = max_rewrite_bytes
+        # work list carried over from a previous sliced pass — the live-key
+        # scan is the dominant cost, so slices share ONE scan. Safe to
+        # reuse because fresh ValueOffsets always land in active files (ids
+        # never reused), so no NEW pointer can appear inside a sealed
+        # candidate after the scan: a carried list is complete-modulo-
+        # deaths, and every key is re-checked against the live pointer
+        # before rewriting anyway.
+        self.resume = resume
+        self.resume_state = None  # (remaining candidate fids, live_ptrs)
         self.collected_files = 0
         self.reclaimed_bytes = 0
         self.rewritten_values = 0
+        self.rewritten_bytes = 0
+        self.sliced = False  # budget exhausted with work remaining
 
     def _live_files(self) -> set[int]:
         """Files still being appended to (never collect the active tail)."""
@@ -89,24 +125,38 @@ class BValueGC:
         """One GC pass. Returns stats. Runs from a scheduler thread
         (``gc_auto``) or synchronously via ``DB.gc_collect``."""
         db = self.db
-        cands = set(db.dead_tracker.candidates(self.threshold, exclude=self._live_files()))
-        if not cands or self._stopping():
+        cur = set(db.dead_tracker.candidates(self.threshold, exclude=self._live_files()))
+        if self._stopping():
             return self._stats()
-        # ONE scan over the live key space serves every candidate file: the
-        # LSM view is the truth, so collect (key -> pointer) per candidate.
-        live_ptrs: dict[int, list[bytes]] = {fid: [] for fid in cands}
-        for n, (key, _) in enumerate(db.scan(b"", 1 << 30)):
-            if (n & 1023) == 0 and self._stopping():
-                return self._stats()  # closing: don't finish an O(DB) walk
-            rec = self._pointer_for(key)
-            if rec is not None and rec.file_id in live_ptrs:
-                live_ptrs[rec.file_id].append(key)
+        cands: list[int] = []
+        live_ptrs: dict[int, list[bytes]] = {}
+        if self.resume is not None:
+            # continue the previous slice's work list (files collected or
+            # cleaned since then drop out of the current candidate set)
+            r_cands, live_ptrs = self.resume
+            cands = [fid for fid in r_cands if fid in cur]
+        if not cands:
+            if not cur:
+                return self._stats()
+            # deadest-first: a sliced pass spends its budget where each
+            # rewritten byte reclaims the most dead ones
+            cands = sorted(cur, key=db.dead_tracker.dead_ratio, reverse=True)
+            # ONE scan over the live key space serves every candidate file
+            # (and, via resume, every later slice): the LSM view is the
+            # truth, so collect (key -> pointer) per candidate.
+            live_ptrs = {fid: [] for fid in cands}
+            for n, (key, _) in enumerate(db.scan(b"", 1 << 30)):
+                if (n & 1023) == 0 and self._stopping():
+                    return self._stats()  # closing: don't finish an O(DB) walk
+                rec = self._pointer_for(key)
+                if rec is not None and rec.file_id in live_ptrs:
+                    live_ptrs[rec.file_id].append(key)
         # GC rewrites re-enter the foreground put path from a background
         # thread: exempt them from the writer stall (the token bucket below
         # is their throttle) so they can't deadlock the low-priority pool.
         db._bg_local.exempt = True
         try:
-            for fid in cands:
+            for ci, fid in enumerate(cands):
                 if self._stopping():
                     break
                 moved = 0
@@ -121,7 +171,22 @@ class BValueGC:
                     if rec is None or rec.file_id != fid:
                         continue
                     value = db.bvalue.get(rec)
-                    db.rate_limiter.request(len(key) + len(value), PRI_LOW)
+                    # priority inheritance: when the commit below will
+                    # itself dispatch this value through BValue (unified
+                    # budget, WAL-time separation, value still over the
+                    # threshold), that dispatch charges PRI_LOW on this
+                    # thread — charging here too would pace the rewrite
+                    # twice. Every other shape (budget not unified, flush
+                    # separation where the dispatch happens later on the
+                    # flush thread at FG priority, or a value now under
+                    # the threshold) still pays the LOW toll here.
+                    commit_charges_low = (
+                        db.cfg.unified_io_budget
+                        and db.cfg.separation_mode == "wal"
+                        and len(value) >= db.cfg.value_threshold
+                    )
+                    if not commit_charges_low:
+                        db.rate_limiter.request(len(key) + len(value), PRI_LOW)
 
                     # conditional re-insert (fresh ValueOffset via the
                     # normal separation path): the commit leader re-checks
@@ -140,6 +205,22 @@ class BValueGC:
                         [(kTypeValue, key, value)], precondition=_still_current
                     ):
                         moved += 1
+                        self.rewritten_bytes += len(value)
+                        if (
+                            self.max_rewrite_bytes
+                            and self.rewritten_bytes >= self.max_rewrite_bytes
+                        ):
+                            # slice budget spent: yield the LOW thread and
+                            # hand the remaining work list (this file
+                            # included — moved keys skip on re-check) to
+                            # the next slice, which resumes WITHOUT
+                            # repeating the keyspace scan. The file is NOT
+                            # unlinked: only a slice that walks its full
+                            # key list may prove it clean.
+                            self.sliced = True
+                            self.rewritten_values += moved
+                            self.resume_state = (cands[ci:], live_ptrs)
+                            return self._stats()
                         continue
                     # skipped: a supersede is fine (the key's value lives
                     # elsewhere now), but a precondition that merely ERRORED
@@ -177,6 +258,8 @@ class BValueGC:
             "collected_files": self.collected_files,
             "reclaimed_bytes": self.reclaimed_bytes,
             "rewritten_values": self.rewritten_values,
+            "rewritten_bytes": self.rewritten_bytes,
+            "sliced": self.sliced,
         }
 
     def _pointer_for(self, key: bytes) -> ValueOffset | None:

@@ -43,11 +43,34 @@ class Version:
         return cache[level]
 
     def files_touching(self, level: int, smallest: bytes, largest: bytes):
+        files = self.levels[level]
+        if level == 0:
+            # L0 is ordered by age, not key — linear scan is the only option
+            return [f for f in files if f.largest >= smallest and f.smallest <= largest]
+        # sorted levels are key-disjoint and ordered by smallest (so also by
+        # largest): binary-search the first candidate, extend while touching
+        # — overlap-ratio picking calls this per file per pick, so O(log n +
+        # overlap) instead of O(level) matters
+        lo, hi = 0, len(files)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if files[mid].largest < smallest:
+                lo = mid + 1
+            else:
+                hi = mid
         out = []
-        for f in self.levels[level]:
-            if f.largest >= smallest and f.smallest <= largest:
-                out.append(f)
+        for f in files[lo:]:
+            if f.smallest > largest:
+                break
+            out.append(f)
         return out
+
+    def overlap_bytes(self, level: int, smallest: bytes, largest: bytes) -> int:
+        """Total size of the files in ``level`` whose key range touches
+        [smallest, largest] — the bytes a compaction of that range would
+        have to rewrite at (or a trivial move would park on top of) this
+        level. Used by overlap-ratio picking and the grandparent checks."""
+        return sum(f.size for f in self.files_touching(level, smallest, largest))
 
     def files_from(self, level: int, start: bytes):
         """Files in a SORTED level (L1+) that may hold keys >= ``start``,

@@ -238,6 +238,13 @@ class BackgroundCoordinator:
         self._flush_inflight = False
         self._compactions_inflight = 0
         self._gc_inflight = False
+        # candidate-set signature of a completed auto-GC pass that made no
+        # progress: don't immediately requeue the exact same stuck work
+        # (a new dead-ratio edge changes the signature and re-arms GC)
+        self._gc_stuck: frozenset | None = None
+        # sliced auto-GC hands its remaining work list to the next slice so
+        # the O(DB) live-key scan runs once per pass, not once per slice
+        self._gc_resume = None
         self._stopping = False
         self._subpool = None  # lazy shared subcompaction pool
 
@@ -346,27 +353,69 @@ class BackgroundCoordinator:
             if self._gc_inflight:
                 return
             live = {q.file_id for q in db.bvalue.queues}
-            if not db.dead_tracker.candidates(cfg.gc_dead_ratio_trigger, exclude=live):
+            cands = db.dead_tracker.candidates(cfg.gc_dead_ratio_trigger, exclude=live)
+            if not cands:
                 return
+            if (
+                self._gc_stuck is not None
+                and db.dead_tracker.signature(cands) == self._gc_stuck
+            ):
+                return  # same uncollectable set a full pass just failed on
+                # (more deaths in these files change the signature → retry)
             self._gc_inflight = True
         if not self.sched.submit("gc", self._gc_job, PRI_LOW, "gc"):
             with self._state_lock:
                 self._gc_inflight = False
 
     def _gc_job(self) -> None:
+        """One auto-GC slice: rewrite at most ``gc_slice_bytes`` of live
+        values, then yield the LOW thread — the completion edge schedules
+        the next slice (which resumes this slice's work list, no repeated
+        keyspace scan) while compactions interleave, so one huge candidate
+        file can't monopolize a background thread for seconds."""
+        from .gc import BValueGC
+
+        db = self.db
         try:
-            self.run_gc(self.db.cfg.gc_dead_ratio_trigger)
+            with self._gc_lock:
+                gc = BValueGC(
+                    db,
+                    db.cfg.gc_dead_ratio_trigger,
+                    max_rewrite_bytes=db.cfg.gc_slice_bytes,
+                    resume=self._gc_resume,
+                )
+                res = gc.collect()
+                self._gc_resume = gc.resume_state
+            if res["sliced"]:
+                db.stats.add("gc_slices")
+            # rewritten_bytes counts every successful move (collected_files
+            # only files actually unlinked): a pass that relocated values
+            # but couldn't prove any file clean still made progress
+            progressed = (
+                res["sliced"] or res["collected_files"] or res["rewritten_bytes"]
+            )
+            with self._state_lock:
+                if progressed:
+                    self._gc_stuck = None
+                else:
+                    live = {q.file_id for q in db.bvalue.queues}
+                    self._gc_stuck = db.dead_tracker.signature(
+                        db.dead_tracker.candidates(
+                            db.cfg.gc_dead_ratio_trigger, exclude=live
+                        )
+                    )
         finally:
             with self._state_lock:
                 self._gc_inflight = False
 
-    def run_gc(self, threshold: float) -> dict:
-        """One GC pass; shared lock means a manual ``gc_collect`` and the
-        auto-triggered job can never run concurrently."""
+    def run_gc(self, threshold: float, max_rewrite_bytes: int = 0) -> dict:
+        """One GC pass (``max_rewrite_bytes`` > 0 = one paced slice);
+        shared lock means a manual ``gc_collect`` and the auto-triggered
+        job can never run concurrently."""
         from .gc import BValueGC
 
         with self._gc_lock:
-            return BValueGC(self.db, threshold).collect()
+            return BValueGC(self.db, threshold, max_rewrite_bytes).collect()
 
     # -- subcompactions ---------------------------------------------------
     def run_subtasks(self, fns: list) -> list:

@@ -162,7 +162,7 @@ class SSTableWriter:
         bloom = BloomFilter.build(self._keys).encode()
         filter_off = self._offset
         self._f.write(bloom)
-        index = msgpack.packb([[k, o, l] for k, o, l in self._index])
+        index = msgpack.packb([[k, o, ln] for k, o, ln in self._index])
         index_off = filter_off + len(bloom)
         self._f.write(index)
         if self.format_version >= 2:
@@ -388,8 +388,8 @@ class SSTableReader:
             raise IOError(f"bad SSTable magic in {path}")
         self.bloom = BloomFilter.decode(os.pread(self._f.fileno(), filter_len, filter_off))
         self.index = [
-            (bytes(k), o, l)
-            for k, o, l in msgpack.unpackb(os.pread(self._f.fileno(), index_len, index_off))
+            (bytes(k), o, ln)
+            for k, o, ln in msgpack.unpackb(os.pread(self._f.fileno(), index_len, index_off))
         ]
 
     def _read_block(self, idx: int, fill_cache: bool = True) -> Block:

@@ -38,13 +38,20 @@ class EngineStats:
     * ``bvalue_bytes`` / ``bvalue_fsyncs`` — BValue store I/O
     * ``flush_bytes`` / ``flush_count`` — MemTable→L0 flushes
     * ``compaction_bytes`` / ``compaction_read_bytes`` / ``compaction_count``
+    * ``trivial_moves`` / ``trivial_move_bytes`` — no-overlap files promoted
+      by manifest edit alone (zero rewrite); ``compaction_bytes_written`` /
+      ``user_bytes_written`` — aliases of ``compaction_bytes`` /
+      ``user_bytes`` (the write-amp benchmark's canonical names)
+    * ``gc_slices`` — auto-GC passes that yielded early on the slice budget
     * ``group_commits`` / ``group_writers`` / ``group_entries`` — group
       commit totals; ``memtable_shard_applies`` — groups applied sharded
     * ``job_{flush,compaction,gc}_count`` (+ the ``jobs`` table with wall
       seconds per kind) — background scheduler jobs; ``subcompactions`` —
       key-range shards fanned out by partitioned compactions
     * ``rate_limiter_waits`` / ``rate_limiter_wait_seconds`` — background
-      I/O token-bucket backpressure
+      I/O token-bucket backpressure; ``rate_limiter_fg_bytes`` — foreground
+      value-log bytes charged to the unified budget (accounted, never
+      blocked)
     * ``stall_stop_seconds`` / ``stall_delay_seconds`` — hard stops vs
       delayed-write-controller delays; ``stall_hist`` (pow2 ms bucket →
       count) and ``stall_p99_ms`` — the stall tail
@@ -248,7 +255,15 @@ class EngineStats:
         d["jobs"] = jobs
         d.setdefault("rate_limiter_waits", 0)
         d.setdefault("rate_limiter_wait_seconds", 0.0)
+        d.setdefault("rate_limiter_fg_bytes", 0)
         d.setdefault("subcompactions", 0)
+        d.setdefault("trivial_moves", 0)
+        d.setdefault("trivial_move_bytes", 0)
+        d.setdefault("gc_slices", 0)
+        # canonical names for the write-amp trajectory (BENCH_writeamp.json):
+        # device bytes compaction wrote vs. bytes the user actually stored
+        d["compaction_bytes_written"] = d["compaction_bytes"]
+        d["user_bytes_written"] = d["user_bytes"]
         d["gauges"] = gauges
         if self._block_cache is not None:
             d.update(self._block_cache.stats())

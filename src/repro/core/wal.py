@@ -37,7 +37,7 @@ from __future__ import annotations
 import os
 import threading
 
-from .record import frame_record, frame_records, iter_framed_records
+from .record import frame_records, iter_framed_records
 
 
 class WALWriter:

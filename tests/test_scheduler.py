@@ -25,6 +25,9 @@ def _db(tmp, **kw):
         l0_compaction_trigger=2,
         max_subcompactions=3,
         background_threads=2,
+        # test DBs are tiny: scale the adaptive-shard floor down so
+        # multi-file compactions still fan out at this size
+        subcompaction_min_bytes=32 << 10,
     )
     cfg.update(kw)
     return DB(tmp, DBConfig(**cfg))
