@@ -39,6 +39,11 @@ def _rows_for(name: str, res: dict) -> list[tuple]:
         elif "threads" in c:  # writepath
             label = f"{c.get('wal', '?')}/t{c['threads']}/{c.get('mode', '?')}"
             rows.append((name, label, c.get("ops_per_s"), None, c.get("write_amp")))
+        elif "experiment" in c:  # recovery
+            label = c["experiment"]
+            if "wal_mb" in c:
+                label += f"/{c['wal_mb']}MB"
+            rows.append((name, label, c.get("ops_per_s"), None, None))
         else:
             rows.append((name, "cell", c.get("ops_per_s"), c.get("cv"), c.get("write_amp")))
     for c in res.get("engine", []):  # stability

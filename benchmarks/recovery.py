@@ -1,0 +1,161 @@
+"""Recovery + fault-tolerance benchmark (PR 6).
+
+Two experiments, one artifact (``BENCH_recovery.json``):
+
+* **reopen-vs-WAL**: crash the DB (no flush) with increasing amounts of
+  un-flushed WAL and measure cold-reopen time — the cost of the replay +
+  torn-tail scan + dangling-pointer probe recovery path, reported as
+  ``recover_mb_per_s``.
+* **fault-storm**: a steady write workload is hit with a storm of
+  *transient* injected I/O errors on SSTable writes (probability-based, so
+  flushes keep failing and retrying until the transient-retry budget is
+  exhausted and the DB latches read-only). Reported: accepted-write
+  throughput before / during / after, the fraction of storm-phase writes
+  rejected by the read-only latch, retries burned, and the time from
+  ``resume()`` until the write backlog is fully drained on a healthy disk
+  (``time_to_recover_s``).
+
+Usage: ``PYTHONPATH=src python -m benchmarks.recovery [--quick] [--out F]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+from repro.core import DB, DBConfig, FaultInjectionEnv
+
+VALUE_SIZE = 1024
+KEY_SIZE = 16
+
+
+def _cfg(env=None, memtable_size=64 << 20, value_threshold=256) -> DBConfig:
+    cfg = DBConfig.bvlsm(
+        wal_mode="sync",
+        value_threshold=value_threshold,
+        memtable_size=memtable_size,
+        num_bvalue_queues=2,
+    )
+    cfg.env = env
+    cfg.bg_error_backoff_ms = 5.0
+    return cfg
+
+
+def bench_reopen(wal_mb: float) -> dict:
+    """Fill ~wal_mb of unflushed WAL, crash, time the reopen."""
+    path = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        # huge memtable + inline values: nothing rotates, nothing separates,
+        # so every byte written lands in (and must be replayed from) the WAL
+        db = DB(path, _cfg(value_threshold=VALUE_SIZE * 4))
+        n = int(wal_mb * 1e6 / (KEY_SIZE + VALUE_SIZE))
+        val = b"r" * VALUE_SIZE
+        for i in range(n):
+            db.put(f"{i:016d}".encode(), val)
+        db.close(crash=True)
+        actual_mb = sum(
+            os.path.getsize(os.path.join(path, f))
+            for f in os.listdir(path)
+            if f.startswith("wal_")
+        ) / 1e6
+        t0 = time.monotonic()
+        db = DB(path, _cfg(value_threshold=VALUE_SIZE * 4))
+        dt = time.monotonic() - t0
+        assert db.get(f"{n - 1:016d}".encode()) == val
+        db.close()
+        return {
+            "experiment": "reopen",
+            "wal_mb": round(actual_mb, 2),
+            "keys": n,
+            "reopen_s": round(dt, 4),
+            "ops_per_s": round(n / dt, 1) if dt else None,  # keys replayed /s
+            "recover_mb_per_s": round(actual_mb / dt, 2) if dt else None,
+        }
+    finally:
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def bench_fault_storm(n_per_phase: int, storm_p: float = 0.4) -> dict:
+    """Throughput before/during/after a transient-fault storm on flushes."""
+    path = tempfile.mkdtemp(prefix="bench_storm_")
+    env = FaultInjectionEnv(seed=1)
+    try:
+        # inline values so the memtable fills at value speed and the storm
+        # actually intercepts a steady stream of flush jobs
+        db = DB(
+            path,
+            _cfg(env, memtable_size=128 << 10, value_threshold=VALUE_SIZE * 4),
+        )
+        val = b"s" * VALUE_SIZE
+
+        from repro.core import DBReadOnlyError
+
+        def phase(base: int) -> tuple[float, int]:
+            """ops/s of *accepted* writes; rejected (read-only) ops counted."""
+            ok = rejected = 0
+            t0 = time.monotonic()
+            for i in range(base, base + n_per_phase):
+                try:
+                    db.put(f"{i:016d}".encode(), val)
+                    ok += 1
+                except DBReadOnlyError:
+                    rejected += 1
+            return ok / (time.monotonic() - t0), rejected
+
+        before, _ = phase(0)
+        env.add_fault(
+            op="write", path_substr=".sst", count=None, probability=storm_p
+        )
+        # a sustained storm exhausts the transient-retry budget and latches
+        # the DB read-only — writes fail fast (typed) instead of hanging
+        during, rejected = phase(n_per_phase)
+        env.clear_faults()
+        t0 = time.monotonic()
+        db.resume()
+        after, _ = phase(2 * n_per_phase)
+        db.flush()
+        db.wait_idle()  # backlog fully drained on healthy disk
+        time_to_recover = time.monotonic() - t0
+        s = db.stats.snapshot()
+        db.close()
+        return {
+            "experiment": "fault_storm",
+            "storm_probability": storm_p,
+            "ops_per_s": round(after, 1),  # post-recovery steady state
+            "ops_per_s_before": round(before, 1),
+            "ops_per_s_during": round(during, 1),
+            # fraction of storm-phase writes the DB refused (read-only latch);
+            # rejected writes fail fast, so wall-clock ops/s alone overstates
+            # the health of the "during" phase
+            "storm_reject_fraction": round(rejected / n_per_phase, 3),
+            "writes_rejected": rejected,
+            "bg_retries": s["bg_retries"],
+            "bg_errors_transient_exhausted": s["bg_errors_transient_exhausted"],
+            "resumes": s["resumes"],
+            "time_to_recover_s": round(time_to_recover, 3),
+        }
+    finally:
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--out", default="BENCH_recovery.json")
+    args = ap.parse_args(argv)
+    sizes = [1, 4] if args.quick else [1, 4, 16]
+    n_storm = 2_000 if args.quick else 10_000
+    cells = [bench_reopen(mb) for mb in sizes]
+    cells.append(bench_fault_storm(n_storm))
+    res = {"bench": "recovery", "quick": args.quick, "cells": cells}
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(json.dumps(res, indent=2))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -39,7 +39,13 @@ def _leaf_paths(tree) -> list[tuple[str, object]]:
 
 
 class BVCheckpointStore:
-    def __init__(self, path: str, num_queues: int = 4, sync_values: bool = False):
+    def __init__(
+        self,
+        path: str,
+        num_queues: int = 4,
+        sync_values: bool = False,
+        env=None,
+    ):
         cfg = DBConfig.bvlsm(
             wal_mode="sync",  # metadata commits are synchronous
             value_threshold=4096,
@@ -48,6 +54,7 @@ class BVCheckpointStore:
             bvcache_bytes=16 << 20,
         )
         cfg.sync_flush_io = sync_values
+        cfg.env = env  # pluggable filesystem (fault-injection tests)
         self.db = DB(path, cfg)
 
     # ------------------------------------------------------------------

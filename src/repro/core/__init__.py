@@ -4,10 +4,40 @@ key-value separation, multi-queue BValue store, and BVCache.
 ``DBConfig.separation_mode`` selects the three systems the paper compares:
 ``"none"`` (RocksDB baseline), ``"flush"`` (BlobDB/WiscKey), ``"wal"``
 (BVLSM).
+
+Failure handling (see :mod:`.errors` / :mod:`.env`): every filesystem call
+routes through a pluggable ``Env`` (``DBConfig.env``), background errors are
+severity-classified (transient → bounded retry, hard → read-only mode until
+``DB.resume()``, corruption → file quarantine), and ``FaultInjectionEnv``
+drives the crash/fault test matrix.
 """
 from .config import DBConfig
 from .db import DB
+from .env import DEFAULT_ENV, Env, FaultInjectionEnv, FaultRule
+from .errors import (
+    BackgroundError,
+    CorruptionError,
+    DBError,
+    DBReadOnlyError,
+    SimulatedCrashError,
+    SnapshotUnstableError,
+)
 from .record import ValueOffset
 from .writebatch import WriteBatch
 
-__all__ = ["DB", "DBConfig", "ValueOffset", "WriteBatch"]
+__all__ = [
+    "DB",
+    "DBConfig",
+    "ValueOffset",
+    "WriteBatch",
+    "Env",
+    "FaultInjectionEnv",
+    "FaultRule",
+    "DEFAULT_ENV",
+    "DBError",
+    "DBReadOnlyError",
+    "BackgroundError",
+    "SnapshotUnstableError",
+    "CorruptionError",
+    "SimulatedCrashError",
+]

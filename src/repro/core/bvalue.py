@@ -47,6 +47,8 @@ import threading
 import zlib
 from dataclasses import dataclass
 
+from .env import DEFAULT_ENV
+from .errors import CorruptionError
 from .record import ValueOffset
 
 _SENTINEL = object()
@@ -86,7 +88,7 @@ class _BValueQueue:
 
     def _open(self, file_id: int) -> int:
         path = self.mgr.file_path(file_id)
-        return os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
+        return self.mgr.env.open_fd(path, os.O_WRONLY | os.O_CREAT, 0o644)
 
     def reserve(self, size: int) -> tuple[int, int]:
         """Reserve [offset, offset+size) — returns (file_id, offset). The
@@ -110,8 +112,8 @@ class _BValueQueue:
             self._refs[self.file_id] += 1
             file_id = self.file_id
         if close_fd is not None:
-            os.fsync(close_fd)
-            os.close(close_fd)
+            self.mgr.env.fsync(close_fd)
+            self.mgr.env.close_fd(close_fd)
         return file_id, off
 
     def _fd_for(self, file_id: int) -> int:
@@ -128,13 +130,13 @@ class _BValueQueue:
                 close_fd = self._fds.pop(file_id)
                 del self._refs[file_id]
         if close_fd is not None:
-            os.close(close_fd)
+            self.mgr.env.close_fd(close_fd)
 
     # -- sync path ------------------------------------------------------
     def write_sync(self, file_id: int, offset: int, value: bytes) -> None:
         fd = self._fd_for(file_id)
-        os.pwrite(fd, value, offset)
-        os.fsync(fd)
+        self.mgr.env.pwrite(fd, value, offset)
+        self.mgr.env.fsync(fd)
         self.mgr._account(len(value), fsyncs=1)
         self._release(file_id)
 
@@ -158,10 +160,10 @@ class _BValueQueue:
             if fd is None:
                 fd = touched[fid] = self._fd_for(fid)
             blob = b"".join(v for _, _, v in run)
-            os.pwrite(fd, blob, run[0][1])
+            self.mgr.env.pwrite(fd, blob, run[0][1])
             total += len(blob)
         for fd in touched.values():
-            os.fsync(fd)
+            self.mgr.env.fsync(fd)
         self.mgr._account(total, fsyncs=len(touched))
         for fid, _, _ in resvs:
             self._release(fid)
@@ -251,10 +253,10 @@ class _BValueQueue:
             self._refs.clear()
         for fd in fds:
             try:
-                os.fsync(fd)
+                self.mgr.env.fsync(fd)
             except OSError:
                 pass
-            os.close(fd)
+            self.mgr.env.close_fd(fd)
 
 
 class BValueManager:
@@ -276,10 +278,12 @@ class BValueManager:
         next_file_id: int = 0,
         limiter=None,
         io_priority=None,
+        env=None,
     ):
         assert dispatch in ("round_robin", "least_loaded")
         self.dir = directory
-        os.makedirs(directory, exist_ok=True)
+        self.env = env or DEFAULT_ENV
+        self.env.makedirs(directory)
         self.async_writes = async_writes
         self.dispatch = dispatch
         self.page_size = page_size
@@ -378,27 +382,33 @@ class BValueManager:
     # -- read path ------------------------------------------------------------
     def get(self, voff: ValueOffset, verify: bool = False) -> bytes:
         fd = self._reader_fd(voff.file_id)
-        buf = os.pread(fd, voff.size, voff.offset)
+        buf = self.env.pread(fd, voff.size, voff.offset)
         if len(buf) != voff.size:
+            # short read ≠ corruption: it's a truncation/roll race and is
+            # retryable (plain IOError, classified transient)
             raise IOError(
                 f"short BValue read: file {voff.file_id} off {voff.offset} "
                 f"want {voff.size} got {len(buf)}"
             )
         if verify and voff.crc and (zlib.crc32(buf) & 0xFFFFFFFF) != voff.crc:
-            raise IOError(f"BValue CRC mismatch at file {voff.file_id}+{voff.offset}")
+            raise CorruptionError(
+                f"BValue CRC mismatch at file {voff.file_id}+{voff.offset}",
+                bvalue_file_id=voff.file_id,
+                path=self.file_path(voff.file_id),
+            )
         return buf
 
     def drop_reader(self, file_id: int) -> None:
         with self._read_lock:
             fd = self._read_fds.pop(file_id, None)
             if fd is not None:
-                os.close(fd)
+                self.env.close_fd(fd)
 
     def _reader_fd(self, file_id: int) -> int:
         with self._read_lock:
             fd = self._read_fds.get(file_id)
             if fd is None:
-                fd = os.open(self.file_path(file_id), os.O_RDONLY)
+                fd = self.env.open_fd(self.file_path(file_id), os.O_RDONLY)
                 self._read_fds[file_id] = fd
             return fd
 
@@ -419,5 +429,5 @@ class BValueManager:
             q.close()
         with self._read_lock:
             for fd in self._read_fds.values():
-                os.close(fd)
+                self.env.close_fd(fd)
             self._read_fds.clear()

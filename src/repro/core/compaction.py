@@ -51,7 +51,6 @@ Jitter engineering (the paper's Fig. 9 claim) is layered on top:
 from __future__ import annotations
 
 import heapq
-import os
 import time
 
 from .ratelimiter import IO_CHUNK, PRI_HIGH, PRI_LOW
@@ -94,39 +93,55 @@ class Compactor:
         writer = SSTableWriter(
             table_path(db.path, file_no), cfg.block_size, cfg.compression,
             cfg.sstable_format_version, cfg.block_restart_interval,
+            env=db.env,
         )
         n_written = 0
-        pending_io = 0
-        for key, seq, type_, value in mem.sorted_items():
-            if (
-                cfg.separation_mode == "flush"
-                and type_ == kTypeValue
-                and len(value) >= cfg.value_threshold
-            ):
-                # BlobDB/WiscKey: separate at flush — value goes to the value
-                # log now; only the pointer reaches L0. Under the unified
-                # budget the BValue dispatch charges the value's bytes
-                # itself, so the flush only accounts the pointer entry here.
-                voff = db.bvalue.put(key, value, sync=cfg.sync_flush_io)
-                enc = voff.encode()
-                writer.add(key, seq, kTypeValuePtr, enc)
-                pending_io += len(key) + (
-                    len(enc) if db.bvalue.limiter is not None else len(value)
-                )
-            else:
-                writer.add(key, seq, type_, value)
-                pending_io += len(key) + len(value)
-            n_written += 1
-            if pending_io >= IO_CHUNK:
-                limiter.request(pending_io, PRI_HIGH)
-                pending_io = 0
-        limiter.request(pending_io, PRI_HIGH)
-        if n_written == 0:
-            writer.abandon()
-            return
-        meta = writer.finish(file_no)
+        try:
+            pending_io = 0
+            for key, seq, type_, value in mem.sorted_items():
+                if (
+                    cfg.separation_mode == "flush"
+                    and type_ == kTypeValue
+                    and len(value) >= cfg.value_threshold
+                ):
+                    # BlobDB/WiscKey: separate at flush — value goes to the value
+                    # log now; only the pointer reaches L0. Under the unified
+                    # budget the BValue dispatch charges the value's bytes
+                    # itself, so the flush only accounts the pointer entry here.
+                    voff = db.bvalue.put(key, value, sync=cfg.sync_flush_io)
+                    enc = voff.encode()
+                    writer.add(key, seq, kTypeValuePtr, enc)
+                    pending_io += len(key) + (
+                        len(enc) if db.bvalue.limiter is not None else len(value)
+                    )
+                else:
+                    writer.add(key, seq, type_, value)
+                    pending_io += len(key) + len(value)
+                n_written += 1
+                if pending_io >= IO_CHUNK:
+                    limiter.request(pending_io, PRI_HIGH)
+                    pending_io = 0
+            limiter.request(pending_io, PRI_HIGH)
+            if n_written == 0:
+                writer.abandon()
+                return
+            meta = writer.finish(file_no)
+        except BaseException:
+            # remove the partial output so a retry of this flush (transient
+            # error policy) starts from a clean slate with a fresh file_no
+            try:
+                writer.abandon()
+            except OSError:
+                pass
+            raise
         db.stats.add("flush_bytes", meta.size)
         db.stats.add("flush_count")
+        # value-durability barrier: under a buffered WAL the memtable's
+        # ValueOffset entries may point at values still sitting in the
+        # BValue queue buffers — the manifest commit below makes those
+        # pointers durable, so their values must be durable FIRST, or a
+        # crash leaves a live table full of dangling pointers.
+        db.bvalue.flush()
         db.versions.log_and_apply(
             {
                 "add": [(0, meta.to_wire())],
@@ -134,10 +149,16 @@ class Compactor:
                 "bvalue_next_file_id": db.bvalue.next_file_id,
             }
         )
-        # this memtable's WAL is now redundant — delete it
+        # this memtable's WAL — and, for a memtable rebuilt by recovery, the
+        # replayed logs it carried — are now redundant: the data is durable
+        # in the L0 table the manifest just committed. Delete them only now;
+        # deleting earlier would widen the crash window.
+        logs = list(getattr(mem, "recovery_logs", None) or ())
         if getattr(mem, "wal_no", None) is not None:
+            logs.append(db._wal_path(mem.wal_no))
+        for log_path in logs:
             try:
-                os.unlink(db._wal_path(mem.wal_no))
+                db.env.unlink(log_path)
             except OSError:
                 pass
 
@@ -337,7 +358,7 @@ class Compactor:
             # live process never leaks tables (reopen would sweep them too)
             for m in metas:
                 try:
-                    os.unlink(table_path(db.path, m.file_no))
+                    db.env.unlink(table_path(db.path, m.file_no))
                 except OSError:
                     pass
             raise err
@@ -356,7 +377,7 @@ class Compactor:
         for f in inputs + overlaps:
             db.versions.drop_reader(f.file_no)
             try:
-                os.unlink(table_path(db.path, f.file_no))
+                db.env.unlink(table_path(db.path, f.file_no))
             except OSError:
                 pass
 
@@ -535,6 +556,7 @@ class Compactor:
                     writer = SSTableWriter(
                         table_path(db.path, file_no), cfg.block_size, cfg.compression,
                         cfg.sstable_format_version, cfg.block_restart_interval,
+                        env=db.env,
                     )
                 writer.add(key, seq, type_, value)
                 pending_io += len(key) + len(value)
@@ -555,7 +577,7 @@ class Compactor:
                     pass
             for m in metas:
                 try:
-                    os.unlink(table_path(db.path, m.file_no))
+                    db.env.unlink(table_path(db.path, m.file_no))
                 except OSError:
                     pass
             raise

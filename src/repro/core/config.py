@@ -193,8 +193,22 @@ class DBConfig:
     bvcache_policy: str = "lru"  # lru | lfu
     bvcache_enabled: bool = True  # ablation: False bypasses optimization
     # hits (pinned/unpersisted entries are still consulted — correctness)
+    # --- failure handling (docs/ARCHITECTURE.md §Failure model & recovery) ---
+    # pluggable filesystem layer: every open/write/fsync/rename/unlink/
+    # listdir the engine performs goes through this Env. None = the real
+    # filesystem (core.env.DEFAULT_ENV); tests pass a FaultInjectionEnv to
+    # inject errors, simulate ENOSPC, drop unsynced writes on simulated
+    # crash, and flip bytes for corruption checks.
+    env: object | None = None
+    # background jobs retry transient I/O errors this many times with
+    # exponential backoff (base doubling each attempt, capped, ×jitter in
+    # [0.5, 1.5)) before the error escalates to hard and latches the DB
+    # read-only. 0 disables retries.
+    bg_error_max_retries: int = 3
+    bg_error_backoff_ms: float = 20.0
+    bg_error_backoff_max_ms: float = 2000.0
     # --- misc ---
-    paranoid_checks: bool = False  # CRC-verify BValue reads
+    paranoid_checks: bool = False  # CRC-verify SSTable block + BValue reads
     sync_flush_io: bool = True
 
     def level_max_bytes(self, level: int) -> int:

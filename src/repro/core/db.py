@@ -74,6 +74,8 @@ from .bvcache import BVCache
 from .gc import DeadValueTracker
 from .compaction import _merge_iters
 from .config import DBConfig
+from .env import DEFAULT_ENV
+from .errors import CorruptionError, ErrorHandler, SnapshotUnstableError
 from .manifest import VersionSet
 from .memtable import MemTable
 from .ratelimiter import PRI_FG, PRI_LOW, RateLimiter
@@ -82,12 +84,13 @@ from .record import (
     ValueOffset,
     decode_entries,
     encode_entries,
+    iter_framed_records_ex,
     kTypeDeletion,
     kTypeValue,
     kTypeValuePtr,
 )
 from .stats import EngineStats
-from .wal import WALWriter, replay_wal
+from .wal import WALWriter
 from .writebatch import WriteBatch
 
 
@@ -145,8 +148,12 @@ class DB:
     def __init__(self, path: str, cfg: DBConfig | None = None):
         self.path = path
         self.cfg = cfg or DBConfig()
-        os.makedirs(path, exist_ok=True)
+        # pluggable filesystem: every open/read/write/fsync/rename/unlink in
+        # the engine routes through this (tests inject FaultInjectionEnv)
+        self.env = self.cfg.env or DEFAULT_ENV
+        self.env.makedirs(path)
         self.stats = EngineStats()
+        self.errors = ErrorHandler(self)
         self.mutex = threading.RLock()
         self.writer_cv = threading.Condition(self.mutex)
         # group-commit writer queue: head = leader, rest = followers
@@ -175,7 +182,13 @@ class DB:
             else None
         )
         self.stats.register_block_cache(self.block_cache)
-        self.versions = VersionSet(path, self.cfg.num_levels, self.block_cache)
+        self.versions = VersionSet(
+            path,
+            self.cfg.num_levels,
+            self.block_cache,
+            env=self.env,
+            paranoid=self.cfg.paranoid_checks,
+        )
         self.versions.open()
         self._seq = self.versions.last_seq
 
@@ -225,6 +238,7 @@ class DB:
             io_priority=lambda: (
                 PRI_LOW if getattr(self._bg_local, "exempt", False) else PRI_FG
             ),
+            env=self.env,
         )
 
         self.mem = MemTable()
@@ -246,16 +260,82 @@ class DB:
 
     def _recover(self) -> None:
         logs = sorted(
-            f for f in os.listdir(self.path) if f.startswith("wal_") and f.endswith(".log")
+            f
+            for f in self.env.listdir(self.path)
+            if f.startswith("wal_") and f.endswith(".log")
         )
+        replayed: list[str] = []
         for name in logs:
             no = int(name[4:-4])
             self._wal_no = max(self._wal_no, no + 1)
-            for payload in replay_wal(os.path.join(self.path, name)):
+            path = os.path.join(self.path, name)
+            with self.env.open(path, "rb") as f:
+                buf = f.read()
+            end = 0
+            for payload, end in iter_framed_records_ex(buf):
                 seq, entries = decode_entries(payload)
                 self.mem.add_batch(seq, entries)
                 self._seq = max(self._seq, seq)
-            os.unlink(os.path.join(self.path, name))
+            if end < len(buf):
+                # torn tail (partial frame or CRC mismatch from a crash
+                # mid-append): truncate to the last whole record so nothing
+                # can ever parse past the damage
+                self.stats.add("wal_truncated_bytes", len(buf) - end)
+                with self.env.open(path, "r+b") as f:
+                    f.truncate(end)
+            if end == 0:
+                try:
+                    self.env.unlink(path)  # nothing recoverable in it
+                except OSError:
+                    pass
+            else:
+                replayed.append(path)
+        self._drop_dangling_pointers()
+        if len(self.mem):
+            # The recovered entries exist ONLY in memory + these logs, so
+            # the logs must outlive them: seal the memtable as an immutable
+            # that CARRIES its source logs, and let flush_memtable delete
+            # them after the L0 manifest commit. (The old code unlinked the
+            # logs right here — a crash before the first flush then lost
+            # every previously-acked write.)
+            self.mem.recovery_logs = replayed
+            self.immutables.append(self.mem)
+            self.mem = MemTable()
+        else:
+            for p in replayed:
+                try:
+                    self.env.unlink(p)
+                except OSError:
+                    pass
+
+    def _drop_dangling_pointers(self) -> None:
+        """Close the async-WAL separation hole at recovery time.
+
+        Under a buffered WAL there is no ordering barrier between a
+        separated value's fsync and its Key-ValueOffset record reaching the
+        disk, so a crash can leave a durable pointer to value bytes that
+        never made it. Probe every replayed pointer and drop the records
+        whose bytes are gone: the key falls back to its previous durable
+        version — legal, since an async ack never promised durability —
+        instead of every future ``get`` failing on a short read forever.
+        (Sync WAL fsyncs the value before appending the pointer, so there
+        every probe succeeds by construction.)"""
+        dangling = set()
+        for key, (_seq, type_, value) in self.mem._table.items():
+            if type_ != kTypeValuePtr:
+                continue
+            try:
+                self.bvalue.get(ValueOffset.decode(value), verify=False)
+            except Exception:
+                dangling.add(key)
+        if not dangling:
+            return
+        self.stats.add("recovery_dangling_ptrs", len(dangling))
+        mem = MemTable()
+        for key, (seq, type_, value) in self.mem._table.items():
+            if key not in dangling:
+                mem.add(seq, type_, key, value)
+        self.mem = mem
 
     def _open_wal(self) -> None:
         if self.cfg.wal_mode == "off":
@@ -267,6 +347,7 @@ class DB:
             flush_interval_s=self.cfg.wal_flush_interval_s,
             flush_bytes=self.cfg.wal_flush_bytes,
             stats=self.stats,
+            env=self.env,
         )
         self.mem.wal_no = self._wal_no
         self._wal_no += 1
@@ -299,6 +380,9 @@ class DB:
         """Commit one batch; returns False iff a ``precondition`` made the
         leader skip it (see :class:`_Writer`)."""
         cfg = self.cfg
+        # fail fast while read-only: don't separate values (phase 1 would
+        # write them to the BValue log) for a commit that cannot proceed
+        self.errors.check_writable()
         # --- Phase 1: WAL-time separation happens OUTSIDE the DB mutex and
         # outside the writer group: parallel callers stream values onto
         # different queues concurrently; a batch's big values fan out across
@@ -363,8 +447,7 @@ class DB:
         """
         cfg = self.cfg
         try:
-            if self.bg.error is not None:
-                raise RuntimeError("background job failed") from self.bg.error
+            self.errors.check_writable()
             self._maybe_stall_locked()
         except BaseException as e:  # fail fast: only the leader is charged
             popped = self._writers.popleft()
@@ -677,8 +760,7 @@ class DB:
             or len(self.versions.current.levels[0]) >= cfg.l0_stop_trigger
             or pending >= cfg.hard_pending_compaction_bytes
         ):
-            if self.bg.error is not None:
-                raise RuntimeError("background job failed") from self.bg.error
+            self.errors.check_writable()
             if t0 is None:
                 t0 = time.monotonic()
                 self.bg.maybe_schedule()
@@ -736,8 +818,12 @@ class DB:
                     found, _seq, type_, value = reader.get(key)
                     if found:
                         return self._resolve(key, type_, value)
-            except (OSError, ValueError):
+            except (OSError, ValueError) as e:
                 if self.versions.current is version:
+                    if isinstance(e, CorruptionError):
+                        # quarantine before surfacing: the next read (and
+                        # the compaction picker) skips the bad file
+                        self.errors.on_corruption(e)
                     raise  # stable snapshot: real I/O or corruption error
                 continue  # snapshot superseded mid-walk — take a fresh one
             # a miss is only trustworthy if the version didn't move under
@@ -760,7 +846,11 @@ class DB:
             self.bvcache.hits += 1
             return cached
         self.bvcache.misses += 1
-        return self.bvalue.get(voff, verify=self.cfg.paranoid_checks)
+        try:
+            return self.bvalue.get(voff, verify=self.cfg.paranoid_checks)
+        except CorruptionError as e:
+            self.errors.on_corruption(e)  # quarantine the value-log file
+            raise
 
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
         """Return up to ``count`` live ``(key, value)`` pairs with
@@ -777,7 +867,24 @@ class DB:
         concatenating iterator that binary-searches the file list and opens
         a file only when the merge cursor actually reaches it — a short
         scan touches O(levels) files, not O(all files).
+
+        If 8 attempts all land on torn snapshots, one bounded backoff round
+        (compaction churn usually settles within milliseconds) precedes the
+        typed :class:`SnapshotUnstableError`.
         """
+        for _round in range(2):
+            if _round:
+                time.sleep(0.005)  # one backoff round, then give up typed
+            result = self._scan_attempts(start, count)
+            if result is not None:
+                return result
+        raise SnapshotUnstableError(
+            "scan() could not obtain a stable version snapshot"
+        )
+
+    def _scan_attempts(
+        self, start: bytes, count: int
+    ) -> list[tuple[bytes, bytes]] | None:
         for _attempt in range(8):
             with self.mutex:
                 mems = [self.mem, *reversed(self.immutables)]
@@ -803,12 +910,14 @@ class DB:
                     out.append((key, resolved))
                     if len(out) >= count:
                         break
-            except (OSError, ValueError):
+            except (OSError, ValueError) as e:
                 if self.versions.current is version:
+                    if isinstance(e, CorruptionError):
+                        self.errors.on_corruption(e)
                     raise  # stable snapshot: real I/O or corruption error
                 continue  # snapshot superseded mid-scan — restart
             return out
-        raise RuntimeError("scan() could not obtain a stable version snapshot")
+        return None  # every attempt torn — caller decides backoff/raise
 
     def _level_concat_iter(self, files, start: bytes):
         """Lazily chain one sorted level's tables: a reader is opened only
@@ -857,6 +966,130 @@ class DB:
     def compact_all(self) -> None:
         """Drive compaction to quiescence (test/benchmark helper)."""
         self.wait_idle(compactions=True)
+
+    def resume(self) -> None:
+        """Leave read-only mode after a hard background error.
+
+        Probes the Env (write + fsync + readback of a scratch file — if the
+        cause, say ENOSPC, still holds, the probe raises and the latch
+        stays), clears the error latch, replaces a poisoned WAL by sealing
+        the current memtable (its log tail may be torn; replay stops at the
+        damage anyway, and the sealed memtable holds everything acked), and
+        re-kicks the scheduler so deferred flush/compaction/GC work drains.
+        """
+        if self.errors.error is None:
+            return  # not latched: nothing to do
+        probe = os.path.join(self.path, "RESUME_PROBE")
+        f = self.env.open(probe, "wb")
+        try:
+            f.write(b"probe")
+            f.flush()
+            self.env.fsync(f)
+        finally:
+            f.close()
+        try:
+            with self.env.open(probe, "rb") as f:
+                if f.read() != b"probe":
+                    raise IOError("resume(): Env probe readback mismatch")
+        finally:
+            try:
+                self.env.unlink(probe)
+            except OSError:
+                pass
+        self.errors.clear()
+        with self.mutex:
+            wal = self.wal
+            if wal is not None and wal._poisoned:
+                # a WAL append failed mid-file: never append past the torn
+                # tail. The failed group was never applied (publish skips on
+                # error), so the memtable holds exactly the durable prefix —
+                # seal it behind a fresh WAL file.
+                while self._pending:
+                    self._publish_cv.wait()
+                self._rotate_memtable_locked()
+        self.stats.add("resumes")
+        self.bg.maybe_schedule()
+
+    def verify_integrity(self, background: bool = False) -> dict | None:
+        """Scrub the DB: CRC-verify every live SSTable block and every
+        separated value reachable from a live table entry. Corrupt files
+        are quarantined (manifest-marked, skipped by compaction and GC)
+        via the normal :class:`CorruptionError` path. Reads are paced at
+        low priority through the shared I/O token bucket, so a scrub
+        cannot starve foreground traffic.
+
+        ``background=True`` submits the scrub to the low-priority job pool
+        and returns None; otherwise runs inline and returns a report dict.
+        """
+        if background:
+            self.bg.submit_scrub()
+            return None
+        return self._scrub()
+
+    def _scrub(self) -> dict:
+        report = {
+            "sst_files": 0,
+            "blocks_verified": 0,
+            "values_verified": 0,
+            "corruptions": [],
+        }
+        version = self.versions.current
+        quarantined = self.versions.quarantined_files()
+        seen_vals: set[tuple[int, int]] = set()
+        for level in range(len(version.levels)):
+            for fmeta in version.levels[level]:
+                if self._closed or fmeta.file_no in quarantined:
+                    continue
+                try:
+                    reader = self.versions.reader(fmeta.file_no)
+                except OSError:
+                    continue  # compacted away under the scrub — fine
+                report["sst_files"] += 1
+                bad = False
+                for idx in range(len(reader.index)):
+                    if self._closed:
+                        break
+                    _key, _off, length = reader.index[idx]
+                    self.rate_limiter.request(length, PRI_LOW)
+                    try:
+                        reader.verify_block(idx)
+                    except CorruptionError as e:
+                        self.errors.on_corruption(e)
+                        report["corruptions"].append(str(e))
+                        bad = True
+                        break  # quarantined: the rest of the file is moot
+                    except OSError:
+                        bad = True
+                        break  # truncated/unlinked mid-scrub: not corruption
+                    report["blocks_verified"] += 1
+                if bad:
+                    continue
+                # follow the table's value pointers into the BValue log
+                try:
+                    for _k, _seq, type_, value in reader.iter_all(fill_cache=False):
+                        if self._closed:
+                            break
+                        if type_ != kTypeValuePtr:
+                            continue
+                        voff = ValueOffset.decode(value)
+                        if (
+                            voff.file_id in self.versions.quarantined_bvalues
+                            or (voff.file_id, voff.offset) in seen_vals
+                        ):
+                            continue
+                        seen_vals.add((voff.file_id, voff.offset))
+                        self.rate_limiter.request(voff.size, PRI_LOW)
+                        try:
+                            self.bvalue.get(voff, verify=True)
+                            report["values_verified"] += 1
+                        except CorruptionError as e:
+                            self.errors.on_corruption(e)
+                            report["corruptions"].append(str(e))
+                        except OSError:
+                            continue  # GC'd / short read: retryable, not rot
+                except OSError:
+                    continue
+        return report
 
     def close(self, crash: bool = False) -> None:
         """Shut down the engine. ``crash=True`` simulates a hard crash for

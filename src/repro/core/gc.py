@@ -36,10 +36,10 @@ deadest-first so each slice reclaims the most bytes per rewrite.
 """
 from __future__ import annotations
 
-import os
 import threading
 from collections import defaultdict
 
+from .errors import SnapshotUnstableError
 from .ratelimiter import PRI_LOW
 from .record import ValueOffset, kTypeValue, kTypeValuePtr
 
@@ -114,8 +114,13 @@ class BValueGC:
         self.sliced = False  # budget exhausted with work remaining
 
     def _live_files(self) -> set[int]:
-        """Files still being appended to (never collect the active tail)."""
-        return {q.file_id for q in self.db.bvalue.queues}
+        """Files GC must not touch: the active append tails, plus any file
+        quarantined for corruption (rewriting through it would read the bad
+        bytes; the file stays on disk so its intact values keep serving)."""
+        db = self.db
+        return {q.file_id for q in db.bvalue.queues} | set(
+            db.versions.quarantined_bvalues
+        )
 
     def _stopping(self) -> bool:
         db = self.db
@@ -240,8 +245,8 @@ class BValueGC:
                 db.flush()
                 path = db.bvalue.file_path(fid)
                 try:
-                    size = os.path.getsize(path)
-                    os.unlink(path)
+                    size = db.env.getsize(path)
+                    db.env.unlink(path)
                 except OSError:
                     size = 0
                 db.bvalue.drop_reader(fid)
@@ -290,4 +295,4 @@ class BValueGC:
         # every attempt died on a torn snapshot: treating that as "no live
         # pointer" would let collect() unlink a file without rewriting this
         # key — surface the instability instead (the pass retries later)
-        raise RuntimeError("GC could not obtain a stable version snapshot")
+        raise SnapshotUnstableError("GC could not obtain a stable version snapshot")

@@ -12,6 +12,7 @@ import threading
 
 import msgpack
 
+from .env import DEFAULT_ENV
 from .record import frame_record, iter_framed_records
 from .sstable import FileMetadata, SSTableReader, table_path
 
@@ -107,16 +108,24 @@ class Version:
 
 
 class VersionSet:
-    def __init__(self, directory: str, num_levels: int, block_cache=None):
+    def __init__(self, directory: str, num_levels: int, block_cache=None, env=None, paranoid=False):
         self.dir = directory
         self.num_levels = num_levels
         # shared decoded-block cache handed to every SSTableReader (None =
         # caching disabled); owned by the DB, shared with gets/scans/compaction
         self.block_cache = block_cache
+        self.env = env or DEFAULT_ENV
+        self.paranoid = paranoid
         self.current = Version(num_levels)
         self.last_seq = 0
         self.next_file_no = 1
         self.bvalue_next_file_id = 0
+        # files a CRC-verified read found corrupt: still in the levels (their
+        # intact blocks keep serving reads) but excluded from compaction
+        # picking and, for value files, from GC — the damage is contained
+        # instead of being rewritten downstream or crashing jobs forever.
+        self.quarantined: set[int] = set()
+        self.quarantined_bvalues: set[int] = set()
         self._manifest = None
         self._lock = threading.Lock()
         self._readers: dict[int, SSTableReader] = {}
@@ -134,13 +143,13 @@ class VersionSet:
 
     def open(self) -> None:
         path = self._manifest_path()
-        if os.path.exists(path):
-            with open(path, "rb") as f:
+        if self.env.exists(path):
+            with self.env.open(path, "rb") as f:
                 buf = f.read()
             for payload in iter_framed_records(buf):
                 self._apply(msgpack.unpackb(payload))
         self._sweep_orphans()
-        self._manifest = open(path, "ab", buffering=0)
+        self._manifest = self.env.open(path, "ab", buffering=0)
 
     def _sweep_orphans(self) -> None:
         """Delete .sst files not referenced by any level — the outputs of a
@@ -148,7 +157,7 @@ class VersionSet:
         before its atomic manifest edit. Also bumps ``next_file_no`` past
         every on-disk table so a recovered counter can never collide."""
         live = {f.file_no for lv in self.current.levels for f in lv}
-        for name in os.listdir(self.dir):
+        for name in self.env.listdir(self.dir):
             if not name.endswith(".sst"):
                 continue
             try:
@@ -158,7 +167,7 @@ class VersionSet:
             self.next_file_no = max(self.next_file_no, no + 1)
             if no not in live:
                 try:
-                    os.unlink(os.path.join(self.dir, name))
+                    self.env.unlink(os.path.join(self.dir, name))
                 except OSError:
                     pass
 
@@ -173,7 +182,14 @@ class VersionSet:
                 v.levels[level].sort(key=lambda f: f.smallest)
         for level, file_no in edit.get(b"delete", edit.get("delete", [])):
             v.levels[level] = [f for f in v.levels[level] if f.file_no != file_no]
+            self.quarantined.discard(file_no)
         self.current = v
+        for kind, ident in edit.get(b"quarantine", edit.get("quarantine", [])):
+            kind = kind.decode() if isinstance(kind, bytes) else kind
+            if kind == "sst":
+                self.quarantined.add(ident)
+            elif kind == "bvalue":
+                self.quarantined_bvalues.add(ident)
         for k_raw in (b"last_seq", "last_seq"):
             if k_raw in edit:
                 self.last_seq = max(self.last_seq, edit[k_raw])
@@ -189,8 +205,37 @@ class VersionSet:
             edit.setdefault("next_file_no", self.next_file_no)
             payload = msgpack.packb(edit, use_bin_type=True)
             self._manifest.write(frame_record(payload))
-            os.fsync(self._manifest.fileno())
+            self.env.fsync(self._manifest)
             self._apply(edit)
+
+    # -- quarantine -------------------------------------------------------
+    def quarantine(self, kind: str, ident: int) -> bool:
+        """Mark a corrupt file so pick/GC skip it. Durable via a manifest
+        edit when possible; if even the manifest write fails, the mark is
+        kept in memory (better to run degraded now and rediscover the
+        corruption after a restart than to crash). Returns False when the
+        file was already quarantined (nothing new to handle)."""
+        with self._lock:
+            already = (
+                ident in self.quarantined
+                if kind == "sst"
+                else ident in self.quarantined_bvalues
+            )
+        if already:
+            return False
+        try:
+            self.log_and_apply({"quarantine": [(kind, ident)]})
+        except OSError:
+            with self._lock:
+                if kind == "sst":
+                    self.quarantined.add(ident)
+                else:
+                    self.quarantined_bvalues.add(ident)
+        return True
+
+    def quarantined_files(self) -> set[int]:
+        with self._lock:
+            return set(self.quarantined)
 
     # -- file number / reader management -------------------------------------
     def new_file_no(self) -> int:
@@ -223,7 +268,10 @@ class VersionSet:
             return r
         # construct OUTSIDE the lock (opens the file + loads its index);
         # on a race the loser's never-shared reader is closed immediately
-        r = SSTableReader(table_path(self.dir, file_no), file_no, self.block_cache)
+        r = SSTableReader(
+            table_path(self.dir, file_no), file_no, self.block_cache,
+            env=self.env, paranoid=self.paranoid,
+        )
         with self._lock:
             existing = self._readers.get(file_no)
             if existing is None:

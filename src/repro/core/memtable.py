@@ -42,7 +42,7 @@ ENTRY_OVERHEAD = 24  # node/arena bookkeeping per entry (approximation)
 
 class MemTable:
     __slots__ = ("_table", "_bytes", "_version", "_sorted_cache",
-                 "first_seq", "last_seq", "wal_no")
+                 "first_seq", "last_seq", "wal_no", "recovery_logs")
 
     def __init__(self) -> None:
         self._table: dict[bytes, tuple[int, int, bytes]] = {}
@@ -52,6 +52,10 @@ class MemTable:
         self.first_seq: int | None = None
         self.last_seq = 0
         self.wal_no: int | None = None  # WAL file backing this memtable
+        # WAL files this memtable was rebuilt from at recovery; they are the
+        # ONLY durable copy of its entries, so flush deletes them strictly
+        # after the L0 manifest commit (see compaction.flush_memtable)
+        self.recovery_logs: list[str] | None = None
 
     def __len__(self) -> int:
         return len(self._table)

@@ -154,6 +154,14 @@ def decode_entries(payload: bytes) -> tuple[int, list[tuple[int, bytes, bytes]]]
 def iter_framed_records(buf: bytes):
     """Yield payloads from a CRC-framed log; stop at the first corrupt/torn
     record (standard WAL tail-truncation semantics)."""
+    for payload, _end in iter_framed_records_ex(buf):
+        yield payload
+
+
+def iter_framed_records_ex(buf: bytes):
+    """Like :func:`iter_framed_records` but yields ``(payload, end_offset)``
+    where ``end_offset`` is the byte position just past the record's frame —
+    recovery uses the last good offset to truncate a torn tail in place."""
     pos = 0
     n = len(buf)
     while pos + WAL_HEADER_SIZE <= n:
@@ -164,5 +172,5 @@ def iter_framed_records(buf: bytes):
         payload = buf[body_start : body_start + length]
         if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
             return  # corrupt record — stop replay here
-        yield payload
         pos = body_start + length
+        yield payload, pos

@@ -38,6 +38,7 @@ import traceback
 from collections import deque
 
 from .compaction import Compactor
+from .errors import JOB_ABORTED, BackgroundError
 
 # job priorities share the rate limiter's definitions: flush is HIGH in
 # both domains (thread pool and I/O budget), compaction/GC LOW in both —
@@ -292,7 +293,11 @@ class BackgroundCoordinator:
     def _pick_and_lock(self):
         db = self.db
         with self._pick_lock:
-            picked = self.compactor.pick(db.versions.locked_files())
+            # quarantined tables are pick-excluded exactly like locked ones:
+            # rewriting them would read the corrupt bytes and fail forever
+            picked = self.compactor.pick(
+                db.versions.locked_files() | db.versions.quarantined_files()
+            )
             if picked is None:
                 return None
             level, inputs, overlaps = picked
@@ -315,7 +320,11 @@ class BackgroundCoordinator:
             with db.mutex:
                 mem = db.immutables[0] if db.immutables else None
             if mem is not None:
-                self.compactor.flush_memtable(mem)
+                res = db.errors.run_job(
+                    lambda: self.compactor.flush_memtable(mem), "flush"
+                )
+                if res is JOB_ABORTED:
+                    return  # immutable stays queued for the next edge
                 with db.mutex:
                     # crash-close may have cleared the list under us
                     if db.immutables and db.immutables[0] is mem:
@@ -328,7 +337,12 @@ class BackgroundCoordinator:
         level, inputs, overlaps = picked
         db = self.db
         try:
-            self.compactor.run(level, inputs, overlaps, subtasks=self.run_subtasks)
+            db.errors.run_job(
+                lambda: self.compactor.run(
+                    level, inputs, overlaps, subtasks=self.run_subtasks
+                ),
+                "compaction",
+            )
         finally:
             db.versions.unlock_files([f.file_no for f in inputs + overlaps])
             with self._state_lock:
@@ -352,7 +366,9 @@ class BackgroundCoordinator:
         with self._state_lock:
             if self._gc_inflight:
                 return
-            live = {q.file_id for q in db.bvalue.queues}
+            live = {q.file_id for q in db.bvalue.queues} | set(
+                db.versions.quarantined_bvalues
+            )
             cands = db.dead_tracker.candidates(cfg.gc_dead_ratio_trigger, exclude=live)
             if not cands:
                 return
@@ -384,7 +400,11 @@ class BackgroundCoordinator:
                     max_rewrite_bytes=db.cfg.gc_slice_bytes,
                     resume=self._gc_resume,
                 )
-                res = gc.collect()
+                res = db.errors.run_job(gc.collect, "gc")
+                if res is JOB_ABORTED:
+                    # a corrupt file was quarantined mid-pass; keep the
+                    # progress counters the pass banked before aborting
+                    res = gc._stats()
                 self._gc_resume = gc.resume_state
             if res["sliced"]:
                 db.stats.add("gc_slices")
@@ -398,7 +418,9 @@ class BackgroundCoordinator:
                 if progressed:
                     self._gc_stuck = None
                 else:
-                    live = {q.file_id for q in db.bvalue.queues}
+                    live = {q.file_id for q in db.bvalue.queues} | set(
+                        db.versions.quarantined_bvalues
+                    )
                     self._gc_stuck = db.dead_tracker.signature(
                         db.dead_tracker.candidates(
                             db.cfg.gc_dead_ratio_trigger, exclude=live
@@ -407,6 +429,15 @@ class BackgroundCoordinator:
         finally:
             with self._state_lock:
                 self._gc_inflight = False
+
+    def submit_scrub(self) -> bool:
+        """Queue one integrity scrub (``DB.verify_integrity``) on the
+        low-priority pool; its block/value reads are additionally paced by
+        the shared I/O token bucket at PRI_LOW."""
+        db = self.db
+        return self.sched.submit(
+            "scrub", lambda: db.errors.run_job(db._scrub, "scrub"), PRI_LOW, "scrub"
+        )
 
     def run_gc(self, threshold: float, max_rewrite_bytes: int = 0) -> dict:
         """One GC pass (``max_rewrite_bytes`` > 0 = one paced slice);
@@ -461,7 +492,7 @@ class BackgroundCoordinator:
         with self.sched.condition:
             while True:
                 if self.sched.error is not None:
-                    raise RuntimeError("background job failed") from self.sched.error
+                    raise BackgroundError("background job failed") from self.sched.error
                 if self._idle_locked(compactions):
                     return
                 remaining = deadline - time.monotonic()

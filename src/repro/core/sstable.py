@@ -16,7 +16,10 @@ File layout::
   full-block linear decode. Entries are not prefix-compressed, so every
   restart offset is self-parseable.
 * filter block — :class:`~repro.core.bloom.BloomFilter` over user keys.
-* index block — msgpack list of ``(last_key, offset, length)``.
+* index block — msgpack list of ``(last_key, offset, length[, crc32])``;
+  the optional 4th element is the block's crc32, verified on read under
+  ``paranoid_checks`` and by the ``DB.verify_integrity`` scrub. Tables
+  written before the CRC existed decode fine (entries are 3-wide).
 * footer — v1: fixed 40 B ``filter_off, filter_len, index_off, index_len,
   magic``; v2: fixed 48 B with a ``version`` field before a new magic.
   Readers dispatch on the trailing magic, so v1 tables written by older
@@ -39,6 +42,7 @@ from __future__ import annotations
 import bisect
 import os
 import struct
+import zlib
 from dataclasses import dataclass
 
 import msgpack
@@ -54,6 +58,8 @@ except ImportError:  # pragma: no cover - environment-dependent
     _DCTX = None
 
 from .bloom import BloomFilter
+from .env import DEFAULT_ENV
+from .errors import CorruptionError
 from .record import decode_varint, encode_varint
 
 _FOOTER_V1 = struct.Struct("<QQQQQ")
@@ -94,6 +100,7 @@ class SSTableWriter:
         compression: bool = False,
         format_version: int = FORMAT_VERSION,
         restart_interval: int = 16,
+        env=None,
     ):
         if not 1 <= format_version <= FORMAT_VERSION:
             raise ValueError(f"unsupported sstable format_version {format_version}")
@@ -102,11 +109,15 @@ class SSTableWriter:
         self.compression = compression
         self.format_version = format_version
         self.restart_interval = max(1, restart_interval)
-        self._f = open(path, "wb")
+        self._env = env or DEFAULT_ENV
+        self._f = self._env.open(path, "wb")
         self._block: list[bytes] = []
         self._block_bytes = 0
         self._restarts: list[int] = []
-        self._index: list[tuple[bytes, int, int]] = []
+        # index entries are (last_key, offset, length, crc32-of-blob); the
+        # crc is a 4th element so v2 tables written before it existed (plain
+        # 3-element entries) keep decoding — readers accept both widths.
+        self._index: list[tuple[bytes, int, int, int]] = []
         self._keys: list[bytes] = []
         self._offset = 0
         self._count = 0
@@ -150,7 +161,7 @@ class SSTableWriter:
         else:
             blob = b"\x00" + raw
         self._f.write(blob)
-        self._index.append((last_key, self._offset, len(blob)))
+        self._index.append((last_key, self._offset, len(blob), zlib.crc32(blob) & 0xFFFFFFFF))
         self._offset += len(blob)
         self._block = []
         self._block_bytes = 0
@@ -162,7 +173,7 @@ class SSTableWriter:
         bloom = BloomFilter.build(self._keys).encode()
         filter_off = self._offset
         self._f.write(bloom)
-        index = msgpack.packb([[k, o, ln] for k, o, ln in self._index])
+        index = msgpack.packb([[k, o, ln, crc] for k, o, ln, crc in self._index])
         index_off = filter_off + len(bloom)
         self._f.write(index)
         if self.format_version >= 2:
@@ -176,14 +187,14 @@ class SSTableWriter:
             )
         self._f.write(footer)
         self._f.flush()
-        os.fsync(self._f.fileno())
+        self._env.fsync(self._f)
         self._f.close()
         size = index_off + len(index) + len(footer)
         return FileMetadata(file_no, size, self.smallest or b"", self.largest or b"", self._count)
 
     def abandon(self) -> None:
         self._f.close()
-        os.unlink(self.path)
+        self._env.unlink(self.path)
 
 
 def _decompress(blob: bytes) -> bytes:
@@ -363,14 +374,16 @@ class SSTableReader:
     evict the foreground working set).
     """
 
-    def __init__(self, path: str, file_no: int = 0, cache=None):
+    def __init__(self, path: str, file_no: int = 0, cache=None, env=None, paranoid=False):
         self.path = path
         self.file_no = file_no
         self.cache = cache
-        self._f = open(path, "rb")
+        self._env = env or DEFAULT_ENV
+        self.paranoid = paranoid
+        self._f = self._env.open(path, "rb")
         self._f.seek(0, os.SEEK_END)
         file_size = self._f.tell()
-        tail = os.pread(self._f.fileno(), min(file_size, _FOOTER_V2.size), max(0, file_size - _FOOTER_V2.size))
+        tail = self._env.pread_f(self._f, min(file_size, _FOOTER_V2.size), max(0, file_size - _FOOTER_V2.size))
         (magic,) = struct.unpack_from("<Q", tail, len(tail) - 8)
         if magic == _MAGIC_V1:
             filter_off, filter_len, index_off, index_len, _ = _FOOTER_V1.unpack(
@@ -386,11 +399,14 @@ class SSTableReader:
             self.format_version = version
         else:
             raise IOError(f"bad SSTable magic in {path}")
-        self.bloom = BloomFilter.decode(os.pread(self._f.fileno(), filter_len, filter_off))
-        self.index = [
-            (bytes(k), o, ln)
-            for k, o, ln in msgpack.unpackb(os.pread(self._f.fileno(), index_len, index_off))
-        ]
+        self.bloom = BloomFilter.decode(self._env.pread_f(self._f, filter_len, filter_off))
+        # index entries may be 3-wide (pre-CRC tables) or 4-wide (with a
+        # per-block crc32). ``self.index`` stays 3-tuples — downstream code
+        # (compaction bounds augmentation) unpacks ``k, off, len`` — and the
+        # crcs live in a parallel list (None per block when absent).
+        raw_index = msgpack.unpackb(self._env.pread_f(self._f, index_len, index_off))
+        self.index = [(bytes(e[0]), e[1], e[2]) for e in raw_index]
+        self.block_crcs = [e[3] if len(e) > 3 else None for e in raw_index]
 
     def _read_block(self, idx: int, fill_cache: bool = True) -> Block:
         cache = self.cache
@@ -405,12 +421,51 @@ class SSTableReader:
         # and background flush/compaction iterators, and a seek+read pair
         # would interleave offsets between threads (silently decoding the
         # wrong block). pread has no cursor, so it is race-free.
-        blk = Block.from_blob(
-            os.pread(self._f.fileno(), length, off), self.format_version
-        )
+        blob = self._env.pread_f(self._f, length, off)
+        if self.paranoid:
+            self._check_block(idx, blob, length)
+        blk = Block.from_blob(blob, self.format_version)
         if cache is not None and fill_cache:
             cache.put(key, blk)
         return blk
+
+    def _check_block(self, idx: int, blob: bytes, length: int) -> None:
+        """CRC-verify one block's raw bytes. A short read is an OSError
+        (truncation/unlink race — transient, retryable), never corruption:
+        only a full-length blob whose checksum disagrees is corrupt."""
+        if len(blob) != length:
+            raise IOError(
+                f"short SSTable block read in {self.path} "
+                f"(block {idx}: got {len(blob)}, want {length})"
+            )
+        crc = self.block_crcs[idx]
+        if crc is not None and (zlib.crc32(blob) & 0xFFFFFFFF) != crc:
+            raise CorruptionError(
+                f"SSTable block CRC mismatch in {self.path} (block {idx})",
+                sst_file_no=self.file_no,
+                path=self.path,
+            )
+
+    def verify_block(self, idx: int) -> None:
+        """Scrub entry point: read block ``idx`` from disk (never the cache),
+        CRC-verify it regardless of ``paranoid``, and fully parse it.
+        Raises CorruptionError on bad bytes, OSError on short reads."""
+        _, off, length = self.index[idx]
+        blob = self._env.pread_f(self._f, length, off)
+        self._check_block(idx, blob, length)
+        try:
+            for _ in Block.from_blob(blob, self.format_version):
+                pass
+        except CorruptionError:
+            raise
+        except Exception as exc:
+            # undecodable despite a matching (or absent) CRC — pre-CRC
+            # tables land here when their bytes are damaged
+            raise CorruptionError(
+                f"SSTable block {idx} in {self.path} failed to parse: {exc}",
+                sst_file_no=self.file_no,
+                path=self.path,
+            ) from exc
 
     def _seek_block(self, key: bytes) -> int:
         """Index of the first block whose last_key >= key (or len(index))."""

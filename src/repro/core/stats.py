@@ -52,6 +52,13 @@ class EngineStats:
       I/O token-bucket backpressure; ``rate_limiter_fg_bytes`` — foreground
       value-log bytes charged to the unified budget (accounted, never
       blocked)
+    * ``wal_truncated_bytes`` — torn WAL tail bytes truncated at recovery
+    * ``bg_retries`` — transient background-job errors retried with backoff;
+      ``bg_errors_hard`` / ``bg_errors_transient_exhausted`` — errors that
+      latched the DB read-only; ``resumes`` — successful ``DB.resume()``
+      calls clearing the latch
+    * ``corruptions_detected`` / ``files_quarantined`` — CRC-verified reads
+      that failed and the files quarantined for it
     * ``stall_stop_seconds`` / ``stall_delay_seconds`` — hard stops vs
       delayed-write-controller delays; ``stall_hist`` (pow2 ms bucket →
       count) and ``stall_p99_ms`` — the stall tail
@@ -260,6 +267,13 @@ class EngineStats:
         d.setdefault("trivial_moves", 0)
         d.setdefault("trivial_move_bytes", 0)
         d.setdefault("gc_slices", 0)
+        d.setdefault("wal_truncated_bytes", 0)
+        d.setdefault("bg_retries", 0)
+        d.setdefault("bg_errors_hard", 0)
+        d.setdefault("bg_errors_transient_exhausted", 0)
+        d.setdefault("corruptions_detected", 0)
+        d.setdefault("files_quarantined", 0)
+        d.setdefault("resumes", 0)
         # canonical names for the write-amp trajectory (BENCH_writeamp.json):
         # device bytes compaction wrote vs. bytes the user actually stored
         d["compaction_bytes_written"] = d["compaction_bytes"]

@@ -34,9 +34,9 @@ corrupt record.
 """
 from __future__ import annotations
 
-import os
 import threading
 
+from .env import DEFAULT_ENV
 from .record import frame_records, iter_framed_records
 
 
@@ -48,11 +48,13 @@ class WALWriter:
         flush_interval_s: float = 0.05,
         flush_bytes: int = 1 << 20,
         stats=None,
+        env=None,
     ):
         assert mode in ("sync", "async")
         self.path = path
         self.mode = mode
-        self._f = open(path, "ab", buffering=0)
+        self._env = env or DEFAULT_ENV
+        self._f = self._env.open(path, "ab", buffering=0)
         self._stats = stats
         self._closed = False
         # ticket barrier state (sync + async: file/buffer order must match
@@ -146,7 +148,7 @@ class WALWriter:
         if self.mode == "async":
             self._drain()
         else:
-            os.fsync(self._f.fileno())
+            self._env.fsync(self._f)
 
     def close(self, drop_buffered: bool = False) -> None:
         """drop_buffered=True simulates a crash with unflushed async buffer."""
@@ -208,7 +210,7 @@ class WALWriter:
                     break
                 self._order_cv.wait()
         try:
-            os.fsync(self._f.fileno())
+            self._env.fsync(self._f)
         finally:
             with self._order_cv:
                 self._sync_in_flight = False
@@ -243,7 +245,7 @@ class WALWriter:
         if buf:
             blob = b"".join(buf)
             self._f.write(blob)
-            os.fsync(self._f.fileno())
+            self._env.fsync(self._f)
             if self._stats:
                 self._stats.add("wal_bytes", len(blob))
                 self._stats.add("wal_fsyncs")
@@ -257,10 +259,11 @@ class WALWriter:
             self._drain()
 
 
-def replay_wal(path: str):
+def replay_wal(path: str, env=None):
     """Yield payloads of intact records from a WAL file."""
-    if not os.path.exists(path):
+    env = env or DEFAULT_ENV
+    if not env.exists(path):
         return
-    with open(path, "rb") as f:
+    with env.open(path, "rb") as f:
         buf = f.read()
     yield from iter_framed_records(buf)

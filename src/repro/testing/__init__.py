@@ -1,0 +1,2 @@
+"""Test/validation utilities shipped with the engine (not test-only code:
+the crash-loop harness is a user-runnable durability checker)."""

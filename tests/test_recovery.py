@@ -1,0 +1,461 @@
+"""Fault-injection + crash-recovery matrix (PR 6).
+
+Covers the failure subsystem end to end: the pluggable Env and its fault
+rules, torn-WAL-tail truncation, the keep-logs-until-flush durability fix,
+severity-classified background retries, read-only degradation + resume,
+CRC corruption detection + file quarantine, the integrity scrub, and a
+drop-unsynced crash matrix over every pipeline edge × {sync, async} WAL.
+"""
+from __future__ import annotations
+
+import errno
+import os
+import struct
+import time
+import zlib
+
+import pytest
+
+from repro.core import (
+    DB,
+    DBConfig,
+    CorruptionError,
+    DBReadOnlyError,
+    FaultInjectionEnv,
+    SnapshotUnstableError,
+)
+from repro.core.record import WAL_HEADER_SIZE
+from repro.core.scheduler import JobScheduler
+from repro.testing.crash_harness import run_crash_loop, run_iteration
+
+
+def _cfg(env=None, wal_mode="sync", **kw):
+    cfg = DBConfig.bvlsm(
+        wal_mode=wal_mode,
+        value_threshold=kw.pop("value_threshold", 64),
+        memtable_size=kw.pop("memtable_size", 8192),
+        num_bvalue_queues=2,
+        **kw,
+    )
+    cfg.env = env
+    cfg.bg_error_backoff_ms = 1.0
+    return cfg
+
+
+def _fill(db, n, prefix="k", size=60):
+    data = {}
+    for i in range(n):
+        k = f"{prefix}{i:05d}".encode()
+        v = (f"v{i}_".encode() * 32)[:size]
+        db.put(k, v)
+        data[k] = v
+    return data
+
+
+def _wait_latched(db, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while db.errors.error is None and time.monotonic() < deadline:
+        time.sleep(0.01)
+    return db.errors.error is not None
+
+
+# ---------------------------------------------------------------------------
+# Env unit tests
+# ---------------------------------------------------------------------------
+class TestFaultInjectionEnv:
+    def test_counted_fault_fires_then_clears(self, tmp_path):
+        env = FaultInjectionEnv()
+        p = str(tmp_path / "f.bin")
+        env.add_fault(op="write", path_substr="f.bin", count=1, error=errno.EIO)
+        f = env.open(p, "wb")
+        with pytest.raises(OSError) as ei:
+            f.write(b"x")
+        assert ei.value.errno == errno.EIO
+        f.write(b"after")  # count exhausted: next write succeeds
+        f.close()
+
+    def test_probability_zero_never_fires(self, tmp_path):
+        env = FaultInjectionEnv()
+        env.add_fault(op="write", count=100, probability=0.0)
+        with env.open(str(tmp_path / "p.bin"), "wb") as f:
+            for _ in range(50):
+                f.write(b"y")
+
+    def test_drop_unsynced_rewinds_to_fsync_point(self, tmp_path):
+        env = FaultInjectionEnv()
+        p = str(tmp_path / "d.bin")
+        f = env.open(p, "wb")
+        f.write(b"durable")
+        env.fsync(f)
+        f.write(b"-volatile")
+        f.close()
+        env.drop_unsynced()
+        with open(p, "rb") as f:
+            assert f.read() == b"durable"
+
+    def test_drop_unsynced_undoes_overwrites_of_synced_bytes(self, tmp_path):
+        env = FaultInjectionEnv()
+        p = str(tmp_path / "u.bin")
+        fd = env.open_fd(p, os.O_RDWR | os.O_CREAT)
+        env.pwrite(fd, b"AAAA", 0)
+        os.fsync(fd)
+        env._note_sync(p)
+        env.pwrite(fd, b"BB", 1)  # overwrite inside the synced prefix
+        env.close_fd(fd)
+        env.drop_unsynced()
+        with open(p, "rb") as f:
+            assert f.read() == b"AAAA"
+
+    def test_crash_point_blocks_mutations_not_reads(self, tmp_path):
+        env = FaultInjectionEnv()
+        p = str(tmp_path / "c.bin")
+        with env.open(p, "wb") as f:
+            f.write(b"z")
+        env.set_crash_after(0)
+        with pytest.raises(OSError):
+            env.open(p, "wb")
+        with env.open(p, "rb") as f:  # reads survive the "crash"
+            assert f.read() == b"z"
+        env.disarm_crash()
+        with env.open(p, "ab") as f:
+            f.write(b"more")
+
+    def test_corrupt_flips_bytes(self, tmp_path):
+        env = FaultInjectionEnv()
+        p = str(tmp_path / "x.bin")
+        with open(p, "wb") as f:
+            f.write(b"\x00" * 8)
+        env.corrupt(p, 3, 2)
+        with open(p, "rb") as f:
+            assert f.read() == b"\x00\x00\x00\xff\xff\x00\x00\x00"
+
+
+# ---------------------------------------------------------------------------
+# WAL torn tail + recovery-log lifetime
+# ---------------------------------------------------------------------------
+class TestWALRecovery:
+    def test_torn_tail_truncated_and_counted(self, tmp_db_dir):
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        data = _fill(db, 20)
+        db.close(crash=True)
+        wals = [f for f in os.listdir(tmp_db_dir) if f.startswith("wal_")]
+        assert wals
+        path = os.path.join(tmp_db_dir, wals[0])
+        good = os.path.getsize(path)
+        with open(path, "ab") as f:  # simulate a torn half-written frame
+            f.write(struct.pack("<II", 9999, zlib.crc32(b"junk")) + b"ju")
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        assert db.stats.snapshot()["wal_truncated_bytes"] == WAL_HEADER_SIZE + 2
+        assert os.path.getsize(path) == good  # file physically truncated
+        for k, v in data.items():
+            assert db.get(k) == v
+        db.close()
+
+    def test_crc_mismatch_tail_truncated(self, tmp_db_dir):
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        data = _fill(db, 10)
+        db.close(crash=True)
+        wals = [f for f in os.listdir(tmp_db_dir) if f.startswith("wal_")]
+        path = os.path.join(tmp_db_dir, wals[0])
+        payload = b"garbage-payload"
+        with open(path, "ab") as f:  # framed but wrong CRC
+            f.write(struct.pack("<II", len(payload), 0xDEADBEEF) + payload)
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        assert db.stats.snapshot()["wal_truncated_bytes"] > 0
+        for k, v in data.items():
+            assert db.get(k) == v
+        db.close()
+
+    def test_second_crash_before_flush_keeps_data(self, tmp_db_dir, monkeypatch):
+        """Regression for the recovery durability hole: replayed WAL logs
+        must survive until the recovered memtable is flushed — a second
+        crash right after reopen used to lose every acked write."""
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        data = _fill(db, 30)
+        db.close(crash=True)
+        # reopen with background flushes disabled: recovery replays the
+        # logs but nothing ever flushes them to L0
+        monkeypatch.setattr(JobScheduler, "submit", lambda *a, **k: False)
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        for k, v in data.items():
+            assert db.get(k) == v
+        assert any(f.startswith("wal_") for f in os.listdir(tmp_db_dir)), (
+            "recovery deleted the WAL logs before the data was flushed"
+        )
+        db.close(crash=True)  # second crash: nothing was flushed
+        monkeypatch.undo()
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        for k, v in data.items():
+            assert db.get(k) == v, "second crash lost acked writes"
+        db.close()
+
+    def test_recovery_logs_deleted_after_flush(self, tmp_db_dir):
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        data = _fill(db, 30)
+        db.close(crash=True)
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        db.flush()
+        db.wait_idle()
+        leftovers = [
+            f
+            for f in os.listdir(tmp_db_dir)
+            if f.startswith("wal_") and os.path.getsize(os.path.join(tmp_db_dir, f))
+        ]
+        assert leftovers == [], f"replayed logs not cleaned up: {leftovers}"
+        for k, v in data.items():
+            assert db.get(k) == v
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# transient vs hard background errors
+# ---------------------------------------------------------------------------
+class TestErrorClassification:
+    def test_transient_flush_error_is_retried(self, tmp_db_dir):
+        env = FaultInjectionEnv()
+        db = DB(tmp_db_dir, _cfg(env, memtable_size=4096))
+        env.add_fault(op="write", path_substr=".sst", count=1, error=errno.EIO)
+        data = _fill(db, 200)
+        db.flush()
+        db.wait_idle()
+        s = db.stats.snapshot()
+        assert s["bg_retries"] >= 1
+        assert db.errors.error is None, "one transient error bricked the DB"
+        for k, v in list(data.items())[:20]:
+            assert db.get(k) == v
+        db.close()
+
+    def test_hard_enospc_goes_read_only_and_resumes(self, tmp_db_dir):
+        env = FaultInjectionEnv()
+        db = DB(tmp_db_dir, _cfg(env, memtable_size=4096))
+        data = _fill(db, 60)
+        env.add_fault(op="write", path_substr=".sst", count=10_000, error=errno.ENOSPC)
+        with pytest.raises(RuntimeError):
+            for i in range(2000):
+                db.put(f"fill{i:05d}".encode(), b"x" * 60)
+                if db.errors.error is not None and i % 10 == 0:
+                    db.flush()  # surface the latch if puts keep landing
+        assert _wait_latched(db)
+        assert db.errors.read_only
+        with pytest.raises(DBReadOnlyError):
+            db.put(b"nope", b"nope")
+        for k, v in list(data.items())[:10]:  # reads still serve
+            assert db.get(k) == v
+        env.clear_faults()
+        db.resume()
+        assert not db.errors.read_only
+        db.put(b"recovered", b"yes")
+        db.flush()
+        db.wait_idle()
+        assert db.get(b"recovered") == b"yes"
+        assert db.stats.snapshot()["resumes"] == 1
+        db.close()
+
+    def test_resume_refuses_while_cause_persists(self, tmp_db_dir):
+        env = FaultInjectionEnv()
+        db = DB(tmp_db_dir, _cfg(env, memtable_size=4096))
+        env.add_fault(op="write", path_substr=".sst", count=10_000, error=errno.ENOSPC)
+        try:
+            for i in range(2000):
+                db.put(f"f{i:05d}".encode(), b"y" * 60)
+        except RuntimeError:
+            pass
+        assert _wait_latched(db)
+        # the "disk" is still full: the resume probe itself must fail
+        env.add_fault(op="sync", path_substr="RESUME_PROBE", count=1,
+                      error=errno.ENOSPC)
+        with pytest.raises(OSError):
+            db.resume()
+        assert db.errors.read_only
+        env.clear_faults()
+        db.resume()
+        assert not db.errors.read_only
+        db.close()
+
+    def test_scan_snapshot_error_is_typed(self, tmp_db_dir, monkeypatch):
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        _fill(db, 10)
+        db.flush()
+        db.wait_idle()
+
+        calls = {"n": 0}
+        real = DB._scan_attempts
+
+        def flaky(self, start, count):
+            calls["n"] += 1
+            return None  # every attempt lands on a "torn" snapshot
+
+        monkeypatch.setattr(DB, "_scan_attempts", flaky)
+        with pytest.raises(SnapshotUnstableError):
+            db.scan(b"", 10)
+        assert calls["n"] == 2, "expected one bounded backoff round"
+        monkeypatch.setattr(DB, "_scan_attempts", real)
+        assert len(db.scan(b"", 10)) == 10
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# corruption detection + quarantine
+# ---------------------------------------------------------------------------
+class TestCorruption:
+    def _mk_corrupt_sst(self, tmp_db_dir):
+        env = FaultInjectionEnv()
+        db = DB(tmp_db_dir, _cfg(env, memtable_size=1 << 20, value_threshold=1 << 20))
+        data = _fill(db, 100)
+        db.flush()
+        db.wait_idle()
+        fno = db.versions.current.levels[0][0].file_no
+        db.close()
+        env.corrupt(os.path.join(tmp_db_dir, f"{fno:06d}.sst"), 30, 4)
+        return data, fno, env
+
+    def test_paranoid_get_raises_and_quarantines(self, tmp_db_dir):
+        data, fno, env = self._mk_corrupt_sst(tmp_db_dir)
+        cfg = _cfg(env, memtable_size=1 << 20, value_threshold=1 << 20)
+        cfg.paranoid_checks = True
+        db = DB(tmp_db_dir, cfg)
+        with pytest.raises(IOError):  # CorruptionError is an IOError
+            for k in data:
+                db.get(k)
+        assert fno in db.versions.quarantined_files()
+        s = db.stats.snapshot()
+        assert s["corruptions_detected"] == 1 and s["files_quarantined"] == 1
+        db.close()
+
+    def test_quarantined_file_excluded_from_compaction(self, tmp_db_dir):
+        data, fno, env = self._mk_corrupt_sst(tmp_db_dir)
+        cfg = _cfg(env, memtable_size=1 << 20, value_threshold=1 << 20)
+        cfg.paranoid_checks = True
+        db = DB(tmp_db_dir, cfg)
+        try:
+            for k in data:
+                db.get(k)
+        except IOError:
+            pass
+        assert fno in db.versions.quarantined_files()
+        picked = db.bg.compactor.pick(
+            db.versions.locked_files() | db.versions.quarantined_files()
+        )
+        if picked is not None:
+            _level, inputs, overlaps = picked
+            assert fno not in {f.file_no for f in inputs + overlaps}
+        db.close()
+        # quarantine survives reopen (manifest-logged)
+        db = DB(tmp_db_dir, _cfg(env, memtable_size=1 << 20, value_threshold=1 << 20))
+        assert fno in db.versions.quarantined_files()
+        db.close()
+
+    def test_scrub_finds_and_quarantines_block_rot(self, tmp_db_dir):
+        data, fno, env = self._mk_corrupt_sst(tmp_db_dir)
+        db = DB(tmp_db_dir, _cfg(env, memtable_size=1 << 20, value_threshold=1 << 20))
+        rep = db.verify_integrity()
+        assert rep["corruptions"], "scrub missed a flipped block"
+        assert fno in db.versions.quarantined_files()
+        db.close()
+
+    def test_bvalue_corruption_quarantines_value_file(self, tmp_db_dir):
+        env = FaultInjectionEnv()
+        cfg = _cfg(env, memtable_size=1 << 20)
+        cfg.paranoid_checks = True
+        db = DB(tmp_db_dir, cfg)
+        big = b"B" * 300  # over value_threshold=64: separated
+        db.put(b"bigkey", big)
+        db.flush()
+        db.wait_idle()
+        vfile = os.path.join(tmp_db_dir, "bvalue", "bv_000000.val")
+        env.corrupt(vfile, 10, 3)
+        db.bvcache.clear() if hasattr(db.bvcache, "clear") else None
+        db.close()
+        db = DB(tmp_db_dir, cfg)
+        with pytest.raises(IOError):
+            db.get(b"bigkey")
+        assert 0 in db.versions.quarantined_bvalues
+        # GC must never rewrite through (or unlink) the quarantined file
+        db.put(b"bigkey", b"C" * 300)  # kill the old value
+        res = db.gc_collect(threshold=0.0)
+        assert os.path.exists(vfile), "GC removed a quarantined value file"
+        assert res is not None
+        db.close()
+
+    def test_scrub_clean_db_reports_no_corruption(self, tmp_db_dir):
+        db = DB(tmp_db_dir, _cfg(memtable_size=1 << 20))
+        _fill(db, 80, size=120)  # over the threshold: separated values
+        db.flush()
+        db.wait_idle()
+        rep = db.verify_integrity()
+        assert rep["corruptions"] == []
+        assert rep["blocks_verified"] > 0 and rep["values_verified"] > 0
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# drop-unsynced crash matrix: every pipeline edge × {sync, async} WAL
+# ---------------------------------------------------------------------------
+EDGES = [
+    ("wal-write", ("write",), "wal_"),
+    ("wal-sync", ("sync",), "wal_"),
+    ("value-queue", ("write",), "bvalue"),
+    ("flush-sst", ("write",), ".sst"),
+    ("manifest", ("write",), "MANIFEST"),
+    ("unlink", ("unlink",), None),
+]
+
+
+@pytest.mark.parametrize("wal_mode", ["sync", "async"])
+@pytest.mark.parametrize("edge", EDGES, ids=[e[0] for e in EDGES])
+def test_crash_matrix(tmp_db_dir, wal_mode, edge):
+    """Kill the DB (drop-unsynced semantics) at one pipeline edge; reopen;
+    sync-acked writes must read back exactly, async state must be a legal
+    per-key prefix, and the reopened DB must be writable."""
+    _name, ops, substr = edge
+    env = FaultInjectionEnv(seed=7)
+    db = DB(tmp_db_dir, _cfg(env, wal_mode=wal_mode, memtable_size=4096))
+    acked: dict[bytes, bytes | None] = {}
+    history: dict[bytes, set] = {}
+    env.set_crash_after(60, ops=ops, path_substr=substr)
+    for i in range(600):
+        k = f"m{i % 25:03d}".encode()
+        v = (f"val{i}_".encode() * 20)[: 30 if i % 3 else 200]
+        try:
+            if i % 11 == 10:
+                db.delete(k)
+                acked[k] = None
+                history.setdefault(k, {None}).add(None)
+            else:
+                db.put(k, v)
+                acked[k] = v
+                history.setdefault(k, {None}).add(v)
+        except Exception:
+            break
+    try:
+        db.close(crash=True)
+    except Exception:
+        pass
+    env.drop_unsynced()
+    env.disarm_crash()
+    env.clear_faults()
+    env.reset_tracking()
+    db = DB(tmp_db_dir, _cfg(env, wal_mode=wal_mode, memtable_size=4096))
+    for k, want in acked.items():
+        got = db.get(k)
+        if wal_mode == "sync":
+            assert got == want, f"lost acked sync write {k!r}"
+        else:
+            assert got in history[k], f"resurrected/garbage value for {k!r}"
+    db.put(b"probe", b"alive")
+    assert db.get(b"probe") == b"alive"
+    db.close()
+
+
+def test_crash_loop_smoke():
+    """A slice of the randomized crash loop runs in tier-1 every time; CI's
+    fault shard and the acceptance run turn the count up via env var."""
+    iters = int(os.environ.get("CRASH_LOOP_ITERS", "6"))
+    rep = run_crash_loop(iters=iters, seed=42)
+    assert rep["failures"] == [], rep["failures"]
+
+
+def test_crash_iteration_is_deterministic(tmp_path):
+    a = run_iteration(123, "sync", str(tmp_path / "a"))
+    b = run_iteration(123, "sync", str(tmp_path / "b"))
+    assert (a["acked"], a["violations"]) == (b["acked"], b["violations"])

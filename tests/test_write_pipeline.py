@@ -189,8 +189,9 @@ def test_group_commit_disabled_baseline(tmp_db_dir):
 
 def _slow_fsync(monkeypatch, delay_s: float):
     """Make WAL fsyncs observably slow (GIL released during the sleep, like
-    a real fsync) so commit groups genuinely overlap."""
-    import repro.core.wal as wal_mod
+    a real fsync) so commit groups genuinely overlap. The WAL syncs through
+    the Env layer, so the syscall site to slow down lives in core.env."""
+    import repro.core.env as env_mod
 
     real = os.fsync
 
@@ -198,7 +199,7 @@ def _slow_fsync(monkeypatch, delay_s: float):
         time.sleep(delay_s)
         return real(fd)
 
-    monkeypatch.setattr(wal_mod.os, "fsync", slow)
+    monkeypatch.setattr(env_mod.os, "fsync", slow)
 
 
 def test_pipelined_handoff_overlaps_fsync(tmp_db_dir, monkeypatch):
@@ -322,10 +323,10 @@ def test_covered_fsync_skipped(tmp_db_dir, monkeypatch):
 def test_adaptive_cap_tracks_latency_target(tmp_db_dir, monkeypatch):
     """The latency-target controller shrinks the effective byte cap to the
     floor under a slow fsync and grows it to the ceiling under a fast one."""
-    import repro.core.wal as wal_mod
+    import repro.core.env as env_mod
 
     # slow: persist EWMA far above the 4 ms default target -> floor
-    monkeypatch.setattr(wal_mod.os, "fsync", lambda fd: time.sleep(0.012))
+    monkeypatch.setattr(env_mod.os, "fsync", lambda fd: time.sleep(0.012))
     db = mk(tmp_db_dir + "_slow", wal="sync", memtable_size=16 << 20)
     try:
         for i in range(25):
@@ -337,7 +338,7 @@ def test_adaptive_cap_tracks_latency_target(tmp_db_dir, monkeypatch):
         db.close()
 
     # fast: fsync is a no-op -> EWMA under target/2 -> ceiling
-    monkeypatch.setattr(wal_mod.os, "fsync", lambda fd: None)
+    monkeypatch.setattr(env_mod.os, "fsync", lambda fd: None)
     db = mk(tmp_db_dir + "_fast", wal="sync", memtable_size=16 << 20)
     try:
         for i in range(40):
