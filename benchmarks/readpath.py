@@ -5,7 +5,9 @@ PR-3 read-stack grid:
 
 * workload — ``uniform`` (random over the whole keyspace) vs ``zipfian``
   (YCSB-style hot set, theta 0.99: the workload a block cache exists for),
-  plus ``scan`` (``scan(start, 10)`` from uniform-random starts);
+  plus ``scan`` (``scan(start, 10)`` from uniform-random starts) and
+  ``cursor`` (PR-7 iterator: ``seek(start)`` + 10 × ``next()`` on a pinned
+  snapshot view — the streaming path ``scan`` is now a wrapper over);
 * cache — shared block cache on (default capacity) vs ``block_cache_bytes=0``;
 * format — SSTable block format ``v2`` (restart points, intra-block binary
   search) vs ``v1`` (the pre-PR-3 linear-decode blocks).
@@ -39,7 +41,11 @@ Emits ``BENCH_readpath.json``. Row schema (one row = one ``cells`` entry)::
   the only cells where the block format is actually in the lookup loop;
   must be >= ~1.0);
 * ``uniform_cache_speedup_v2`` / ``scan_cache_speedup_v2`` — secondary
-  dimensions.
+  dimensions;
+* ``cursor_cache_speedup_v2`` — cursor walks, cache on ÷ off (v2);
+* ``cursor_vs_scan_v2_cache_on`` — cursor walk ÷ ``scan`` ops/s, v2 with
+  the cache on; ``scan`` streams from the same cursor, so this ratio is
+  the wrapper overhead and should sit near 1.0.
 
 The summary deliberately carries NO cache-on v1-vs-v2 ratio: warm cached
 blocks serve from materialized key→entry dicts, a code path identical for
@@ -115,6 +121,18 @@ def _time_scans(db: DB, starts: list[bytes], count: int) -> float:
     return time.monotonic() - t0
 
 
+def _time_cursors(db: DB, starts: list[bytes], count: int) -> float:
+    t0 = time.monotonic()
+    for s in starts:
+        with db.iterator() as cur:
+            ok = cur.seek(s)
+            n = 0
+            while ok and n < count:
+                n += 1
+                ok = cur.next()
+    return time.monotonic() - t0
+
+
 def run(records: int = 8000, ops: int = 12000, scans: int = 600,
         scan_count: int = 10, repeat: int = 3) -> dict:
     rng = np.random.default_rng(42)
@@ -138,6 +156,7 @@ def run(records: int = 8000, ops: int = 12000, scans: int = 600,
             "zipfian": lambda db: (len(zipf_keys), _time_gets(db, zipf_keys)),
             "uniform": lambda db: (len(uni_keys), _time_gets(db, uni_keys)),
             "scan": lambda db: (len(starts), _time_scans(db, starts, scan_count)),
+            "cursor": lambda db: (len(starts), _time_cursors(db, starts, scan_count)),
         }
         samples: dict[tuple, list[dict]] = {
             (w, fmt, cache): [] for w in workloads for fmt, cache in VARIANTS
@@ -191,6 +210,8 @@ def run(records: int = 8000, ops: int = 12000, scans: int = 600,
         "uniform_cache_speedup_v2": cell("uniform", 2, True) / cell("uniform", 2, False),
         "uniform_v2_over_v1_cache_off": cell("uniform", 2, False) / cell("uniform", 1, False),
         "scan_cache_speedup_v2": cell("scan", 2, True) / cell("scan", 2, False),
+        "cursor_cache_speedup_v2": cell("cursor", 2, True) / cell("cursor", 2, False),
+        "cursor_vs_scan_v2_cache_on": cell("cursor", 2, True) / cell("scan", 2, True),
     }
     return {
         "config": {

@@ -173,13 +173,24 @@ class BVCheckpointStore:
     # retention
     # ------------------------------------------------------------------
     def delete_step(self, step: int) -> None:
-        meta = self.load_meta(step)
-        for ent in meta["manifest"]:
-            if "reuse_step" in ent:
-                continue
-            for ci in range(ent["chunks"]):
-                self.db.delete(self._chunk_key(step, ent["path"], ci))
+        self.load_meta(step)  # raises KeyError if the step doesn't exist
+        # one range tombstone covers every chunk the step physically owns
+        # (reused chunks live under their writer's prefix, outside this
+        # range) — constant WAL traffic instead of one delete per chunk
+        prefix = f"ckpt/{step:012d}/".encode()
+        self.db.delete_range(prefix, prefix + b"\xff")
         self.db.delete(self._meta_key(step))
+
+    # ------------------------------------------------------------------
+    # online backup
+    # ------------------------------------------------------------------
+    def backup(self, directory: str) -> str:
+        """Hard-link an online, crash-consistent image of the whole store
+        into ``directory`` (``DB.checkpoint``): every committed training
+        checkpoint in it, openable as a ``BVCheckpointStore`` — without
+        pausing in-flight saves. Returns ``directory``."""
+        self.db.checkpoint(directory)
+        return directory
 
     def stats(self) -> dict:
         return self.db.stats.snapshot()

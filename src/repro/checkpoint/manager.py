@@ -83,6 +83,13 @@ class CheckpointManager:
                 except KeyError:
                     pass
 
+    def backup(self, directory: str) -> str:
+        """Durable offline copy of the store (e.g. before a risky restart):
+        waits for the in-flight save so the image contains it, then
+        hard-links the store into ``directory`` via ``DB.checkpoint``."""
+        self.wait()
+        return self.store.backup(directory)
+
     def wait(self) -> None:
         if self._pending is not None and self._pending.is_alive():
             t0 = time.monotonic()

@@ -12,7 +12,7 @@ severity-classified (transient → bounded retry, hard → read-only mode until
 drives the crash/fault test matrix.
 """
 from .config import DBConfig
-from .db import DB
+from .db import DB, Cursor, Snapshot
 from .env import DEFAULT_ENV, Env, FaultInjectionEnv, FaultRule
 from .errors import (
     BackgroundError,
@@ -27,6 +27,8 @@ from .writebatch import WriteBatch
 
 __all__ = [
     "DB",
+    "Snapshot",
+    "Cursor",
     "DBConfig",
     "ValueOffset",
     "WriteBatch",

@@ -419,6 +419,32 @@ class BValueManager:
             if not q.wait_drained(timeout=timeout):
                 raise TimeoutError(f"BValue queue {q.qid} did not drain in {timeout}s")
 
+    def seal_active(self) -> None:
+        """Roll every queue with a non-empty active file to a fresh one.
+
+        Checkpoints hard-link BValue files, and a link shares the inode —
+        an active append tail must never be linked, or the checkpoint's
+        copy would keep growing underneath it. Sealing first makes every
+        existing file immutable from this point on (the same roll
+        ``reserve`` performs at the size cap; in-flight reservations keep
+        the old fd open until they drain)."""
+        for q in self.queues:
+            close_fd = None
+            with q._lock:
+                if q.tail == 0:
+                    continue  # empty active file: nothing to seal
+                old = q.file_id
+                if q._refs.get(old, 0) == 0:
+                    close_fd = q._fds.pop(old)
+                    del q._refs[old]
+                q.file_id = self._alloc_file_id(q.qid)
+                q._fds[q.file_id] = q._open(q.file_id)
+                q._refs[q.file_id] = 0
+                q.tail = 0
+            if close_fd is not None:
+                self.env.fsync(close_fd)
+                self.env.close_fd(close_fd)
+
     @property
     def next_file_id(self) -> int:
         with self._file_lock:

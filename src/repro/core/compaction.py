@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import heapq
 import time
+from bisect import bisect_left
 
 from .ratelimiter import IO_CHUNK, PRI_HIGH, PRI_LOW
 from .record import ValueOffset, kTypeDeletion, kTypeValue, kTypeValuePtr
@@ -73,6 +74,29 @@ def _merge_iters(iters):
         for k2, s2, t2, v2 in it:
             heapq.heappush(heap, (k2, -s2, i, t2, v2, it))
             break
+
+
+def _coalesce_tombstones(tombs):
+    """Merge same-seq touching/overlapping range-tombstone fragments back
+    into maximal runs (compaction clipping fragments them; re-coalescing
+    keeps the per-table range blocks from growing without bound). Returns
+    a new list sorted by (start, end, seq)."""
+    by_seq: dict[int, list[tuple[bytes, bytes]]] = {}
+    for seq, start, end in tombs:
+        by_seq.setdefault(seq, []).append((start, end))
+    out: list[tuple[int, bytes, bytes]] = []
+    for seq, frags in by_seq.items():
+        frags.sort()
+        cs, ce = frags[0]
+        for s, e in frags[1:]:
+            if s <= ce:
+                ce = max(ce, e)
+            else:
+                out.append((seq, cs, ce))
+                cs, ce = s, e
+        out.append((seq, cs, ce))
+    out.sort(key=lambda t: (t[1], t[2], t[0]))
+    return out
 
 
 class Compactor:
@@ -122,10 +146,13 @@ class Compactor:
                     limiter.request(pending_io, PRI_HIGH)
                     pending_io = 0
             limiter.request(pending_io, PRI_HIGH)
-            if n_written == 0:
+            tombs = mem.range_tombstones
+            if tombs and cfg.range_tombstone_coalesce:
+                tombs = _coalesce_tombstones(tombs)
+            if n_written == 0 and not tombs:
                 writer.abandon()
                 return
-            meta = writer.finish(file_no)
+            meta = writer.finish(file_no, tombs)
         except BaseException:
             # remove the partial output so a retry of this flush (transient
             # error policy) starts from a clean slate with a fresh file_no
@@ -320,6 +347,11 @@ class Compactor:
         bottom = all(not v.levels[lvl] for lvl in range(out_level + 1, cfg.num_levels))
         fill = not cfg.block_cache_compaction_bypass
         read_bytes = sum(f.size for f in inputs + overlaps)
+        # snapshot-aware dedup: sample the live snapshot seqs ONCE per job.
+        # Any snapshot taken after this point holds a seq >= every sequence
+        # in these (already flushed) inputs, so it reads each key's newest
+        # input version — which the stripe dedup below always keeps.
+        snaps = sorted(db.snapshot_seqs())
 
         bounds = self._subcompaction_bounds(
             inputs, overlaps, self._choose_shards(read_bytes)
@@ -330,7 +362,9 @@ class Compactor:
             def go():
                 t0 = time.monotonic()
                 try:
-                    metas = self._run_range(level, inputs, overlaps, lo, hi, bottom, fill)
+                    metas = self._run_range(
+                        level, inputs, overlaps, lo, hi, bottom, fill, snaps
+                    )
                     return metas, None, time.monotonic() - t0
                 except BaseException as e:
                     return [], e, time.monotonic() - t0
@@ -377,7 +411,9 @@ class Compactor:
         for f in inputs + overlaps:
             db.versions.drop_reader(f.file_no)
             try:
-                db.env.unlink(table_path(db.path, f.file_no))
+                # an open cursor pins the pre-edit version: its input files
+                # stay on disk (and their readers parked) until it unpins
+                db.versions.defer_or_unlink(table_path(db.path, f.file_no))
             except OSError:
                 pass
 
@@ -505,52 +541,146 @@ class Compactor:
         except Exception:
             return bounds
 
-    def _run_range(self, level, inputs, overlaps, lo, hi, bottom, fill):
+    def _run_range(self, level, inputs, overlaps, lo, hi, bottom, fill, snaps=()):
         """One subcompaction shard: merge keys in ``[lo, hi)`` (None =
         unbounded) into fresh Ln+1 tables; returns their FileMetadata.
         Shards touch disjoint key ranges, so per-shard version dedup and
-        dead-pointer tracking are exactly as correct as the serial merge."""
+        dead-pointer tracking are exactly as correct as the serial merge.
+
+        ``snaps`` is the sorted live snapshot seq list sampled at job start.
+        It partitions sequence space into *stripes* (RocksDB-style): a
+        version is droppable only against a newer version/tombstone in the
+        SAME stripe — no snapshot can observe the difference. With no
+        snapshots everything is one stripe and the dedup degenerates to the
+        classic newest-version-wins.
+
+        Range tombstones from the input files are clipped to the shard,
+        drop covered same-stripe entries, and are redistributed to the
+        output tables clipped at each table's first key — so a sorted
+        level's (tombstone-extended) file ranges stay disjoint-or-touching
+        and a point lookup finds any covering tombstone in the same
+        candidate file(s) it already reads."""
         db = self.db
         cfg = db.cfg
         limiter = db.rate_limiter
         iters = []
+        shard_tombs: list[tuple[int, bytes, bytes]] = []
         for f in inputs + overlaps:
             if lo is not None and f.largest < lo:
                 continue
             if hi is not None and f.smallest >= hi:
                 continue
             r = db.versions.reader(f.file_no)
+            for ts, a, b in r.range_tombstones:
+                a2 = a if lo is None else max(a, lo)
+                b2 = b if hi is None else min(b, hi)
+                if a2 < b2:
+                    shard_tombs.append((ts, a2, b2))
             iters.append(
                 r.iter_from(lo, fill_cache=fill) if lo is not None else r.iter_all(fill_cache=fill)
             )
+
+        def bucket(seq):
+            return bisect_left(snaps, seq)  # snapshots strictly below seq
+
+        def covering(key, seq):
+            """OLDEST collected tombstone newer than ``seq`` covering ``key``
+            (0 if none). The minimal such ts is the one to test for
+            droppability: ``bucket`` is monotone in ts, so the entry shares a
+            stripe with SOME covering tombstone iff it shares one with the
+            oldest — using the max instead would let a newer cross-stripe
+            tombstone mask an in-stripe one, keeping the entry while the
+            in-stripe tombstone gets dropped at the bottom (resurrection).
+            Tombstone lists are small; linear is fine."""
+            best = 0
+            for ts, a, b in shard_tombs:
+                if ts > seq and a <= key < b and (best == 0 or ts < best):
+                    best = ts
+            return best
+
+        # a bottom-level tombstone with no snapshot below it has done its
+        # work (every covered entry is droppable, below) — drop it from the
+        # output; it still participates in `covering` either way
+        out_tombs = [
+            t for t in shard_tombs if not (bottom and bucket(t[0]) == 0)
+        ]
+        if out_tombs and cfg.range_tombstone_coalesce:
+            out_tombs = _coalesce_tombstones(out_tombs)
+        pending = sorted(out_tombs, key=lambda t: (t[1], t[2]))
 
         target = max(cfg.memtable_size, 4 << 20)
         writer = None
         file_no = None
         metas = []
 
-        def roll():
-            nonlocal writer, file_no
-            if writer is not None and writer._count > 0:
-                metas.append(writer.finish(file_no))
+        def roll(boundary):
+            """Finish the current table. ``boundary`` (the next table's
+            first key, or None at shard end) splits the surviving range
+            tombstones: fragments below it land in this table, the rest
+            carry over — every table's range block stays inside its own
+            key span."""
+            nonlocal writer, file_no, pending
+            if boundary is None:
+                mine, pending = pending, []
+            else:
+                mine, rest = [], []
+                for ts, a, b in pending:
+                    if a < boundary:
+                        mine.append((ts, a, min(b, boundary)))
+                        if b > boundary:
+                            rest.append((ts, boundary, b))
+                    else:
+                        rest.append((ts, a, b))
+                pending = rest
+            if writer is None and mine:
+                # tombstone-only table: a shard can drop every point entry
+                # yet still owe its tombstones to deeper levels
+                file_no = db.versions.new_file_no()
+                writer = SSTableWriter(
+                    table_path(db.path, file_no), cfg.block_size, cfg.compression,
+                    cfg.sstable_format_version, cfg.block_restart_interval,
+                    env=db.env,
+                )
+            if writer is not None and (writer._count > 0 or mine):
+                metas.append(writer.finish(file_no, mine))
                 writer = None
             elif writer is not None:
                 writer.abandon()
                 writer = None
 
         last_key = None
+        last_bucket = None  # stripe of the last kept/suppressing version
         pending_io = 0
         try:
             for key, seq, type_, value in _merge_iters(iters):
                 if hi is not None and key >= hi:
                     break  # the next shard owns [hi, ...)
-                if key == last_key:
+                new_key = key != last_key
+                if new_key:
+                    last_key = key
+                    last_bucket = None
+                elif last_bucket is not None and bucket(seq) == last_bucket:
                     if type_ == kTypeValuePtr:  # shadowed big value → dead
                         db.dead_tracker.on_dead(ValueOffset.decode(value))
-                    continue  # older version shadowed (no snapshots)
-                last_key = key
-                if type_ == kTypeDeletion and bottom:
-                    continue  # tombstone reached the bottom — drop it
+                    continue  # older version in an already-served stripe
+                b = bucket(seq)
+                ts = covering(key, seq)
+                if ts and bucket(ts) == b:
+                    # range-tombstone covered with no snapshot in between;
+                    # safe at ANY level — the tombstone itself survives in
+                    # the output until it reaches the bottom
+                    if type_ == kTypeValuePtr:
+                        db.dead_tracker.on_dead(ValueOffset.decode(value))
+                    last_bucket = b  # same-stripe older versions drop too
+                    continue
+                if type_ == kTypeDeletion and bottom and b == 0:
+                    last_bucket = b
+                    continue  # tombstone reached the bottom, no snapshot below
+                if new_key and writer is not None and writer._offset >= target:
+                    # roll only between user keys: a key's version run never
+                    # splits across tables, and the incoming key becomes the
+                    # next table's first key = this table's tombstone clip
+                    roll(key)
                 if writer is None:
                     file_no = db.versions.new_file_no()
                     writer = SSTableWriter(
@@ -559,13 +689,12 @@ class Compactor:
                         env=db.env,
                     )
                 writer.add(key, seq, type_, value)
+                last_bucket = b
                 pending_io += len(key) + len(value)
                 if pending_io >= IO_CHUNK:
                     limiter.request(pending_io, PRI_LOW)
                     pending_io = 0
-                if writer._offset >= target:
-                    roll()
-            roll()
+            roll(None)
         except BaseException:
             # a failed shard must not leak its outputs: abandon the
             # in-progress writer (closes + unlinks) and drop the tables it

@@ -166,11 +166,29 @@ class DBConfig:
     # --- sstable ---
     block_size: int = 4096
     compression: bool = False
-    # on-disk block format the WRITERS emit: 2 = restart-point blocks
-    # (intra-block binary search), 1 = the pre-restart linear format.
-    # Readers always decode both, so mixed-version DB directories are fine.
-    sstable_format_version: int = 2
+    # on-disk block format the WRITERS emit: 3 = v2 + range-tombstone side
+    # block and multi-version (user_key, seq desc) runs, 2 = restart-point
+    # blocks (intra-block binary search), 1 = the pre-restart linear format.
+    # Readers always decode all three, so mixed-version DB directories are
+    # fine — but range deletes require v3 (delete_range raises below it).
+    sstable_format_version: int = 3
     block_restart_interval: int = 16  # entries per restart point (v2 blocks)
+    # --- MVCC: snapshots / cursors / range deletes / checkpoint ---
+    # hard cap on concurrently live Snapshot objects (cursors pin one
+    # each). Every live snapshot widens memtable/compaction version
+    # retention, so an unbounded leak would grow space forever; exceeding
+    # the cap raises instead of silently degrading.
+    max_snapshots: int = 1024
+    # compaction clips range tombstones at output-table boundaries, which
+    # fragments a wide delete across tables. When True, fragments of the
+    # same tombstone (same seq) that touch or overlap are re-coalesced
+    # before a table's range block is written, bounding fragmentation
+    # growth across repeated compactions.
+    range_tombstone_coalesce: bool = True
+    # checkpoint(dir) hard-links SSTables + value files into the target
+    # directory when the filesystem supports it; False (or a cross-device
+    # link error) falls back to copying bytes.
+    checkpoint_hardlink: bool = True
     # --- shared block cache (read path) ---
     # LRU over decoded data blocks, shared by gets/scans/compaction across
     # every SSTable, keyed (file_no, block_idx), charged by decoded bytes.

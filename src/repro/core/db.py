@@ -68,6 +68,8 @@ import threading
 import time
 from collections import deque
 
+import msgpack
+
 from .blockcache import BlockCache
 from .bvalue import BValueManager
 from .bvcache import BVCache
@@ -76,19 +78,23 @@ from .compaction import _merge_iters
 from .config import DBConfig
 from .env import DEFAULT_ENV
 from .errors import CorruptionError, ErrorHandler, SnapshotUnstableError
-from .manifest import VersionSet
+from .manifest import MANIFEST_NAME, VersionSet
 from .memtable import MemTable
 from .ratelimiter import PRI_FG, PRI_LOW, RateLimiter
 from .scheduler import BackgroundCoordinator, WriteController
 from .record import (
+    MAX_SEQ,
     ValueOffset,
     decode_entries,
     encode_entries,
+    frame_record,
     iter_framed_records_ex,
     kTypeDeletion,
+    kTypeRangeDeletion,
     kTypeValue,
     kTypeValuePtr,
 )
+from .sstable import table_path
 from .stats import EngineStats
 from .wal import WALWriter
 from .writebatch import WriteBatch
@@ -144,6 +150,288 @@ class _Group:
         self.ticket: int | None = None
 
 
+class Snapshot:
+    """A pinned read point (RocksDB ``GetSnapshot`` analogue).
+
+    Reads through it (``db.get(key, snapshot=snap)``, ``db.iterator(snap)``)
+    see exactly the state visible at creation: writes published later are
+    invisible and deletes published later do not hide anything. While a
+    snapshot is live the engine retains what it can still see — memtables
+    keep superseded versions, compaction keeps shadowed versions and range
+    tombstones alive (stripe dedup in :mod:`.compaction`), and BValue GC
+    defers file unlinks. Always :meth:`release` (or use as a context
+    manager): a leaked snapshot widens retention forever, and
+    ``DBConfig.max_snapshots`` hard-caps the live count for that reason."""
+
+    __slots__ = ("seq", "_db", "_released")
+
+    def __init__(self, db: "DB", seq: int):
+        self._db = db
+        self.seq = seq
+        self._released = False
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._db._release_snapshot_seq(self.seq)
+
+    def __enter__(self) -> "Snapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = "released" if self._released else "live"
+        return f"<Snapshot seq={self.seq} {state}>"
+
+
+class Cursor:
+    """Stable bidirectional iterator over one MVCC read point.
+
+    The constructor captures (memtables, version, read_seq) under the DB
+    mutex, registers the read point as a snapshot, and pins the version
+    (``VersionSet.pin``), so concurrent flushes/compactions/GC cannot close
+    or unlink anything the walk needs: dropped readers are parked and input
+    unlinks are deferred until the cursor closes. Forward iteration is the
+    same lazy heap merge as ``scan`` — a sorted level opens a file only
+    when the merge reaches it — plus MVCC filtering: versions newer than
+    the read point are skipped, the first visible version per user key
+    decides it, and point-/range-deleted keys are elided.
+
+    Range tombstones vs laziness: a sorted-level file's tombstone can span
+    keys *below* its first point key — keys served by other sources before
+    the lazy concat would ever open that file. Each sorted level therefore
+    keeps a discovery pointer that advances whenever the merge cursor
+    reaches a file's (tombstone-extended) smallest key, registering that
+    file's tombstones before any key they could cover is emitted. A short
+    scan still opens O(levels) files: the pointer only opens files whose
+    range the cursor actually enters.
+
+    ``prev()`` steps backward without materialized reverse iterators: take
+    the max over all sources of ``largest_key_below(bound)``, resolve that
+    candidate with a point lookup on the pinned state, and keep walking
+    down while candidates turn out deleted at the read point."""
+
+    __slots__ = (
+        "_db", "_snap", "_own_snap", "read_seq", "_mems", "_version",
+        "_pinned", "_tombs", "_tomb_files", "_lvl_files", "_lvl_ptr",
+        "_merged", "_skip_key", "key", "value", "valid", "_closed",
+    )
+
+    def __init__(self, db: "DB", snapshot: Snapshot | None = None):
+        self._db = db
+        self._own_snap = snapshot is None
+        self._snap = db.snapshot() if snapshot is None else snapshot
+        self.read_seq = self._snap.seq
+        with db.mutex:
+            self._mems = [db.mem, *reversed(db.immutables)]
+            # atomic capture+pin: a plain ``current`` read here could race
+            # a compaction's edit + input unlink (versions have their own
+            # lock — the DB mutex does not exclude background edits)
+            self._version = db.versions.pin_current()
+        self._pinned = True
+        # range tombstones discovered from table files so far (pre-filtered
+        # to seq <= read_seq); memtable tombstones are consulted live.
+        self._tombs: list[tuple[int, bytes, bytes]] = []
+        self._tomb_files: set[int] = set()
+        # per-sorted-level discovery pointers (see class docstring)
+        self._lvl_files = [
+            self._version.levels[lvl]
+            for lvl in range(1, len(self._version.levels))
+        ]
+        self._lvl_ptr = [0] * len(self._lvl_files)
+        self._merged = None
+        self._skip_key: bytes | None = None
+        self.key: bytes | None = None
+        self.value: bytes | None = None
+        self.valid = False
+        self._closed = False
+
+    # -- lifecycle ------------------------------------------------------
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._merged = None
+        self.valid = False
+        if self._pinned:
+            self._pinned = False
+            self._db.versions.unpin()
+        if self._own_snap:
+            self._snap.release()
+
+    def __enter__(self) -> "Cursor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- range-tombstone discovery --------------------------------------
+    def _register_file_tombs(self, fmeta) -> None:
+        if fmeta.file_no in self._tomb_files:
+            return
+        self._tomb_files.add(fmeta.file_no)
+        for t in self._db.versions.reader(fmeta.file_no).range_tombstones:
+            if t[0] <= self.read_seq:
+                self._tombs.append(t)
+
+    def _advance_tomb_ptrs(self, key: bytes) -> None:
+        # register every sorted-level file whose (tombstone-extended) range
+        # has started by ``key`` — before the merge can emit a covered key
+        for li, files in enumerate(self._lvl_files):
+            p = self._lvl_ptr[li]
+            while p < len(files) and files[p].smallest <= key:
+                self._register_file_tombs(files[p])
+                p += 1
+            self._lvl_ptr[li] = p
+
+    def _tomb_seq(self, key: bytes) -> int:
+        best = 0
+        for m in self._mems:
+            ts = m.covering_tombstone_seq(key, self.read_seq)
+            if ts > best:
+                best = ts
+        for seq, start, end in self._tombs:
+            if start <= key < end and seq > best:
+                best = seq
+        return best
+
+    # -- forward iteration ----------------------------------------------
+    def seek(self, target: bytes) -> bool:
+        """Position on the first visible key >= ``target``; returns
+        ``valid``."""
+        self._build_merged(target)
+        self._skip_key = None
+        return self._advance()
+
+    def seek_to_first(self) -> bool:
+        return self.seek(b"")
+
+    def _build_merged(self, start: bytes) -> None:
+        db = self._db
+        iters = [m.iter_versions_from(start) for m in self._mems]
+        for f in self._version.levels[0]:
+            if f.largest >= start:
+                self._register_file_tombs(f)
+                iters.append(db.versions.reader(f.file_no).iter_from(start))
+        for li, files in enumerate(self._lvl_files):
+            # reset the discovery pointer: files entirely below ``start``
+            # are irrelevant (a tombstone's end bounds the file's largest)
+            lo, hi = 0, len(files)
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if files[mid].largest < start:
+                    lo = mid + 1
+                else:
+                    hi = mid
+            self._lvl_ptr[li] = lo
+            if lo < len(files):
+                iters.append(self._concat(files[lo:], start))
+        self._merged = _merge_iters(iters)
+
+    def _concat(self, files, start: bytes):
+        first = True
+        for f in files:
+            self._register_file_tombs(f)
+            it = self._db.versions.reader(f.file_no).iter_from(
+                start if first else f.smallest
+            )
+            first = False
+            yield from it
+
+    def next(self) -> bool:
+        """Advance to the next visible key; returns ``valid``."""
+        if self._merged is None:
+            # forward state was invalidated by a prev() — rebuild past key
+            if not self.valid:
+                return False
+            self._build_merged(self.key)
+            self._skip_key = self.key
+        return self._advance()
+
+    def _advance(self) -> bool:
+        db = self._db
+        for key, seq, type_, value in self._merged:
+            if seq > self.read_seq:
+                continue  # newer than the read point
+            if key == self._skip_key:
+                continue  # this user key is already decided
+            self._skip_key = key  # first visible version decides the key
+            self._advance_tomb_ptrs(key)
+            if type_ == kTypeDeletion or seq < self._tomb_seq(key):
+                continue  # point- or range-deleted at the read point
+            resolved = db._resolve(key, type_, value)
+            if resolved is None:
+                continue
+            self.key = key
+            self.value = resolved
+            self.valid = True
+            return True
+        self.key = None
+        self.value = None
+        self.valid = False
+        return False
+
+    # -- reverse iteration ----------------------------------------------
+    def prev(self) -> bool:
+        """Step to the largest visible key strictly below the current one
+        (below infinity when invalid: an invalid cursor's ``prev`` is a
+        seek-to-last). Returns ``valid``."""
+        bound = self.key if self.valid else None
+        self._merged = None  # forward state is stale after a reverse step
+        while True:
+            cand = self._largest_below(bound)
+            if cand is None:
+                self.key = None
+                self.value = None
+                self.valid = False
+                return False
+            resolved = self._db._lookup_at(
+                cand, self.read_seq, self._mems, self._version
+            )
+            if resolved is not None:
+                self.key = cand
+                self.value = resolved
+                self.valid = True
+                return True
+            bound = cand  # deleted at the read point — keep walking down
+
+    def _largest_below(self, bound: bytes | None) -> bytes | None:
+        db = self._db
+        best = None
+        for m in self._mems:
+            k = m.largest_key_below(bound)
+            if k is not None and (best is None or k > best):
+                best = k
+        for f in self._version.levels[0]:
+            k = db.versions.reader(f.file_no).largest_key_below(bound)
+            if k is not None and (best is None or k > best):
+                best = k
+        for files in self._lvl_files:
+            # rightmost file that could hold point keys < bound; walk left
+            # past tombstone-only tails (extended bounds may hold no point
+            # key below the bound at all)
+            i = len(files) - 1
+            if bound is not None:
+                lo, hi = 0, len(files)
+                while lo < hi:
+                    mid = (lo + hi) // 2
+                    if files[mid].smallest < bound:
+                        lo = mid + 1
+                    else:
+                        hi = mid
+                i = lo - 1
+            while i >= 0:
+                k = db.versions.reader(files[i].file_no).largest_key_below(bound)
+                if k is not None:
+                    if best is None or k > best:
+                        best = k
+                    break
+                i -= 1
+        return best
+
+
 class DB:
     def __init__(self, path: str, cfg: DBConfig | None = None):
         self.path = path
@@ -162,6 +450,10 @@ class DB:
         # pipelined commit: groups in flight, oldest first. Publication is
         # strictly in this order (no commit-order hole).
         self._pending: deque[_Group] = deque()
+        # live snapshot registry: read-point seq -> refcount (several
+        # snapshots can share one seq). Guarded by the mutex; compaction,
+        # GC and the memtable retain path all consult it.
+        self._snapshots: dict[int, int] = {}
         self._publish_cv = threading.Condition(self.mutex)  # publish-order barrier
         self._pipeline_cv = threading.Condition(self.mutex)  # slot/rotation waits
         self._rotation_pending = False  # rotate once the pipeline drains
@@ -291,7 +583,7 @@ class DB:
             else:
                 replayed.append(path)
         self._drop_dangling_pointers()
-        if len(self.mem):
+        if len(self.mem) or self.mem.range_tombstones:
             # The recovered entries exist ONLY in memory + these logs, so
             # the logs must outlive them: seal the memtable as an immutable
             # that CARRIES its source logs, and let flush_memtable delete
@@ -325,7 +617,11 @@ class DB:
             if type_ != kTypeValuePtr:
                 continue
             try:
-                self.bvalue.get(ValueOffset.decode(value), verify=False)
+                # verify=True: existence is not enough — a dropped write
+                # batch can leave a zero-filled hole inside a file a LATER
+                # batch extended and fsynced, so the probe must prove the
+                # bytes themselves (CRC), not just that the read succeeds
+                self.bvalue.get(ValueOffset.decode(value), verify=True)
             except Exception:
                 dangling.add(key)
         if not dangling:
@@ -335,6 +631,11 @@ class DB:
         for key, (seq, type_, value) in self.mem._table.items():
             if key not in dangling:
                 mem.add(seq, type_, key, value)
+        # range tombstones ride the same replayed WAL records and must
+        # survive the rebuild, or a crash after an acked delete_range
+        # silently resurrects every covered key
+        for seq, start, end in self.mem.range_tombstones:
+            mem._add_range_tombstone(seq, start, end)
         self.mem = mem
 
     def _open_wal(self) -> None:
@@ -367,6 +668,16 @@ class DB:
         reclaimed later by ``gc_collect``). Same durability as ``put``."""
         self._commit([(kTypeDeletion, key, b"")])
 
+    def delete_range(self, start: bytes, end: bytes) -> None:
+        """Delete every key in ``[start, end)`` with ONE range tombstone —
+        one WAL record, one memtable entry: O(1) in the number of covered
+        keys. Covered versions become invisible to reads above the
+        tombstone's sequence (older snapshots still see them); compaction
+        physically drops them — and reports their separated values dead —
+        as it encounters them. Same durability as ``put``. Requires
+        SSTable format v3 (the tombstone side block)."""
+        self._commit([(kTypeRangeDeletion, start, end)])
+
     def write(self, batch: WriteBatch) -> None:
         """Commit a WriteBatch atomically: all ops share one sequence
         number and one CRC-framed WAL record, so crash replay applies the
@@ -390,6 +701,16 @@ class DB:
         user_bytes = 0
         big_idx: list[int] = []
         for i, (type_, key, value) in enumerate(ops):
+            if type_ == kTypeRangeDeletion:
+                # gate at write time, not flush time: a v<3 table cannot
+                # carry the tombstone side block, and failing the flush
+                # later would lose an already-acked write
+                if cfg.sstable_format_version < 3:
+                    raise ValueError(
+                        "delete_range requires sstable_format_version >= 3"
+                    )
+                if not key < value:  # key=start, value=end (exclusive)
+                    raise ValueError("delete_range: start must sort before end")
             user_bytes += len(key) + len(value)
             if (
                 type_ == kTypeValue
@@ -636,8 +957,12 @@ class DB:
 
     def _apply_group_locked(self, group: list[_Writer], total_entries: int) -> list:
         """MemTable apply for one group: bulk per-batch, or hash-sharded
-        across the worker pool when the group is huge."""
+        across the worker pool when the group is huge. While snapshots are
+        live, superseded versions a snapshot can still see are retained in
+        the memtable's history instead of being discarded (and are NOT in
+        the returned prev list — their values are not dead yet)."""
         cfg = self.cfg
+        retain = max(self._snapshots) if self._snapshots else None
         if (
             cfg.memtable_shard_apply_entries
             and cfg.memtable_apply_shards > 1
@@ -651,12 +976,58 @@ class DB:
                 )
             self.stats.add("memtable_shard_applies")
             return self.mem.add_group_sharded(
-                [(w.seq, w.entries) for w in group], self._mt_pool, cfg.memtable_apply_shards
+                [(w.seq, w.entries) for w in group],
+                self._mt_pool,
+                cfg.memtable_apply_shards,
+                retain_from=retain,
             )
         prevs: list = []
         for w in group:
-            prevs.extend(self.mem.add_batch(w.seq, w.entries))
+            prevs.extend(self.mem.add_batch(w.seq, w.entries, retain_from=retain))
         return prevs
+
+    # ------------------------------------------------------------------
+    # snapshots
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        """Pin the current read point; see :class:`Snapshot`. Raises
+        ``RuntimeError`` past ``DBConfig.max_snapshots`` live snapshots."""
+        with self.mutex:
+            if sum(self._snapshots.values()) >= self.cfg.max_snapshots:
+                raise RuntimeError(
+                    f"snapshot(): {self.cfg.max_snapshots} snapshots already "
+                    "live (DBConfig.max_snapshots) — release some first"
+                )
+            # The read point is the last PUBLISHED sequence. Pipelined
+            # groups hold assigned-but-unpublished seqs; including them
+            # would let the "snapshot" grow entries after creation.
+            if self._pending:
+                seq = min(w.seq for w in self._pending[0].writers) - 1
+            else:
+                seq = self._seq
+            self._snapshots[seq] = self._snapshots.get(seq, 0) + 1
+            return Snapshot(self, seq)
+
+    def _release_snapshot_seq(self, seq: int) -> None:
+        with self.mutex:
+            n = self._snapshots.get(seq, 0)
+            if n <= 1:
+                self._snapshots.pop(seq, None)
+            else:
+                self._snapshots[seq] = n - 1
+
+    def snapshot_seqs(self) -> list[int]:
+        """Sorted live snapshot read points (compaction stripe boundaries,
+        GC unlink guard)."""
+        with self.mutex:
+            return sorted(self._snapshots)
+
+    def iterator(self, snapshot: Snapshot | None = None) -> Cursor:
+        """A bidirectional :class:`Cursor` over a stable read point —
+        ``snapshot``, or one taken now and released when the cursor
+        closes. The cursor survives concurrent flush/compaction/GC (it
+        pins the version); always close it (or use ``with``)."""
+        return Cursor(self, snapshot)
 
     def _adapt_group_cap_locked(self, persist_s: float) -> None:
         """Latency-target controller: EWMA the group persist latency and
@@ -793,12 +1164,15 @@ class DB:
     # ------------------------------------------------------------------
     # read path
     # ------------------------------------------------------------------
-    def get(self, key: bytes) -> bytes | None:
-        """Point lookup: newest version wins (MemTables, then L0
-        newest-first, then deeper levels). SSTable blocks are fetched
-        through the shared block cache before any pread; separated values
-        then resolve through the BVCache / BValue store. Returns None for
-        absent or deleted keys."""
+    def get(self, key: bytes, snapshot: Snapshot | None = None) -> bytes | None:
+        """Point lookup: newest version visible at the read point wins
+        (MemTables, then L0 newest-first, then deeper levels). With
+        ``snapshot`` the read point is the snapshot's sequence; otherwise
+        latest. SSTable blocks are fetched through the shared block cache
+        before any pread; separated values then resolve through the
+        BVCache / BValue store. Returns None for absent, deleted, or
+        range-deleted keys."""
+        read_seq = MAX_SEQ if snapshot is None else snapshot.seq
         # lock-free against background work: the (memtables, version) pair
         # is snapshotted under the mutex, but a compaction may finish and
         # unlink this snapshot's input files while we walk it. The reader
@@ -808,16 +1182,8 @@ class DB:
             with self.mutex:
                 tables = [self.mem, *reversed(self.immutables)]
                 version = self.versions.current
-            for t in tables:
-                found, type_, value = t.get(key)
-                if found:
-                    return self._resolve(key, type_, value)
             try:
-                for _level, fmeta in version.candidates_for_get(key):
-                    reader = self.versions.reader(fmeta.file_no)
-                    found, _seq, type_, value = reader.get(key)
-                    if found:
-                        return self._resolve(key, type_, value)
+                result = self._lookup_at(key, read_seq, tables, version)
             except (OSError, ValueError) as e:
                 if self.versions.current is version:
                     if isinstance(e, CorruptionError):
@@ -829,9 +1195,59 @@ class DB:
             # a miss is only trustworthy if the version didn't move under
             # us (a file may have been replaced between candidates); under
             # sustained churn accept the last miss rather than spinning.
-            if self.versions.current is version or _attempt == 7:
-                return None
+            if (
+                result is not None
+                or self.versions.current is version
+                or _attempt == 7
+            ):
+                return result
         return None
+
+    def _lookup_at(self, key: bytes, read_seq: int, tables, version):
+        """One MVCC point lookup over a fixed (memtables, version) pair:
+        the resolved value, or None for absent / point-deleted /
+        range-deleted at ``read_seq``. Raises OSError/ValueError when the
+        walk races a compaction (``get`` retries on a fresh pair; pinned
+        callers — cursors — can never see that).
+
+        Tombstone accounting relies on the LSM freshness invariants:
+        memtable data is strictly newer than table data, and shallower
+        overlapping table data is strictly newer than deeper — so the max
+        covering-tombstone seq only needs the sources up to AND INCLUDING
+        the hit's level (a snapshot-retained version can coexist with a
+        newer tombstone in the *adjacent touching file* of the same sorted
+        level, hence "including")."""
+        tomb = 0
+        hit = None
+        for t in tables:
+            ts = t.covering_tombstone_seq(key, read_seq)
+            if ts > tomb:
+                tomb = ts
+            found, seq, type_, value = t.get_at(key, read_seq)
+            if found:
+                hit = (seq, type_, value)
+                break
+        if hit is None:
+            hit_level = None
+            for level, fmeta in version.candidates_for_get(key):
+                if hit is not None and level != hit_level:
+                    break  # deeper data is strictly older — done
+                reader = self.versions.reader(fmeta.file_no)
+                if reader.range_tombstones:
+                    ts = reader.max_tombstone_seq(key, read_seq)
+                    if ts > tomb:
+                        tomb = ts
+                if hit is None:
+                    if read_seq == MAX_SEQ:
+                        found, seq, type_, value = reader.get(key)
+                    else:
+                        found, seq, type_, value = reader.get_at(key, read_seq)
+                    if found:
+                        hit = (seq, type_, value)
+                        hit_level = level
+        if hit is None or hit[0] < tomb or hit[1] == kTypeDeletion:
+            return None
+        return self._resolve(key, hit[1], hit[2])
 
     def _resolve(self, key: bytes, type_: int, value: bytes) -> bytes | None:
         if type_ == kTypeDeletion:
@@ -858,19 +1274,19 @@ class DB:
         memtables and every level, tombstones elided, separated values
         resolved.
 
-        Like :meth:`get`, the snapshot walk races background compaction
-        (input files can vanish mid-merge); the whole scan restarts on a
-        torn snapshot.
+        Streams from a pinned :class:`Cursor`, so the walk can no longer
+        be torn by a concurrent compaction (the cursor pins the version and
+        a snapshot for its whole lifetime) — the historical bounded-retry
+        loop collapsed to one attempt. The retry scaffold (and the typed
+        :class:`SnapshotUnstableError`) remains for alternate
+        ``_scan_attempts`` implementations that can still report a torn
+        snapshot by returning None.
 
         Iterator fan-out is lazy: L0 files overlap so each contributes its
         own iterator, but every sorted level (L1+) feeds the heap merge ONE
         concatenating iterator that binary-searches the file list and opens
         a file only when the merge cursor actually reaches it — a short
         scan touches O(levels) files, not O(all files).
-
-        If 8 attempts all land on torn snapshots, one bounded backoff round
-        (compaction churn usually settles within milliseconds) precedes the
-        typed :class:`SnapshotUnstableError`.
         """
         for _round in range(2):
             if _round:
@@ -885,39 +1301,13 @@ class DB:
     def _scan_attempts(
         self, start: bytes, count: int
     ) -> list[tuple[bytes, bytes]] | None:
-        for _attempt in range(8):
-            with self.mutex:
-                mems = [self.mem, *reversed(self.immutables)]
-                version = self.versions.current
-            try:
-                iters = [m.range_items(start, None) for m in mems]
-                for f in version.levels[0]:
-                    if f.largest >= start:
-                        iters.append(self.versions.reader(f.file_no).iter_from(start))
-                for level in range(1, len(version.levels)):
-                    files = version.files_from(level, start)
-                    if files:
-                        iters.append(self._level_concat_iter(files, start))
-                out: list[tuple[bytes, bytes]] = []
-                last = None
-                for key, _seq, type_, value in _merge_iters(iters):
-                    if key == last:
-                        continue
-                    last = key
-                    resolved = self._resolve(key, type_, value)
-                    if resolved is None:
-                        continue
-                    out.append((key, resolved))
-                    if len(out) >= count:
-                        break
-            except (OSError, ValueError) as e:
-                if self.versions.current is version:
-                    if isinstance(e, CorruptionError):
-                        self.errors.on_corruption(e)
-                    raise  # stable snapshot: real I/O or corruption error
-                continue  # snapshot superseded mid-scan — restart
+        with Cursor(self) as cur:
+            out: list[tuple[bytes, bytes]] = []
+            ok = cur.seek(start)
+            while ok and len(out) < count:
+                out.append((cur.key, cur.value))
+                ok = cur.next()
             return out
-        return None  # every attempt torn — caller decides backoff/raise
 
     def _level_concat_iter(self, files, start: bytes):
         """Lazily chain one sorted level's tables: a reader is opened only
@@ -942,7 +1332,9 @@ class DB:
             # WAL/memtable pair — rotating now would strand them.
             while self._pending:
                 self._publish_cv.wait()
-            if len(self.mem):
+            # a tombstone-only memtable has len() == 0 but must still reach
+            # an SSTable (its range block), so it counts as flushable
+            if len(self.mem) or self.mem.range_tombstones:
                 self._rotate_memtable_locked()
         self.wait_idle(compactions=False)
         self.bvalue.flush()
@@ -966,6 +1358,102 @@ class DB:
     def compact_all(self) -> None:
         """Drive compaction to quiescence (test/benchmark helper)."""
         self.wait_idle(compactions=True)
+
+    def checkpoint(self, directory: str) -> None:
+        """Online checkpoint: materialize a consistent, openable copy of
+        the DB in ``directory`` without stopping writes.
+
+        Sequence: flush (so everything acked is in SSTables — a checkpoint
+        carries no WAL), seal the active BValue files (an append tail must
+        never be hard-linked: the link shares the inode, so later appends
+        would bleed into the checkpoint), then under the mutex pin the
+        current version + register a snapshot and capture the counters.
+        Live tables and value files are hard-linked (``checkpoint_hardlink``;
+        copy fallback on False or a cross-device error) into the target,
+        and finally a fresh single-edit MANIFEST is written via tmp-file +
+        fsync + atomic rename — its presence is the commit marker, so a
+        crash mid-checkpoint leaves a directory that is recognizably
+        incomplete (no MANIFEST) rather than a subtly wrong DB.
+
+        The pin keeps every captured SSTable on disk (compaction defers
+        input unlinks); the snapshot keeps BValue GC from unlinking a
+        value file whose pre-rewrite pointers the captured tables still
+        hold. The retry probe on value files covers the one benign race
+        left (GC passed its guard before our snapshot registered — then
+        the captured tables only reference the rewritten copies)."""
+        if self.env.exists(os.path.join(directory, MANIFEST_NAME)):
+            raise ValueError(f"checkpoint: {directory!r} already holds a DB")
+        self.flush()
+        self.bvalue.seal_active()
+        with self.mutex:
+            snap = self.snapshot()
+            version = self.versions.pin_current()
+            last_seq = self.versions.last_seq
+            next_file_no = self.versions.next_file_no
+            bv_next = self.bvalue.next_file_id
+        try:
+            self.env.makedirs(directory)
+            bv_dir = os.path.join(directory, "bvalue")
+            self.env.makedirs(bv_dir)
+            add = []
+            for level, lv in enumerate(version.levels):
+                for f in lv:
+                    self._checkpoint_file(
+                        table_path(self.path, f.file_no),
+                        table_path(directory, f.file_no),
+                    )
+                    add.append((level, f.to_wire()))
+            src_bv = os.path.join(self.path, "bvalue")
+            for name in sorted(self.env.listdir(src_bv)):
+                if not name.endswith(".val"):
+                    continue
+                for _ in range(3):
+                    try:
+                        self._checkpoint_file(
+                            os.path.join(src_bv, name), os.path.join(bv_dir, name)
+                        )
+                        break
+                    except OSError:
+                        if not self.env.exists(os.path.join(src_bv, name)):
+                            break  # GC'd mid-walk: nothing live points here
+            edit = {
+                "add": add,
+                "last_seq": last_seq,
+                "next_file_no": next_file_no,
+                "bvalue_next_file_id": bv_next,
+            }
+            tmp = os.path.join(directory, MANIFEST_NAME + ".tmp")
+            f = self.env.open(tmp, "wb")
+            try:
+                f.write(frame_record(msgpack.packb(edit, use_bin_type=True)))
+                f.flush()
+                self.env.fsync(f)
+            finally:
+                f.close()
+            self.env.rename(tmp, os.path.join(directory, MANIFEST_NAME))
+            self.stats.add("checkpoints")
+        finally:
+            self.versions.unpin()
+            snap.release()
+
+    def _checkpoint_file(self, src: str, dst: str) -> None:
+        if self.cfg.checkpoint_hardlink:
+            try:
+                self.env.link(src, dst)
+                return
+            except FileNotFoundError:
+                raise
+            except OSError:
+                pass  # EXDEV / EEXIST / unsupported — fall back to a copy
+        with self.env.open(src, "rb") as fi:
+            data = fi.read()
+        f = self.env.open(dst, "wb")
+        try:
+            f.write(data)
+            f.flush()
+            self.env.fsync(f)
+        finally:
+            f.close()
 
     def resume(self) -> None:
         """Leave read-only mode after a hard background error.

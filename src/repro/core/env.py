@@ -36,11 +36,14 @@ from .errors import SimulatedCrashError
 
 #: operation kinds a fault rule can match. "write" covers append/pwrite,
 #: "sync" covers fsync/fdatasync on any handle.
-OPS = ("open", "read", "write", "sync", "rename", "unlink", "listdir", "truncate")
+OPS = ("open", "read", "write", "sync", "rename", "unlink", "listdir",
+       "truncate", "link")
 
 #: ops that mutate the (simulated) device — these all fail once a simulated
 #: crash has fired.
-_MUTATING_OPS = frozenset(("open", "write", "sync", "rename", "unlink", "truncate"))
+_MUTATING_OPS = frozenset(
+    ("open", "write", "sync", "rename", "unlink", "truncate", "link")
+)
 
 
 class Env:
@@ -104,6 +107,12 @@ class Env:
 
     def makedirs(self, path) -> None:
         os.makedirs(path, exist_ok=True)
+
+    def link(self, src, dst) -> None:
+        """Hard-link ``src`` to ``dst`` (checkpoint file sharing). Callers
+        that must work across devices catch OSError and fall back to a
+        byte copy."""
+        os.link(src, dst)
 
 
 #: module-level default shared by every DB that doesn't set ``cfg.env``.
@@ -475,3 +484,16 @@ class FaultInjectionEnv(Env):
     def listdir(self, path):
         self._check("listdir", path)
         return os.listdir(path)
+
+    def link(self, src, dst) -> None:
+        # a hard link shares the inode, so both names must share ONE state
+        # object — independent copies let drop_unsynced ftruncate the inode
+        # down through one name (its stale smaller synced_size) and then
+        # zero-extend it back through the other, corrupting synced bytes
+        # that a real power-cut would have kept
+        self._check("link", dst)
+        os.link(src, dst)
+        with self._lock:
+            st = self._files.get(src)
+            if st is not None:
+                self._files[dst] = st

@@ -112,6 +112,7 @@ class BValueGC:
         self.rewritten_values = 0
         self.rewritten_bytes = 0
         self.sliced = False  # budget exhausted with work remaining
+        self.snapshot_deferred = 0  # files kept alive for a live snapshot
 
     def _live_files(self) -> set[int]:
         """Files GC must not touch: the active append tails, plus any file
@@ -242,6 +243,19 @@ class BValueGC:
                     break
                 if not file_clean:
                     continue  # leave fid for a later, calmer pass
+                # snapshot guard: a live snapshot older than this file's
+                # rewrites can still resolve a key to a PRE-rewrite pointer
+                # (the re-inserted record has a newer seq, invisible to it),
+                # and compaction retains those older versions for exactly
+                # that snapshot. Unlinking now would break its reads — defer
+                # to a later pass. A snapshot taken after ``hwm`` sees only
+                # the fresh pointers, so it never blocks reclamation.
+                with db.mutex:
+                    hwm = db._seq
+                snaps = db.snapshot_seqs()
+                if snaps and min(snaps) < hwm:
+                    self.snapshot_deferred += 1
+                    continue
                 db.flush()
                 path = db.bvalue.file_path(fid)
                 try:
@@ -265,6 +279,7 @@ class BValueGC:
             "rewritten_values": self.rewritten_values,
             "rewritten_bytes": self.rewritten_bytes,
             "sliced": self.sliced,
+            "snapshot_deferred": self.snapshot_deferred,
         }
 
     def _pointer_for(self, key: bytes) -> ValueOffset | None:

@@ -88,23 +88,30 @@ class Version:
         return files[lo:]
 
     def candidates_for_get(self, key: bytes):
-        """Yield (level, FileMetadata) newest-first for a point lookup."""
+        """Yield (level, FileMetadata) newest-first for a point lookup.
+
+        Sorted-level file ranges are disjoint in their POINT keys, but the
+        bounds are extended by range-tombstone spans, which clip exactly at
+        a neighbour's first key — two files can *touch* on one key. Yield
+        every touching file (at most two), in order: the earlier file holds
+        the newer versions when a key sits on a table boundary."""
         # L0 files may overlap — newest first (we append newest at index 0).
         for f in self.levels[0]:
             if f.smallest <= key <= f.largest:
                 yield 0, f
         for level in range(1, len(self.levels)):
             files = self.levels[level]
-            lo, hi = 0, len(files) - 1
-            while lo <= hi:
+            lo, hi = 0, len(files)
+            while lo < hi:  # first file with largest >= key
                 mid = (lo + hi) // 2
                 if files[mid].largest < key:
                     lo = mid + 1
-                elif files[mid].smallest > key:
-                    hi = mid - 1
                 else:
-                    yield level, files[mid]
+                    hi = mid
+            for f in files[lo:]:
+                if f.smallest > key:
                     break
+                yield level, f
 
 
 class VersionSet:
@@ -130,6 +137,15 @@ class VersionSet:
         self._lock = threading.Lock()
         self._readers: dict[int, SSTableReader] = {}
         self._retired: list[SSTableReader] = []  # dropped, close-deferred
+        # -- cursor pinning ------------------------------------------------
+        # while pins > 0 (open cursors/checkpoints), readers dropped by
+        # compaction PARK instead of retiring (still resolvable via
+        # ``reader()``) and input unlinks are deferred — a lazy merged scan
+        # may open a cold input file minutes after the compaction that
+        # replaced it committed.
+        self._pins = 0
+        self._parked: dict[int, SSTableReader] = {}
+        self._deferred_unlinks: list[str] = []
         self.compaction_ptr: dict[int, bytes] = {}
         # per-file compaction locks: a file is locked from pick time until
         # its job's manifest edit commits, so concurrent compaction jobs
@@ -261,9 +277,58 @@ class VersionSet:
         with self._lock:
             return set(self._compacting)
 
+    def pin(self) -> None:
+        """A cursor (or checkpoint) is walking the current version: park
+        dropped readers and defer input unlinks until every pin releases."""
+        with self._lock:
+            self._pins += 1
+
+    def pin_current(self):
+        """Atomically pin AND return the current version. The two must be
+        one critical section: a compaction edit + input unlink between a
+        ``current`` read and the pin() would hand the caller a version
+        whose files are already gone. (A pin landing between an edit and
+        its input unlink merely defers that unlink — conservative, cleaned
+        up at unpin.) Pair with :meth:`unpin`."""
+        with self._lock:
+            self._pins += 1
+            return self.current
+
+    def unpin(self) -> None:
+        with self._lock:
+            self._pins -= 1
+            if self._pins > 0:
+                return
+            to_unlink = self._deferred_unlinks
+            self._deferred_unlinks = []
+            # parked readers join the normal close-deferred retirement
+            self._retired.extend(self._parked.values())
+            self._parked.clear()
+            to_close = self._retired[:-32] if len(self._retired) > 64 else []
+            if to_close:
+                self._retired = self._retired[-32:]
+        for path in to_unlink:
+            try:
+                self.env.unlink(path)
+            except OSError:
+                pass  # rediscovered by the next open's orphan sweep
+        for r in to_close:
+            r.close()
+
+    def defer_or_unlink(self, path: str) -> None:
+        """Unlink a replaced input table now — or, while cursors hold pins,
+        after the last pin releases (the file stays openable meanwhile)."""
+        with self._lock:
+            if self._pins > 0:
+                self._deferred_unlinks.append(path)
+                return
+        self.env.unlink(path)
+
     def reader(self, file_no: int) -> SSTableReader:
         with self._lock:
             r = self._readers.get(file_no)
+            if r is None:
+                r = self._parked.get(file_no)
         if r is not None:
             return r
         # construct OUTSIDE the lock (opens the file + loads its index);
@@ -290,6 +355,11 @@ class VersionSet:
             r = self._readers.pop(file_no, None)
             if r is None:
                 return
+            if self._pins > 0:
+                # an open cursor may still reach this file through its
+                # pinned version — keep it resolvable until unpin
+                self._parked[file_no] = r
+                return
             self._retired.append(r)
             to_close = self._retired[:-32] if len(self._retired) > 64 else []
             if to_close:
@@ -307,6 +377,9 @@ class VersionSet:
         for r in self._readers.values():
             r.close()
         self._readers.clear()
+        for r in self._parked.values():
+            r.close()
+        self._parked.clear()
         for r in self._retired:
             r.close()
         self._retired.clear()

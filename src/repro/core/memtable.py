@@ -30,25 +30,44 @@ iterates after releasing it): writers bump ``_version`` on every new-key
 insert, and a reader publishes its sorted list tagged with the version it
 started from — a list built while a write raced in carries a stale tag and
 is simply rebuilt, it can never masquerade as fresh.
+
+MVCC extensions (PR 7):
+
+* ``_history`` retains *superseded* versions (oldest-first per key) while a
+  live snapshot could still read them — the apply paths take a
+  ``retain_from`` watermark (the oldest live snapshot's seq) and keep the
+  overwritten record iff ``prev_seq <= retain_from``. With no snapshots the
+  fast newest-only path is byte-identical to before. History lists are
+  append-only and the previous version is appended BEFORE the table slot is
+  overwritten, so a lock-free reader that sees the new head always finds
+  the superseded version in history (``reversed()`` captures its end index
+  at creation — racing appends are invisible to it).
+* ``range_tombstones`` holds ``(seq, start, end)`` range-delete records
+  (end exclusive); point reads consult :meth:`covering_tombstone_seq`.
 """
 from __future__ import annotations
 
 from bisect import bisect_left
 
-from .record import kTypeDeletion
+from .record import MAX_SEQ, kTypeDeletion, kTypeRangeDeletion
 
 ENTRY_OVERHEAD = 24  # node/arena bookkeeping per entry (approximation)
 
 
 class MemTable:
-    __slots__ = ("_table", "_bytes", "_version", "_sorted_cache",
-                 "first_seq", "last_seq", "wal_no", "recovery_logs")
+    __slots__ = ("_table", "_bytes", "_version", "_sorted_cache", "_history",
+                 "range_tombstones", "first_seq", "last_seq", "wal_no",
+                 "recovery_logs")
 
     def __init__(self) -> None:
         self._table: dict[bytes, tuple[int, int, bytes]] = {}
         self._bytes = 0
         self._version = 0  # bumped on new-key insert (key set changed)
         self._sorted_cache: tuple[int, list[bytes]] | None = None  # (version, keys)
+        # superseded-but-snapshot-visible versions, oldest-first per key
+        self._history: dict[bytes, list[tuple[int, int, bytes]]] = {}
+        # (seq, start, end-exclusive) range tombstones, insertion order
+        self.range_tombstones: list[tuple[int, bytes, bytes]] = []
         self.first_seq: int | None = None
         self.last_seq = 0
         self.wal_no: int | None = None  # WAL file backing this memtable
@@ -64,10 +83,23 @@ class MemTable:
     def approximate_size(self) -> int:
         return self._bytes
 
-    def add(self, seq: int, type_: int, key: bytes, value: bytes):
-        """Returns the superseded (seq, type, value) record, if any."""
+    def add(self, seq: int, type_: int, key: bytes, value: bytes,
+            retain_from: int | None = None):
+        """Returns the superseded (seq, type, value) record, if any.
+
+        ``retain_from`` is the newest live snapshot's sequence number (None
+        = no snapshots): a superseded version with ``seq <= retain_from``
+        is still visible to some snapshot and moves into ``_history``
+        instead of being dropped."""
+        if type_ == kTypeRangeDeletion:
+            self._add_range_tombstone(seq, key, value)
+            return None
         prev = self._table.get(key)
         if prev is not None:
+            if retain_from is not None and prev[0] <= retain_from:
+                # append BEFORE overwriting the head (lock-free readers)
+                self._history.setdefault(key, []).append(prev)
+                self._bytes += len(key) + ENTRY_OVERHEAD  # history node cost
             self._bytes -= len(key) + len(prev[2]) + ENTRY_OVERHEAD
         self._table[key] = (seq, type_, value)
         self._bytes += len(key) + len(value) + ENTRY_OVERHEAD
@@ -81,19 +113,37 @@ class MemTable:
         self.last_seq = max(self.last_seq, seq)
         return prev
 
-    def add_batch(self, seq: int, entries) -> list:
+    def _add_range_tombstone(self, seq: int, start: bytes, end: bytes) -> None:
+        self.range_tombstones.append((seq, start, end))
+        self._bytes += len(start) + len(end) + ENTRY_OVERHEAD
+        if self.first_seq is None:
+            self.first_seq = seq
+        self.last_seq = max(self.last_seq, seq)
+
+    def add_batch(self, seq: int, entries, retain_from: int | None = None) -> list:
         """Apply a group-commit batch of (type, key, value) entries sharing
         one sequence number. Returns the superseded records (same contract
         as ``add``) for entries that overwrote an existing key."""
         table = self._table
+        history = self._history
         nbytes = 0
         new_keys = 0
         prevs = []
         for type_, key, value in entries:
+            if type_ == kTypeRangeDeletion:
+                self._add_range_tombstone(seq, key, value)
+                continue
             prev = table.get(key)
             if prev is not None:
+                if retain_from is not None and prev[0] <= retain_from:
+                    history.setdefault(key, []).append(prev)
+                    nbytes += len(key) + ENTRY_OVERHEAD
+                else:
+                    # a retained version is still live (some snapshot reads
+                    # it) — only non-retained supersessions are reported so
+                    # the caller's dead-value accounting stays truthful
+                    prevs.append(prev)
                 nbytes -= len(key) + len(prev[2]) + ENTRY_OVERHEAD
-                prevs.append(prev)
             else:
                 new_keys += 1
             table[key] = (seq, type_, value)
@@ -106,7 +156,8 @@ class MemTable:
         self.last_seq = max(self.last_seq, seq)
         return prevs
 
-    def add_group_sharded(self, applies, pool, nshards: int) -> list:
+    def add_group_sharded(self, applies, pool, nshards: int,
+                          retain_from: int | None = None) -> list:
         """Apply a whole commit group — ``applies`` is ``[(seq, entries),
         ...]`` in ascending seq order — sharded by key hash across ``pool``.
 
@@ -118,8 +169,15 @@ class MemTable:
         buckets: list[list] = [[] for _ in range(nshards)]
         for seq, entries in applies:
             for entry in entries:
-                buckets[hash(entry[1]) % nshards].append((seq, entry))
-        futures = [pool.submit(self._apply_shard, b) for b in buckets if b]
+                if entry[0] == kTypeRangeDeletion:
+                    # range tombstones span shards — the leader applies them
+                    # directly (applies are in ascending seq order)
+                    self._add_range_tombstone(seq, entry[1], entry[2])
+                else:
+                    buckets[hash(entry[1]) % nshards].append((seq, entry))
+        futures = [
+            pool.submit(self._apply_shard, b, retain_from) for b in buckets if b
+        ]
         nbytes = 0
         new_keys = 0
         prevs: list = []
@@ -137,19 +195,24 @@ class MemTable:
             self.last_seq = max(self.last_seq, applies[-1][0])
         return prevs
 
-    def _apply_shard(self, items) -> tuple[int, int, list]:
+    def _apply_shard(self, items, retain_from: int | None = None) -> tuple[int, int, list]:
         """One shard's slice of a group: ``[(seq, (type, key, value)), ...]``
         in seq order. Touches only this shard's keys; returns the byte
         delta, new-key count, and superseded records."""
         table = self._table
+        history = self._history
         nbytes = 0
         new_keys = 0
         prevs = []
         for seq, (type_, key, value) in items:
             prev = table.get(key)
             if prev is not None:
+                if retain_from is not None and prev[0] <= retain_from:
+                    history.setdefault(key, []).append(prev)
+                    nbytes += len(key) + ENTRY_OVERHEAD
+                else:
+                    prevs.append(prev)  # see add_batch: retained = still live
                 nbytes -= len(key) + len(prev[2]) + ENTRY_OVERHEAD
-                prevs.append(prev)
             else:
                 new_keys += 1
             table[key] = (seq, type_, value)
@@ -158,12 +221,39 @@ class MemTable:
 
     def get(self, key: bytes):
         """Returns (found, type, value). found=False means fall through to
-        older tables / SSTs; a found tombstone terminates the lookup."""
+        older tables / SSTs; a found tombstone terminates the lookup.
+
+        NOTE: does not consult range tombstones — the DB read path tracks
+        the max covering tombstone seq across tables itself (a tombstone
+        here may shadow a point hit in an older table)."""
         hit = self._table.get(key)
         if hit is None:
             return False, kTypeDeletion, b""
         seq, type_, value = hit
         return True, type_, value
+
+    def get_at(self, key: bytes, read_seq: int):
+        """Snapshot read: returns (found, seq, type, value) for the newest
+        version of ``key`` with ``seq <= read_seq``."""
+        hit = self._table.get(key)
+        if hit is None:
+            return False, 0, kTypeDeletion, b""
+        if hit[0] <= read_seq:
+            return True, hit[0], hit[1], hit[2]
+        for rec in reversed(self._history.get(key, ())):
+            if rec[0] <= read_seq:
+                return True, rec[0], rec[1], rec[2]
+        return False, 0, kTypeDeletion, b""
+
+    def covering_tombstone_seq(self, key: bytes, read_seq: int = MAX_SEQ) -> int:
+        """Max seq of a range tombstone covering ``key`` visible at
+        ``read_seq`` (0 if none). The list is tiny per memtable, so a
+        linear scan is fine."""
+        best = 0
+        for seq, start, end in self.range_tombstones:
+            if seq <= read_seq and start <= key < end and seq > best:
+                best = seq
+        return best
 
     def _sorted(self) -> list[bytes]:
         while True:
@@ -184,13 +274,21 @@ class MemTable:
             return keys
 
     def sorted_items(self):
-        """Yield (key, seq, type, value) in ascending user-key order."""
+        """Yield (key, seq, type, value) in (user-key asc, seq desc) order —
+        every retained version, newest first per key (single-version when no
+        snapshot history exists, identical to the pre-MVCC behaviour)."""
         table = self._table
+        history = self._history
         for key in self._sorted():
             seq, type_, value = table[key]
             yield key, seq, type_, value
+            if history:
+                for hseq, htype, hvalue in reversed(history.get(key, ())):
+                    yield key, hseq, htype, hvalue
 
     def range_items(self, start: bytes, end: bytes | None):
+        """Newest version per key in [start, end) — the latest-read scan
+        view (snapshot readers use :meth:`iter_versions_from`)."""
         keys = self._sorted()
         table = self._table
         for i in range(bisect_left(keys, start), len(keys)):
@@ -199,3 +297,25 @@ class MemTable:
                 break
             seq, type_, value = table[key]
             yield key, seq, type_, value
+
+    def iter_versions_from(self, start: bytes):
+        """Yield (key, seq, type, value) for EVERY retained version from
+        ``start`` on, newest first per key — the cursor's memtable source."""
+        keys = self._sorted()
+        table = self._table
+        history = self._history
+        for i in range(bisect_left(keys, start), len(keys)):
+            key = keys[i]
+            seq, type_, value = table[key]
+            yield key, seq, type_, value
+            for hseq, htype, hvalue in reversed(history.get(key, ())):
+                yield key, hseq, htype, hvalue
+
+    def largest_key_below(self, bound: bytes | None) -> bytes | None:
+        """Largest user key strictly below ``bound`` (reverse-cursor step).
+        ``None`` bound means unbounded: the largest key overall."""
+        keys = self._sorted()
+        if bound is None:
+            return keys[-1] if keys else None
+        i = bisect_left(keys, bound)
+        return keys[i - 1] if i else None

@@ -14,6 +14,10 @@ Value kinds:
 * ``kTypeDeletion``   — tombstone
 * ``kTypeValuePtr``   — BVLSM/BlobDB pointer: payload is an encoded
                         :class:`ValueOffset` instead of the value bytes.
+* ``kTypeRangeDeletion`` — range tombstone: key is the *start* (inclusive)
+                        and the value payload is the *end* (exclusive) user
+                        key. Rides the existing WAL entry encoding unchanged;
+                        SSTables store these in a dedicated side block.
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ from dataclasses import dataclass
 kTypeDeletion = 0x0
 kTypeValue = 0x1
 kTypeValuePtr = 0x2
+kTypeRangeDeletion = 0x3
 
 MAX_SEQ = (1 << 56) - 1
 

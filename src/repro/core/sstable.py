@@ -20,15 +20,20 @@ File layout::
   the optional 4th element is the block's crc32, verified on read under
   ``paranoid_checks`` and by the ``DB.verify_integrity`` scrub. Tables
   written before the CRC existed decode fine (entries are 3-wide).
+* range-tombstone block (v3) — msgpack list of ``(seq, start, end)``
+  range deletes carried by this table (end exclusive), placed between the
+  index block and the footer. Empty list when the table has none.
 * footer — v1: fixed 40 B ``filter_off, filter_len, index_off, index_len,
-  magic``; v2: fixed 48 B with a ``version`` field before a new magic.
+  magic``; v2: fixed 48 B with a ``version`` field before a new magic;
+  v3: fixed 64 B adding ``range_off, range_len`` before the version field.
   Readers dispatch on the trailing magic, so v1 tables written by older
   code keep decoding forever (compat rule: readers support every version
   ≤ FORMAT_VERSION; writers emit ``DBConfig.sstable_format_version``).
 
-Within a table every user key appears at most once (the engine has no
-snapshot support; MemTable dedups and compaction keeps the newest version),
-which keeps point lookups single-probe.
+A user key may appear MULTIPLE times within a table (format v3 / MVCC):
+entries are sorted by (user_key asc, seq desc), so the first occurrence of
+a key is its newest version — point lookups still resolve on the first hit.
+Single-version tables behave exactly as before.
 
 Decoded blocks are wrapped in :class:`Block` objects so a shared
 :class:`~repro.core.blockcache.BlockCache` can hold them across reads: the
@@ -64,12 +69,14 @@ from .record import decode_varint, encode_varint
 
 _FOOTER_V1 = struct.Struct("<QQQQQ")
 _FOOTER_V2 = struct.Struct("<QQQQQQ")
+_FOOTER_V3 = struct.Struct("<QQQQQQQQ")
 _MAGIC_V1 = 0xB7_15_3D_CA_FE_10_57_01
 _MAGIC_V2 = 0xB7_15_3D_CA_FE_10_57_02
+_MAGIC_V3 = 0xB7_15_3D_CA_FE_10_57_03
 _U32 = struct.Struct("<I")
 
 #: newest on-disk format this build writes (and the max it can read)
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
 
 
 @dataclass(slots=True)
@@ -121,14 +128,23 @@ class SSTableWriter:
         self._keys: list[bytes] = []
         self._offset = 0
         self._count = 0
+        self._last_seq: int | None = None
         self.smallest: bytes | None = None
         self.largest: bytes | None = None
 
     def add(self, key: bytes, seq: int, type_: int, value: bytes) -> None:
-        assert self.largest is None or key > self.largest, "keys must be added in order"
+        # (user_key asc, seq desc): duplicate user keys are multi-version
+        # runs and must arrive newest-first
+        assert (
+            self.largest is None
+            or key > self.largest
+            or (key == self.largest and seq < self._last_seq)
+        ), "keys must be added in (user_key asc, seq desc) order"
         if self.smallest is None:
             self.smallest = key
+        dup = key == self.largest
         self.largest = key
+        self._last_seq = seq
         ent = b"".join(
             (
                 encode_varint(len(key)),
@@ -143,7 +159,8 @@ class SSTableWriter:
             self._restarts.append(self._block_bytes)
         self._block.append(ent)
         self._block_bytes += len(ent)
-        self._keys.append(key)
+        if not dup:  # bloom + last-key tracking want distinct user keys
+            self._keys.append(key)
         self._count += 1
         if self._block_bytes >= self.block_size:
             self._flush_block(key)
@@ -167,7 +184,15 @@ class SSTableWriter:
         self._block_bytes = 0
         self._restarts = []
 
-    def finish(self, file_no: int) -> FileMetadata:
+    def finish(self, file_no: int, range_tombstones=()) -> FileMetadata:
+        """``range_tombstones``: iterable of (seq, start, end) range deletes
+        carried by this table (format v3+). The returned metadata's
+        smallest/largest are EXTENDED by the tombstone bounds so version
+        candidate selection routes covered point reads at this file (the
+        exclusive end is used as an inclusive largest — a safe
+        over-approximation)."""
+        if range_tombstones and self.format_version < 3:
+            raise ValueError("range tombstones need sstable format v3+")
         if self._block:
             self._flush_block(self._keys[-1])
         bloom = BloomFilter.build(self._keys).encode()
@@ -176,7 +201,19 @@ class SSTableWriter:
         index = msgpack.packb([[k, o, ln, crc] for k, o, ln, crc in self._index])
         index_off = filter_off + len(bloom)
         self._f.write(index)
-        if self.format_version >= 2:
+        range_off = index_off + len(index)
+        range_blob = b""
+        if self.format_version >= 3:
+            range_blob = msgpack.packb(
+                [[s, a, b] for s, a, b in sorted(range_tombstones)]
+            )
+            self._f.write(range_blob)
+        if self.format_version >= 3:
+            footer = _FOOTER_V3.pack(
+                filter_off, len(bloom), index_off, len(index),
+                range_off, len(range_blob), self.format_version, _MAGIC_V3,
+            )
+        elif self.format_version == 2:
             footer = _FOOTER_V2.pack(
                 filter_off, len(bloom), index_off, len(index),
                 self.format_version, _MAGIC_V2,
@@ -189,8 +226,14 @@ class SSTableWriter:
         self._f.flush()
         self._env.fsync(self._f)
         self._f.close()
-        size = index_off + len(index) + len(footer)
-        return FileMetadata(file_no, size, self.smallest or b"", self.largest or b"", self._count)
+        size = range_off + len(range_blob) + len(footer)
+        smallest, largest = self.smallest, self.largest
+        for seq, start, end in range_tombstones:
+            if smallest is None or start < smallest:
+                smallest = start
+            if largest is None or end > largest:
+                largest = end
+        return FileMetadata(file_no, size, smallest or b"", largest or b"", self._count)
 
     def abandon(self) -> None:
         self._f.close()
@@ -290,12 +333,15 @@ class Block:
         pos = 0
         if self.restarts:
             # binary search the restart array: find the LAST restart whose
-            # key is <= target; only one key is decoded per probe.
+            # key is strictly BELOW the target; only one key is decoded per
+            # probe. (``<`` not ``<=``: with multi-version duplicate-key
+            # runs a restart can land mid-run, and starting there would
+            # return an older version instead of the newest.)
             restarts = self.restarts
             lo, hi = 0, len(restarts) - 1
             while lo < hi:
                 mid = (lo + hi + 1) // 2
-                if _entry_key(raw, restarts[mid]) <= key:
+                if _entry_key(raw, restarts[mid]) < key:
                     lo = mid
                 else:
                     hi = mid - 1
@@ -322,7 +368,13 @@ class Block:
         # a concurrent reader sees either the lazy path or the fast path,
         # never a half-built one.
         self._keys = [e[0] for e in entries]
-        self._kv = {e[0]: (e[1], e[2], e[3]) for e in entries}
+        # first occurrence wins: with multi-version runs the first entry for
+        # a user key is its NEWEST version (a plain dict comprehension would
+        # keep the last = oldest)
+        kv: dict = {}
+        for e in entries:
+            kv.setdefault(e[0], (e[1], e[2], e[3]))
+        self._kv = kv
         # parsed copies hold the key/value bytes again plus per-entry
         # object overhead (tuple + dict/list slots)
         self._mat_extra = sum(len(e[0]) * 2 + len(e[3]) for e in entries) + 120 * len(entries)
@@ -363,6 +415,22 @@ class Block:
             if k >= start:
                 yield k, seq, type_, value
 
+    def largest_below(self, bound: bytes | None) -> bytes | None:
+        """Largest user key strictly below ``bound`` in this block (reverse
+        cursor step); ``None`` bound means unbounded (the block's last
+        key). Linear within one block — blocks are ~4 KiB."""
+        if self._keys is not None:
+            if bound is None:
+                return self._keys[-1] if self._keys else None
+            i = bisect.bisect_left(self._keys, bound)
+            return self._keys[i - 1] if i else None
+        best = None
+        for k, _seq, _type, _value in self:
+            if bound is not None and k >= bound:
+                break
+            best = k
+        return best
+
 
 class SSTableReader:
     """Random + sequential access to one table.
@@ -383,15 +451,26 @@ class SSTableReader:
         self._f = self._env.open(path, "rb")
         self._f.seek(0, os.SEEK_END)
         file_size = self._f.tell()
-        tail = self._env.pread_f(self._f, min(file_size, _FOOTER_V2.size), max(0, file_size - _FOOTER_V2.size))
+        tail = self._env.pread_f(self._f, min(file_size, _FOOTER_V3.size), max(0, file_size - _FOOTER_V3.size))
         (magic,) = struct.unpack_from("<Q", tail, len(tail) - 8)
+        range_off = range_len = 0
         if magic == _MAGIC_V1:
             filter_off, filter_len, index_off, index_len, _ = _FOOTER_V1.unpack(
                 tail[len(tail) - _FOOTER_V1.size:]
             )
             self.format_version = 1
         elif magic == _MAGIC_V2:
-            filter_off, filter_len, index_off, index_len, version, _ = _FOOTER_V2.unpack(tail)
+            filter_off, filter_len, index_off, index_len, version, _ = _FOOTER_V2.unpack(
+                tail[len(tail) - _FOOTER_V2.size:]
+            )
+            if version > FORMAT_VERSION:
+                raise IOError(
+                    f"{path}: sstable format v{version} is newer than this build (v{FORMAT_VERSION})"
+                )
+            self.format_version = version
+        elif magic == _MAGIC_V3:
+            (filter_off, filter_len, index_off, index_len,
+             range_off, range_len, version, _) = _FOOTER_V3.unpack(tail)
             if version > FORMAT_VERSION:
                 raise IOError(
                     f"{path}: sstable format v{version} is newer than this build (v{FORMAT_VERSION})"
@@ -399,6 +478,14 @@ class SSTableReader:
             self.format_version = version
         else:
             raise IOError(f"bad SSTable magic in {path}")
+        #: (seq, start, end-exclusive) range tombstones, sorted by seq —
+        #: empty for v1/v2 tables
+        self.range_tombstones: list[tuple[int, bytes, bytes]] = []
+        if range_len:
+            self.range_tombstones = [
+                (e[0], bytes(e[1]), bytes(e[2]))
+                for e in msgpack.unpackb(self._env.pread_f(self._f, range_len, range_off))
+            ]
         self.bloom = BloomFilter.decode(self._env.pread_f(self._f, filter_len, filter_off))
         # index entries may be 3-wide (pre-CRC tables) or 4-wide (with a
         # per-block crc32). ``self.index`` stays 3-tuples — downstream code
@@ -480,7 +567,7 @@ class SSTableReader:
         return lo
 
     def get(self, key: bytes):
-        """Returns (found, seq, type, value)."""
+        """Returns (found, seq, type, value) — the newest version of key."""
         if not self.bloom.may_contain(key):
             return False, 0, 0, b""
         lo = self._seek_block(key)
@@ -490,6 +577,44 @@ class SSTableReader:
         if ent is None:
             return False, 0, 0, b""
         return True, ent[1], ent[2], ent[3]
+
+    def get_at(self, key: bytes, read_seq: int):
+        """Snapshot point read: newest version of ``key`` with
+        ``seq <= read_seq`` — walks the key's (possibly block-spanning)
+        multi-version run. Returns (found, seq, type, value)."""
+        if not self.bloom.may_contain(key):
+            return False, 0, 0, b""
+        for k, seq, type_, value in self.iter_from(key):
+            if k != key:
+                break
+            if seq <= read_seq:
+                return True, seq, type_, value
+        return False, 0, 0, b""
+
+    def max_tombstone_seq(self, key: bytes, read_seq: int) -> int:
+        """Max seq of a range tombstone in THIS table covering ``key`` and
+        visible at ``read_seq`` (0 if none)."""
+        best = 0
+        for seq, start, end in self.range_tombstones:
+            if seq <= read_seq and start <= key < end and seq > best:
+                best = seq
+        return best
+
+    def largest_key_below(self, bound: bytes | None) -> bytes | None:
+        """Largest user key strictly below ``bound`` (reverse cursor);
+        ``None`` bound means unbounded (the table's last point key)."""
+        if not self.index:
+            return None
+        if bound is None:
+            idx = len(self.index) - 1
+        else:
+            idx = min(self._seek_block(bound), len(self.index) - 1)
+        while idx >= 0:
+            best = self._read_block(idx).largest_below(bound)
+            if best is not None:
+                return best
+            idx -= 1  # at most one extra hop: block idx-1's last_key < bound
+        return None
 
     def __iter__(self):
         yield from self.iter_all()

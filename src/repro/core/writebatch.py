@@ -11,7 +11,7 @@ write + fsync (see :mod:`.db`).
 """
 from __future__ import annotations
 
-from .record import kTypeDeletion, kTypeValue
+from .record import kTypeDeletion, kTypeRangeDeletion, kTypeValue
 
 
 class WriteBatch:
@@ -38,6 +38,15 @@ class WriteBatch:
         """Queue a tombstone for ``key``."""
         self._ops.append((kTypeDeletion, key, b""))
         self._nbytes += len(key)
+        return self
+
+    def delete_range(self, start: bytes, end: bytes) -> "WriteBatch":
+        """Queue a range tombstone deleting every key in ``[start, end)``.
+        Rides the WAL as a normal entry (key=start, value=end)."""
+        if not start < end:
+            raise ValueError("delete_range needs start < end")
+        self._ops.append((kTypeRangeDeletion, start, end))
+        self._nbytes += len(start) + len(end)
         return self
 
     def clear(self) -> None:

@@ -1,13 +1,13 @@
 """Randomized crash-loop durability harness.
 
 Each iteration builds a small DB on a :class:`FaultInjectionEnv`, runs a
-randomized workload (puts / overwrites / deletes, values straddling the
-separation threshold, occasional flush / GC kicks so every pipeline stage is
-live), and arms a **crash point**: after N env operations — N random, the op
-set and path filter random too, so the kill lands on WAL appends, WAL
-fsyncs, SSTable writes, manifest appends, BValue pwrites, renames and
-unlinks alike — every further mutating filesystem op raises
-``SimulatedCrashError``. The iteration then simulates the machine dying:
+randomized workload (puts / overwrites / deletes / range deletes, values
+straddling the separation threshold, occasional flush / GC / checkpoint
+kicks so every pipeline stage is live), and arms a **crash point**: after N
+env operations — N random, the op set and path filter random too, so the
+kill lands on WAL appends, WAL fsyncs, SSTable writes, manifest appends,
+BValue pwrites, renames, unlinks and checkpoint hard-links alike — every
+further mutating filesystem op raises ``SimulatedCrashError``. The iteration then simulates the machine dying:
 ``drop_unsynced()`` rewinds every file to its last-fsynced prefix (undoing
 overwrites of previously-synced bytes, RocksDB FaultInjectionTestFS style),
 and the DB is reopened on the survivor state.
@@ -20,7 +20,12 @@ Checked invariants, every iteration:
 * **no resurrected stale values** (async WAL): a recovered value must be
   *some* prefix state of that key's history — never a value that was
   superseded before an acked later write, and never garbage;
-* **the reopened DB is writable** and a full scan completes.
+* **the reopened DB is writable** and a full scan completes;
+* **acked checkpoints commit atomically**: every ``checkpoint(dir)`` call
+  that returned keeps its MANIFEST (the rename is the commit marker), and
+  any checkpoint dir holding a MANIFEST — acked or not — opens as a valid
+  DB whose full scan completes; a crash between the hard-links and the
+  rename leaves a manifest-less dir that is simply not a DB.
 
 Run standalone::
 
@@ -56,6 +61,9 @@ CRASH_TARGETS = [
     (("sync",), "bvalue"),       # value-log fsync
     (("unlink",), None),         # log/file deletion edges
     (("rename",), None),         # atomic-replace edges
+    (("link",), None),           # checkpoint hard-link fan-out
+    (("rename",), "MANIFEST"),   # checkpoint commit: MANIFEST.tmp → MANIFEST
+    (("write", "sync"), "_ck"),  # anything inside a checkpoint target dir
 ]
 
 
@@ -85,13 +93,17 @@ def run_iteration(seed: int, wal_mode: str, base_dir: str) -> dict:
     # history[k]: every state k ever held (for the async-WAL prefix check)
     acked: dict[bytes, bytes | None] = {}
     history: dict[bytes, set] = {k: {None} for k in keys}
+    # checkpoint dirs whose checkpoint() call RETURNED before the crash —
+    # each must reopen as a valid read-only DB after the crash
+    acked_ckpts: list[str] = []
+    attempted_ckpts: list[str] = []
 
     ops, substr = CRASH_TARGETS[rng.randrange(len(CRASH_TARGETS))]
     env.set_crash_after(rng.randrange(5, 400), ops=ops, path_substr=substr)
 
     crashed = False
     n_ops = rng.randrange(50, 500)
-    for _ in range(n_ops):
+    for _i in range(n_ops):
         k = keys[rng.randrange(len(keys))]
         try:
             r = rng.random()
@@ -100,10 +112,24 @@ def run_iteration(seed: int, wal_mode: str, base_dir: str) -> dict:
                 acked[k] = None
                 history[k].add(None)
             elif r < 0.12:
+                a, b = sorted(rng.sample(keys, 2))
+                b = b + b"\x00" if rng.random() < 0.5 else b
+                db.delete_range(a, b)
+                for kk in keys:
+                    if a <= kk < b:
+                        acked[kk] = None
+                        history[kk].add(None)
+            elif r < 0.16:
                 db.flush()
                 continue
-            elif r < 0.13:
+            elif r < 0.17:
                 db.gc_collect(threshold=0.2)
+                continue
+            elif r < 0.19:
+                ck = os.path.join(base_dir, f"it{seed}_ck{_i}")
+                attempted_ckpts.append(ck)
+                db.checkpoint(ck)
+                acked_ckpts.append(ck)
                 continue
             else:
                 # mix of inline and separated (>= threshold) values
@@ -159,12 +185,31 @@ def run_iteration(seed: int, wal_mode: str, base_dir: str) -> dict:
             db2.close()
         except Exception as e:
             violations.append(f"post-recovery use failed: {type(e).__name__}: {e}")
+    # every checkpoint whose call RETURNED must open as a valid DB: the
+    # MANIFEST rename is the commit marker, and everything it references
+    # was hard-linked from fsynced files before the rename
+    for ck in attempted_ckpts:
+        committed = os.path.exists(os.path.join(ck, "MANIFEST"))
+        if ck in acked_ckpts and not committed:
+            violations.append(f"acked checkpoint lost its MANIFEST: {ck}")
+        if committed:
+            try:
+                cdb = DB(ck, _mkcfg(wal_mode, env))
+                cdb.scan(b"", 1 << 20)
+                cdb.close()
+            except Exception as e:
+                violations.append(
+                    f"checkpoint {os.path.basename(ck)} does not open clean: "
+                    f"{type(e).__name__}: {e}"
+                )
+        shutil.rmtree(ck, ignore_errors=True)
     shutil.rmtree(path, ignore_errors=True)
     return {
         "seed": seed,
         "wal_mode": wal_mode,
         "crashed_mid_workload": crashed,
         "acked": len(acked),
+        "checkpoints": len(acked_ckpts),
         "violations": violations,
     }
 

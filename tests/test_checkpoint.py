@@ -167,3 +167,51 @@ def test_async_manager_overlap(tmp_path):
     finally:
         mgr.close()
         store.close()
+
+
+def test_retention_uses_range_tombstones(tmp_path):
+    store = BVCheckpointStore(str(tmp_path / "store"), num_queues=2)
+    state = {"w": np.arange(4096, dtype=np.float32)}
+    for step in (1, 2, 3):
+        store.save(step, state)
+    assert store.steps() == [1, 2, 3]
+    store.delete_step(1)
+    assert store.steps() == [2, 3]
+    # chunks of the deleted step are unreadable, survivors untouched
+    assert store.db.get(store._chunk_key(1, "['w']", 0)) is None
+    loaded, _ = store.load(3)
+    np.testing.assert_array_equal(loaded["['w']"], state["w"])
+    with pytest.raises(KeyError):
+        store.delete_step(99)
+    store.close()
+
+
+def test_online_backup_opens_as_store(tmp_path):
+    store = BVCheckpointStore(str(tmp_path / "store"), num_queues=2)
+    state = {"w": np.arange(8192, dtype=np.float32),
+             "b": np.ones(16, dtype=np.float32)}
+    store.save(10, state)
+    bdir = store.backup(str(tmp_path / "bak"))
+    # mutate the source AFTER the backup: the image must not move
+    store.save(20, {"w": state["w"] * 2, "b": state["b"]})
+    store.delete_step(10)
+    bak = BVCheckpointStore(bdir, num_queues=2)
+    assert bak.latest_step() == 10
+    loaded, meta = bak.load(10)
+    np.testing.assert_array_equal(loaded["['w']"], state["w"])
+    bak.close()
+    assert store.steps() == [20]
+    store.close()
+
+
+def test_manager_backup_waits_for_inflight_save(tmp_path):
+    store = BVCheckpointStore(str(tmp_path / "store"), num_queues=2)
+    mgr = CheckpointManager(store, interval_steps=1, async_save=True)
+    state = {"w": np.arange(4096, dtype=np.float32)}
+    mgr.maybe_save(1, state)  # async: may still be in flight
+    bdir = mgr.backup(str(tmp_path / "bak"))
+    bak = BVCheckpointStore(bdir, num_queues=2)
+    assert bak.latest_step() == 1  # the in-flight save is IN the image
+    bak.close()
+    mgr.close()
+    store.close()

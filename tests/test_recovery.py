@@ -459,3 +459,135 @@ def test_crash_iteration_is_deterministic(tmp_path):
     a = run_iteration(123, "sync", str(tmp_path / "a"))
     b = run_iteration(123, "sync", str(tmp_path / "b"))
     assert (a["acked"], a["violations"]) == (b["acked"], b["violations"])
+
+
+# ---------------------------------------------------------------------------
+# PR 7 edges: range-tombstone WAL replay and checkpoint commit ordering
+# ---------------------------------------------------------------------------
+
+def _kill_and_reopen(db, env, tmp, **cfg_kw):
+    try:
+        db.close(crash=True)
+    except Exception:
+        pass
+    env.drop_unsynced()
+    env.disarm_crash()
+    env.clear_faults()
+    env.reset_tracking()
+    return DB(tmp, _cfg(env, **cfg_kw))
+
+
+def test_acked_range_delete_survives_crash(tmp_db_dir):
+    """Sync WAL: a delete_range that returned must replay from the WAL —
+    covered keys stay deleted after the crash, the boundary key survives."""
+    env = FaultInjectionEnv(seed=5)
+    db = DB(tmp_db_dir, _cfg(env))
+    for k in (b"a", b"b", b"c", b"d"):
+        db.put(k, b"v_" + k)
+    db.delete_range(b"a", b"c")  # acked; never flushed
+    db = _kill_and_reopen(db, env, tmp_db_dir)
+    try:
+        assert db.get(b"a") is None
+        assert db.get(b"b") is None
+        assert db.get(b"c") == b"v_c"
+        assert db.get(b"d") == b"v_d"
+    finally:
+        db.close()
+
+
+def test_crash_during_range_delete_wal_append_loses_only_that_op(tmp_db_dir):
+    """Kill exactly at the range tombstone's WAL append: the op never acked,
+    so after recovery the covered keys are still present and intact."""
+    env = FaultInjectionEnv(seed=5)
+    db = DB(tmp_db_dir, _cfg(env))
+    for k in (b"a", b"b", b"c"):
+        db.put(k, b"v_" + k)
+    db.flush()
+    env.set_crash_after(0, ops=("write",), path_substr="wal_")
+    with pytest.raises(Exception):
+        db.delete_range(b"a", b"c")
+    db = _kill_and_reopen(db, env, tmp_db_dir)
+    try:
+        for k in (b"a", b"b", b"c"):
+            assert db.get(k) == b"v_" + k, k
+    finally:
+        db.close()
+
+
+def test_checkpoint_crash_before_manifest_rename_leaves_non_db(tmp_path):
+    """The MANIFEST rename is the checkpoint's commit marker. A crash after
+    the hard-links but before the rename must leave a directory that is
+    simply not a DB — and the source DB fully intact."""
+    main = str(tmp_path / "db")
+    ck = str(tmp_path / "ckdir")
+    env = FaultInjectionEnv(seed=5)
+    db = DB(main, _cfg(env))
+    data = _fill(db, 30, size=120)
+    env.set_crash_after(0, ops=("rename",), path_substr="ckdir")
+    with pytest.raises(Exception):
+        db.checkpoint(ck)
+    assert not os.path.exists(os.path.join(ck, "MANIFEST"))
+    db = _kill_and_reopen(db, env, main)
+    try:
+        for k, v in data.items():
+            assert db.get(k) == v, k
+        # a retried checkpoint to a fresh dir commits cleanly
+        ck2 = str(tmp_path / "ck2")
+        db.checkpoint(ck2)
+        cdb = DB(ck2, _cfg(None))
+        assert len(cdb.scan(b"", 1 << 20)) == len(data)
+        cdb.close()
+    finally:
+        db.close()
+
+
+def test_checkpoint_opens_clean_after_source_crash(tmp_path):
+    """A committed checkpoint is an independent durable image: crashing the
+    source DB afterwards (dropping all its unsynced state) must not corrupt
+    the checkpoint — the hard-linked files share inodes, so the fault model
+    has to keep one consistent durable state per inode."""
+    main = str(tmp_path / "db")
+    ck = str(tmp_path / "ckdir")
+    env = FaultInjectionEnv(seed=5)
+    db = DB(main, _cfg(env, memtable_size=4096))
+    data = _fill(db, 40, size=120)  # separated values: .val files get linked
+    db.checkpoint(ck)
+    # keep writing so the shared value files' sync state moves on
+    for i in range(40):
+        db.put(f"post{i:03d}".encode(), b"P" * 120)
+    db = _kill_and_reopen(db, env, main, memtable_size=4096)
+    db.close()
+    cdb = DB(ck, _cfg(None))
+    try:
+        for k, v in data.items():
+            assert cdb.get(k) == v, k
+        rep = cdb.verify_integrity()
+        assert rep["corruptions"] == [], rep["corruptions"]
+    finally:
+        cdb.close()
+
+
+def test_crash_matrix_checkpoint_link_edge(tmp_path):
+    """Matrix-style kill at the hard-link fan-out: whatever state the crash
+    leaves, the source DB reopens and every committed checkpoint opens."""
+    main = str(tmp_path / "db")
+    env = FaultInjectionEnv(seed=9)
+    db = DB(main, _cfg(env, memtable_size=4096))
+    committed = []
+    env.set_crash_after(25, ops=("link",))
+    for i in range(200):
+        try:
+            db.put(f"k{i % 20:03d}".encode(), (f"v{i}_".encode() * 20)[:150])
+            if i % 30 == 29:
+                ck = str(tmp_path / f"ck{i}")
+                db.checkpoint(ck)
+                committed.append(ck)
+        except Exception:
+            break
+    db = _kill_and_reopen(db, env, main, memtable_size=4096)
+    db.scan(b"", 1 << 20)
+    db.close()
+    for ck in committed:
+        cdb = DB(ck, _cfg(None))
+        cdb.scan(b"", 1 << 20)
+        cdb.close()
