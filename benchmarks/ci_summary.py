@@ -39,10 +39,16 @@ def _rows_for(name: str, res: dict) -> list[tuple]:
         elif "threads" in c:  # writepath
             label = f"{c.get('wal', '?')}/t{c['threads']}/{c.get('mode', '?')}"
             rows.append((name, label, c.get("ops_per_s"), None, c.get("write_amp")))
-        elif "experiment" in c:  # recovery
+        elif "experiment" in c:  # recovery / replication
             label = c["experiment"]
             if "wal_mb" in c:
                 label += f"/{c['wal_mb']}MB"
+            elif "backlog_mb" in c:
+                label += f"/{c['backlog_mb']}MB@{c.get('catch_up_mb_per_s', '?')}MB/s"
+            elif "lag_p99_seqs" in c:
+                label += f"/p99={c['lag_p99_seqs']}seqs"
+            elif "failover_to_first_write_ms" in c:
+                label += f"/{c['failover_to_first_write_ms']}ms"
             rows.append((name, label, c.get("ops_per_s"), None, None))
         else:
             rows.append((name, "cell", c.get("ops_per_s"), c.get("cv"), c.get("write_amp")))

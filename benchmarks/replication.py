@@ -1,0 +1,212 @@
+"""Replication benchmark (PR 8).
+
+Three experiments, one artifact (``BENCH_replication.json``):
+
+* **catch-up**: bootstrap a replica from a checkpoint, then accumulate a
+  WAL backlog on the primary *before* attaching — attach and measure how
+  fast the follower's catch-up reader drains it (``catch_up_mb_per_s``).
+* **steady-lag**: a live stream under a steady write load; the replica's
+  sequence lag is sampled after every put and reported as p50/p99
+  (``lag_p99_seqs``), plus accepted primary write throughput with the
+  ship hook on the commit path.
+* **failover**: converge a pair, crash the primary, promote the replica
+  and measure promote-to-first-accepted-write latency
+  (``failover_to_first_write_ms``) — the window where neither side takes
+  writes.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.replication [--quick] [--out F]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+from repro.core import DB, DBConfig
+from repro.core.replication import attach, bootstrap_replica
+
+KEY_SIZE = 16
+VALUE_SIZE = 1024
+
+
+def _cfg(memtable_size=256 << 20) -> DBConfig:
+    # huge memtable: nothing flushes, so the whole workload lives in the
+    # WAL — exactly the bytes replication has to move
+    return DBConfig.bvlsm(
+        wal_mode="async",
+        value_threshold=256,
+        memtable_size=memtable_size,
+        num_bvalue_queues=2,
+    )
+
+
+def _repl_bytes(db) -> int:
+    """Bytes replication has to move: WAL records (pointers + inline
+    values) plus the separated value files the follower mirrors."""
+    import os
+
+    total = sum(
+        os.path.getsize(os.path.join(db.path, f))
+        for f in os.listdir(db.path)
+        if f.startswith("wal_")
+    )
+    bvdir = os.path.join(db.path, "bvalue")
+    if os.path.isdir(bvdir):
+        total += sum(
+            os.path.getsize(os.path.join(bvdir, f)) for f in os.listdir(bvdir)
+        )
+    return total
+
+
+def _fill(db, base: int, n: int, val: bytes) -> None:
+    for i in range(base, base + n):
+        db.put(f"{i:016d}".encode(), val)
+
+
+def _converge(link, timeout: float) -> bool:
+    """Nudge-and-wait loop: the stream goes quiet once writes stop, so
+    convergence needs periodic re-nudges (same idiom as the test suite)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        link.nudge()
+        if link.wait_caught_up(timeout=1.0):
+            return True
+    return False
+
+
+def _percentile(samples: list[int], q: float) -> int:
+    if not samples:
+        return 0
+    s = sorted(samples)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+def bench_catch_up(backlog_mb: float) -> dict:
+    """Backlog accumulated while detached; attach and time the drain."""
+    proot = tempfile.mkdtemp(prefix="bench_repl_p_")
+    rroot = proot + "_r"
+    try:
+        primary = DB(proot, _cfg())
+        val = b"c" * VALUE_SIZE
+        _fill(primary, 0, 500, val)  # seed lands in the checkpoint
+        replica = bootstrap_replica(primary, rroot, cfg=_cfg())
+        n = int(backlog_mb * 1e6 / (KEY_SIZE + VALUE_SIZE))
+        base_bytes = _repl_bytes(primary)
+        _fill(primary, 500, n, val)
+        # the backlog must be durable before we time the read: flush the
+        # async WAL buffer and the async BValue writer batches
+        primary.wal.flush()
+        primary.bvalue.flush()
+        backlog = _repl_bytes(primary) - base_bytes
+        t0 = time.monotonic()
+        link = attach(primary, replica)
+        ok = _converge(link, timeout=300.0)
+        dt = time.monotonic() - t0
+        assert ok, "catch-up did not converge"
+        assert replica.get(f"{500 + n - 1:016d}".encode()) == val
+        link.detach()
+        primary.close()
+        replica.close()
+        return {
+            "experiment": "catch_up",
+            "backlog_mb": round(backlog / 1e6, 2),
+            "keys": n,
+            "catch_up_s": round(dt, 4),
+            "ops_per_s": round(n / dt, 1) if dt else None,
+            "catch_up_mb_per_s": round(backlog / 1e6 / dt, 2) if dt else None,
+        }
+    finally:
+        shutil.rmtree(proot, ignore_errors=True)
+        shutil.rmtree(rroot, ignore_errors=True)
+
+
+def bench_steady_lag(n_writes: int) -> dict:
+    """Sequence lag distribution under a live stream at write speed."""
+    proot = tempfile.mkdtemp(prefix="bench_repl_p_")
+    rroot = proot + "_r"
+    try:
+        primary = DB(proot, _cfg())
+        val = b"s" * VALUE_SIZE
+        _fill(primary, 0, 200, val)
+        replica = bootstrap_replica(primary, rroot, cfg=_cfg())
+        link = attach(primary, replica)
+        _converge(link, timeout=60.0)
+        warmup = n_writes // 10
+        samples: list[int] = []
+        t0 = time.monotonic()
+        for i in range(n_writes):
+            primary.put(f"{200 + i:016d}".encode(), val)
+            if i >= warmup:
+                samples.append(link.lag)
+        write_dt = time.monotonic() - t0
+        t1 = time.monotonic()
+        assert _converge(link, timeout=120.0)
+        settle = time.monotonic() - t1
+        link.detach()
+        primary.close()
+        replica.close()
+        return {
+            "experiment": "steady_lag",
+            "writes": n_writes,
+            "ops_per_s": round(n_writes / write_dt, 1) if write_dt else None,
+            "lag_p50_seqs": _percentile(samples, 0.50),
+            "lag_p99_seqs": _percentile(samples, 0.99),
+            "lag_max_seqs": max(samples) if samples else 0,
+            "settle_s": round(settle, 4),  # drain time after load stops
+        }
+    finally:
+        shutil.rmtree(proot, ignore_errors=True)
+        shutil.rmtree(rroot, ignore_errors=True)
+
+
+def bench_failover(n_writes: int) -> dict:
+    """Crash the primary; promote() until the first accepted write."""
+    proot = tempfile.mkdtemp(prefix="bench_repl_p_")
+    rroot = proot + "_r"
+    try:
+        primary = DB(proot, _cfg())
+        val = b"f" * VALUE_SIZE
+        _fill(primary, 0, 200, val)
+        replica = bootstrap_replica(primary, rroot, cfg=_cfg())
+        link = attach(primary, replica)
+        _fill(primary, 200, n_writes, val)
+        assert _converge(link, timeout=120.0)
+        primary.close(crash=True)
+        t0 = time.monotonic()
+        replica.promote()
+        replica.put(b"post-failover", b"first-write")
+        failover_ms = (time.monotonic() - t0) * 1e3
+        assert replica.get(f"{200 + n_writes - 1:016d}".encode()) == val
+        assert replica.get(b"post-failover") == b"first-write"
+        replica.close()
+        return {
+            "experiment": "failover",
+            "writes_replicated": n_writes,
+            "failover_to_first_write_ms": round(failover_ms, 3),
+        }
+    finally:
+        shutil.rmtree(proot, ignore_errors=True)
+        shutil.rmtree(rroot, ignore_errors=True)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--out", default="BENCH_replication.json")
+    args = ap.parse_args(argv)
+    sizes = [1] if args.quick else [1, 4, 16]
+    n_steady = 1_000 if args.quick else 5_000
+    cells = [bench_catch_up(mb) for mb in sizes]
+    cells.append(bench_steady_lag(n_steady))
+    cells.append(bench_failover(n_steady // 2))
+    res = {"bench": "replication", "quick": args.quick, "cells": cells}
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(json.dumps(res, indent=2))
+    return res
+
+
+if __name__ == "__main__":
+    main()

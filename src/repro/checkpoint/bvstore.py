@@ -184,12 +184,15 @@ class BVCheckpointStore:
     # ------------------------------------------------------------------
     # online backup
     # ------------------------------------------------------------------
-    def backup(self, directory: str) -> str:
+    def backup(self, directory: str, base: str | None = None) -> str:
         """Hard-link an online, crash-consistent image of the whole store
         into ``directory`` (``DB.checkpoint``): every committed training
         checkpoint in it, openable as a ``BVCheckpointStore`` — without
-        pausing in-flight saves. Returns ``directory``."""
-        self.db.checkpoint(directory)
+        pausing in-flight saves. ``base`` (a previous backup directory)
+        makes the image incremental: files already present in the base are
+        hard-linked from it instead of from the live store. Returns
+        ``directory``."""
+        self.db.checkpoint(directory, base=base)
         return directory
 
     def stats(self) -> dict:

@@ -83,12 +83,13 @@ class CheckpointManager:
                 except KeyError:
                     pass
 
-    def backup(self, directory: str) -> str:
+    def backup(self, directory: str, base: str | None = None) -> str:
         """Durable offline copy of the store (e.g. before a risky restart):
         waits for the in-flight save so the image contains it, then
-        hard-links the store into ``directory`` via ``DB.checkpoint``."""
+        hard-links the store into ``directory`` via ``DB.checkpoint``.
+        ``base`` points at a previous backup to make this one incremental."""
         self.wait()
-        return self.store.backup(directory)
+        return self.store.backup(directory, base=base)
 
     def wait(self) -> None:
         if self._pending is not None and self._pending.is_alive():

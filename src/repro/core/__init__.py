@@ -19,10 +19,17 @@ from .errors import (
     CorruptionError,
     DBError,
     DBReadOnlyError,
+    ReplicaDivergedError,
     SimulatedCrashError,
     SnapshotUnstableError,
 )
 from .record import ValueOffset
+from .replication import (
+    InProcessTransport,
+    ReplicationLink,
+    attach,
+    bootstrap_replica,
+)
 from .writebatch import WriteBatch
 
 __all__ = [
@@ -42,4 +49,9 @@ __all__ = [
     "SnapshotUnstableError",
     "CorruptionError",
     "SimulatedCrashError",
+    "ReplicaDivergedError",
+    "ReplicationLink",
+    "InProcessTransport",
+    "attach",
+    "bootstrap_replica",
 ]

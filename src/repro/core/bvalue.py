@@ -419,7 +419,7 @@ class BValueManager:
             if not q.wait_drained(timeout=timeout):
                 raise TimeoutError(f"BValue queue {q.qid} did not drain in {timeout}s")
 
-    def seal_active(self) -> None:
+    def seal_active(self, force: bool = False) -> None:
         """Roll every queue with a non-empty active file to a fresh one.
 
         Checkpoints hard-link BValue files, and a link shares the inode —
@@ -427,12 +427,20 @@ class BValueManager:
         copy would keep growing underneath it. Sealing first makes every
         existing file immutable from this point on (the same roll
         ``reserve`` performs at the size cap; in-flight reservations keep
-        the old fd open until they drain)."""
+        the old fd open until they drain).
+
+        ``force=True`` also rolls queues whose active file is still empty.
+        Replica promotion needs this: a replica's idle queue files can
+        share ids with value files mirrored from the old primary, and an
+        append at the queue's (zero) tail would overwrite mirrored bytes —
+        after bumping the allocator past the mirrored id space, a forced
+        roll moves every queue onto a guaranteed-fresh file."""
         for q in self.queues:
             close_fd = None
             with q._lock:
-                if q.tail == 0:
+                if q.tail == 0 and not force:
                     continue  # empty active file: nothing to seal
+                sealed_nonempty = q.tail > 0
                 old = q.file_id
                 if q._refs.get(old, 0) == 0:
                     close_fd = q._fds.pop(old)
@@ -442,8 +450,16 @@ class BValueManager:
                 q._refs[q.file_id] = 0
                 q.tail = 0
             if close_fd is not None:
-                self.env.fsync(close_fd)
+                if sealed_nonempty:
+                    self.env.fsync(close_fd)
                 self.env.close_fd(close_fd)
+
+    def ensure_next_file_id(self, n: int) -> None:
+        """Raise the id allocator floor to at least ``n`` (promotion: never
+        allocate an id the old primary already used for a mirrored file)."""
+        with self._file_lock:
+            if n > self._next_file_id:
+                self._next_file_id = n
 
     @property
     def next_file_id(self) -> int:

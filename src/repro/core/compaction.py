@@ -179,15 +179,14 @@ class Compactor:
         # this memtable's WAL — and, for a memtable rebuilt by recovery, the
         # replayed logs it carried — are now redundant: the data is durable
         # in the L0 table the manifest just committed. Delete them only now;
-        # deleting earlier would widen the crash window.
+        # deleting earlier would widen the crash window. (With followers
+        # attached, _release_wal retains segments a lagging replica still
+        # needs for catch-up instead of unlinking.)
         logs = list(getattr(mem, "recovery_logs", None) or ())
         if getattr(mem, "wal_no", None) is not None:
             logs.append(db._wal_path(mem.wal_no))
         for log_path in logs:
-            try:
-                db.env.unlink(log_path)
-            except OSError:
-                pass
+            db._release_wal(log_path, mem.last_seq)
 
     # ------------------------------------------------------------------
     # compaction picking

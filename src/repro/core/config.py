@@ -225,6 +225,25 @@ class DBConfig:
     bg_error_max_retries: int = 3
     bg_error_backoff_ms: float = 20.0
     bg_error_backoff_max_ms: float = 2000.0
+    # --- replication (docs/ARCHITECTURE.md §Replication & failover) ---
+    # path of the primary this instance follows. Setting it opens the DB as
+    # a replica (equivalent to DB(path, cfg, role="replica")): user writes
+    # are rejected until promote(), and replication.attach() uses it as the
+    # default source for WAL catch-up reads.
+    replica_of: str | None = None
+    # target size of one shipped frame: a commit group larger than this is
+    # split into multiple frames so a single fault (drop/corrupt) costs at
+    # most this many bytes of retransmission via catch-up.
+    repl_batch_bytes: int = 256 << 10
+    # follower lag (in sequence numbers) above which each apply round bumps
+    # the repl_lag_warnings counter — the observability hook a deployment
+    # would alarm on.
+    repl_lag_warn_seqs: int = 10_000
+    # divergence detection: the stream carries a rolling CRC over each run
+    # of this many consecutive sequence numbers; the follower folds the
+    # same CRC over what it applied and re-bootstraps on mismatch instead
+    # of silently forking.
+    repl_crc_interval: int = 128
     # --- misc ---
     paranoid_checks: bool = False  # CRC-verify SSTable block + BValue reads
     sync_flush_io: bool = True

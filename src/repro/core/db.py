@@ -433,9 +433,18 @@ class Cursor:
 
 
 class DB:
-    def __init__(self, path: str, cfg: DBConfig | None = None):
+    def __init__(self, path: str, cfg: DBConfig | None = None, role: str = "primary"):
         self.path = path
         self.cfg = cfg or DBConfig()
+        if self.cfg.replica_of is not None:
+            role = "replica"
+        if role not in ("primary", "replica"):
+            raise ValueError(f"DB role must be 'primary' or 'replica', got {role!r}")
+        # replicas reject user writes (check_writable) and disable GC; the
+        # replication stream applies through _follower until promote()
+        self._role = role
+        self._repl = None  # primary-side Replicator once a follower attaches
+        self._follower = None  # replica-side Follower once attached
         # pluggable filesystem: every open/read/write/fsync/rename/unlink in
         # the engine routes through this (tests inject FaultInjectionEnv)
         self.env = self.cfg.env or DEFAULT_ENV
@@ -549,6 +558,20 @@ class DB:
     # ------------------------------------------------------------------
     def _wal_path(self, no: int) -> str:
         return os.path.join(self.path, f"wal_{no:06d}.log")
+
+    def _release_wal(self, path: str, last_seq: int) -> None:
+        """A flushed memtable's log is redundant for recovery — but a
+        lagging follower may still need it for catch-up, so with followers
+        attached the segment is retained until every ack passes its last
+        sequence (the Replicator unlinks it then)."""
+        repl = self._repl
+        if repl is not None and repl.active and repl.should_retain(last_seq):
+            repl.retain_wal(path, last_seq)
+            return
+        try:
+            self.env.unlink(path)
+        except OSError:
+            pass
 
     def _recover(self) -> None:
         logs = sorted(
@@ -835,6 +858,7 @@ class DB:
         # streaming).
         err: BaseException | None = None
         persist_s = 0.0
+        payloads: list | None = None  # kept for the replication ship below
         t0 = time.monotonic()
         if wal is not None:
             self.mutex.release()
@@ -896,6 +920,27 @@ class DB:
                 self.stats.record_group(len(group), total_entries)
             except BaseException as e:  # must still ack the group below, or
                 err = e  # every current and future writer deadlocks
+        if err is None and self._repl is not None:
+            # ship the committed group, publish-ordered (we hold the mutex;
+            # earlier groups shipped before us). Durable-first in sync mode
+            # (sync_ticket completed above), post-ack in async. Skipped
+            # writers ship as empty payloads so follower seqs stay
+            # contiguous. Never fails the client write: a dead transport
+            # just leaves the follower to catch up from the WAL.
+            try:
+                self._repl.on_group(
+                    [
+                        (
+                            w.seq,
+                            payloads[i]
+                            if payloads is not None
+                            else encode_entries(w.seq, w.entries),
+                        )
+                        for i, w in enumerate(group)
+                    ]
+                )
+            except Exception:
+                self.stats.add("repl_ship_errors")
         popped_grp = self._pending.popleft()
         assert popped_grp is grp, "pipeline out of order"
         for w in group:
@@ -1359,9 +1404,25 @@ class DB:
         """Drive compaction to quiescence (test/benchmark helper)."""
         self.wait_idle(compactions=True)
 
-    def checkpoint(self, directory: str) -> None:
+    def checkpoint(
+        self, directory: str, base: str | None = None, hardlink: bool = True
+    ) -> None:
         """Online checkpoint: materialize a consistent, openable copy of
         the DB in ``directory`` without stopping writes.
+
+        ``base`` names a previous checkpoint image: any file already
+        present there is hard-linked from the base instead of from the
+        live DB (incremental checkpoint — repeated replica re-bootstraps
+        only materialize what changed). SSTables and sealed BValue files
+        are immutable, so same-name ⇒ same-content; the MANIFEST is always
+        written fresh.
+
+        ``hardlink=False`` forces byte copies from the *live* DB (links
+        from ``base`` still happen — the base belongs to the image's own
+        machine). A replica bootstrap needs this: the image will be
+        written to (value mirroring) by a different failure domain, and a
+        shared inode would let the replica's faults reach the primary's
+        files.
 
         Sequence: flush (so everything acked is in SSTables — a checkpoint
         carries no WAL), seal the active BValue files (an append tail must
@@ -1397,20 +1458,31 @@ class DB:
             self.env.makedirs(bv_dir)
             add = []
             for level, lv in enumerate(version.levels):
-                for f in lv:
+                # L0 is ordered newest-first in memory, but manifest replay
+                # INSERTS each L0 add at the front — a single batched edit
+                # must list L0 oldest-first or the opened image reads L0 in
+                # reversed (oldest-wins) order.
+                files = list(reversed(lv)) if level == 0 else lv
+                for f in files:
                     self._checkpoint_file(
                         table_path(self.path, f.file_no),
                         table_path(directory, f.file_no),
+                        base_src=table_path(base, f.file_no) if base else None,
+                        hardlink=hardlink,
                     )
                     add.append((level, f.to_wire()))
             src_bv = os.path.join(self.path, "bvalue")
+            base_bv = os.path.join(base, "bvalue") if base else None
             for name in sorted(self.env.listdir(src_bv)):
                 if not name.endswith(".val"):
                     continue
                 for _ in range(3):
                     try:
                         self._checkpoint_file(
-                            os.path.join(src_bv, name), os.path.join(bv_dir, name)
+                            os.path.join(src_bv, name),
+                            os.path.join(bv_dir, name),
+                            base_src=os.path.join(base_bv, name) if base_bv else None,
+                            hardlink=hardlink,
                         )
                         break
                     except OSError:
@@ -1432,12 +1504,38 @@ class DB:
                 f.close()
             self.env.rename(tmp, os.path.join(directory, MANIFEST_NAME))
             self.stats.add("checkpoints")
+            # the committed image now belongs to its consumer (a replica, a
+            # backup target): this env's crash simulation must no longer
+            # rewind files another failure domain may start writing. An
+            # uncommitted image (crash before the rename) stays tracked —
+            # its unsynced files SHOULD vanish with this machine.
+            self.env.release_tracking(directory)
         finally:
             self.versions.unpin()
             snap.release()
 
-    def _checkpoint_file(self, src: str, dst: str) -> None:
-        if self.cfg.checkpoint_hardlink:
+    def _checkpoint_file(
+        self,
+        src: str,
+        dst: str,
+        base_src: str | None = None,
+        hardlink: bool = True,
+    ) -> None:
+        if base_src is not None and self.env.exists(base_src):
+            # incremental: the previous image already holds this (immutable)
+            # file — link from there, never touching the live copy. The
+            # size check guards bases that are NOT pristine images (a
+            # re-bootstrap reuses the old replica store, where a mirrored
+            # value file can be a short prefix of the primary's): same
+            # name + same size is required before trusting same content.
+            try:
+                if self.env.getsize(base_src) == self.env.getsize(src):
+                    self.env.link(base_src, dst)
+                    self.stats.add("checkpoint_base_links")
+                    return
+            except OSError:
+                pass  # base unusable for this file: fall through to live
+        if hardlink and self.cfg.checkpoint_hardlink:
             try:
                 self.env.link(src, dst)
                 return
@@ -1498,29 +1596,112 @@ class DB:
         self.stats.add("resumes")
         self.bg.maybe_schedule()
 
-    def verify_integrity(self, background: bool = False) -> dict | None:
+    # ------------------------------------------------------------------
+    # replication
+    # ------------------------------------------------------------------
+    def promote(self) -> None:
+        """Failover: turn this replica into a primary.
+
+        The PR 6 resume machinery in reverse — instead of clearing a latch
+        on the same instance, the write latch moves here: seal the stream
+        (no further frames apply), replay whatever suffix survives in the
+        old primary's durable WAL (final catch-up — in sync mode that is
+        every acknowledged write, because values fsync before their pointer
+        record and retention kept the segments), discard buffered
+        non-contiguous frames (the unacked suffix), move the BValue id
+        allocator past the mirrored id space and force-roll every queue so
+        new writes can never append into a mirrored file, then flip the
+        role. Idempotent: promoting a primary — or promoting twice, or
+        during an in-flight apply — is a no-op beyond the first call."""
+        with self.mutex:
+            if self._role != "replica":
+                return
+        follower = self._follower
+        if follower is not None:
+            follower.seal(final_catch_up=True)
+            # async primaries can die with durable pointers to value bytes
+            # that never hit their disk; the final catch-up then mirrors
+            # nothing for them. Same hole async recovery has, same cure:
+            # probe and drop, each key falls back to its previous version.
+            self._drop_dangling_pointers()
+        with self.mutex:
+            if self._role != "replica":  # lost a promote race
+                return
+            if follower is not None:
+                self.bvalue.ensure_next_file_id(follower.max_mirrored_file + 1)
+            self.bvalue.seal_active(force=True)
+            self._role = "primary"
+            self._follower = None
+            # start the new reign on a fresh WAL segment if the memtable
+            # holds applied-but-unflushed state (mirrors resume())
+            if len(self.mem) or self.mem.range_tombstones:
+                self._rotate_memtable_locked()
+        self.stats.add("promotions")
+        self.bg.maybe_schedule()
+
+    def replication_status(self) -> dict:
+        """Role + stream position for observability and the benchmark."""
+        out: dict = {"role": self._role}
+        repl = self._repl
+        if repl is not None and repl.active:
+            out["shipped_seq"] = repl.shipped_seq
+            out["min_acked_seq"] = repl.min_acked()
+            out["retained_wals"] = len(repl._retained)
+        follower = self._follower
+        if follower is not None:
+            out["applied_seq"] = follower.applied_seq
+            out["last_shipped_seen"] = follower.last_shipped_seen
+            out["lag"] = follower.lag
+            out["diverged"] = follower.diverged
+            out["needs_rebootstrap"] = follower.needs_rebootstrap
+        return out
+
+    def verify_integrity(
+        self, background: bool = False, fail_fast: bool = False
+    ) -> dict | None:
         """Scrub the DB: CRC-verify every live SSTable block and every
         separated value reachable from a live table entry. Corrupt files
         are quarantined (manifest-marked, skipped by compaction and GC)
-        via the normal :class:`CorruptionError` path. Reads are paced at
-        low priority through the shared I/O token bucket, so a scrub
-        cannot starve foreground traffic.
+        via the normal :class:`CorruptionError` path, and the scan keeps
+        going — the report's ``findings`` list carries every damage site
+        (file, block, error class), so a replica bootstrap can
+        quarantine-and-continue instead of giving up at the first hit.
+        Reads are paced at low priority through the shared I/O token
+        bucket, so a scrub cannot starve foreground traffic.
 
-        ``background=True`` submits the scrub to the low-priority job pool
-        and returns None; otherwise runs inline and returns a report dict.
-        """
+        ``fail_fast=True`` restores raise-on-first-corruption semantics
+        (the first :class:`CorruptionError` propagates after quarantining
+        its file). ``background=True`` submits the scrub to the
+        low-priority job pool and returns None; otherwise runs inline and
+        returns the report dict."""
         if background:
             self.bg.submit_scrub()
             return None
-        return self._scrub()
+        return self._scrub(fail_fast=fail_fast)
 
-    def _scrub(self) -> dict:
+    def _scrub(self, fail_fast: bool = False) -> dict:
         report = {
             "sst_files": 0,
             "blocks_verified": 0,
             "values_verified": 0,
             "corruptions": [],
+            "findings": [],
         }
+
+        def record(kind: str, file_id, block, exc: BaseException) -> None:
+            report["corruptions"].append(str(exc))
+            report["findings"].append(
+                {
+                    "kind": kind,
+                    "file": file_id,
+                    "block": block,
+                    "error": type(exc).__name__,
+                    "detail": str(exc),
+                }
+            )
+            if fail_fast:
+                raise exc
+
         version = self.versions.current
         quarantined = self.versions.quarantined_files()
         seen_vals: set[tuple[int, int]] = set()
@@ -1533,7 +1714,8 @@ class DB:
                 except OSError:
                     continue  # compacted away under the scrub — fine
                 report["sst_files"] += 1
-                bad = False
+                unreadable = False
+                file_quarantined = False
                 for idx in range(len(reader.index)):
                     if self._closed:
                         break
@@ -1542,15 +1724,18 @@ class DB:
                     try:
                         reader.verify_block(idx)
                     except CorruptionError as e:
-                        self.errors.on_corruption(e)
-                        report["corruptions"].append(str(e))
-                        bad = True
-                        break  # quarantined: the rest of the file is moot
+                        # quarantine once, but keep scanning: the report
+                        # must name EVERY damaged block, not just the first
+                        if not file_quarantined:
+                            self.errors.on_corruption(e)
+                            file_quarantined = True
+                        record("sst_block", fmeta.file_no, idx, e)
+                        continue
                     except OSError:
-                        bad = True
+                        unreadable = True
                         break  # truncated/unlinked mid-scrub: not corruption
                     report["blocks_verified"] += 1
-                if bad:
+                if unreadable or file_quarantined:
                     continue
                 # follow the table's value pointers into the BValue log
                 try:
@@ -1572,7 +1757,7 @@ class DB:
                             report["values_verified"] += 1
                         except CorruptionError as e:
                             self.errors.on_corruption(e)
-                            report["corruptions"].append(str(e))
+                            record("bvalue", voff.file_id, voff.offset, e)
                         except OSError:
                             continue  # GC'd / short read: retryable, not rot
                 except OSError:
@@ -1587,6 +1772,13 @@ class DB:
         if self._closed:
             return
         self._closed = True
+        if self._follower is not None:
+            if crash:
+                self._follower.sealed = True  # abandon in-flight apply
+            else:
+                self._follower.seal(final_catch_up=False)
+        if self._repl is not None:
+            self._repl.close()
         if not crash:
             self.bvalue.flush()
         else:

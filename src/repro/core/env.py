@@ -35,14 +35,15 @@ import threading
 from .errors import SimulatedCrashError
 
 #: operation kinds a fault rule can match. "write" covers append/pwrite,
-#: "sync" covers fsync/fdatasync on any handle.
+#: "sync" covers fsync/fdatasync on any handle, "ship" covers replication
+#: frame sends (the transport routes through the env).
 OPS = ("open", "read", "write", "sync", "rename", "unlink", "listdir",
-       "truncate", "link")
+       "truncate", "link", "ship")
 
 #: ops that mutate the (simulated) device — these all fail once a simulated
-#: crash has fired.
+#: crash has fired. "ship" is here because a dead primary cannot send.
 _MUTATING_OPS = frozenset(
-    ("open", "write", "sync", "rename", "unlink", "truncate", "link")
+    ("open", "write", "sync", "rename", "unlink", "truncate", "link", "ship")
 )
 
 
@@ -113,6 +114,20 @@ class Env:
         that must work across devices catch OSError and fall back to a
         byte copy."""
         os.link(src, dst)
+
+    def release_tracking(self, prefix: str) -> None:
+        """Disown every tracked path under ``prefix`` (no-op here; see
+        ``FaultInjectionEnv``). Called when a completed checkpoint image is
+        handed to another failure domain — e.g. a replica bootstrap — so
+        this env's simulated crash can no longer rewind files that a
+        different machine now owns and writes."""
+
+    # -- replication transport -------------------------------------------
+    def ship(self, stream: str, blob: bytes) -> list:
+        """Deliver one replication frame on ``stream``. Returns the frames
+        that actually arrive at the far end — a fault-injecting env may
+        drop, duplicate, reorder, or corrupt them in flight."""
+        return [blob]
 
 
 #: module-level default shared by every DB that doesn't set ``cfg.env``.
@@ -198,13 +213,59 @@ class _FaultFile:
 
 class _FileState:
     """Unsynced-write tracking for one path: bytes beyond ``synced_size`` and
-    overwrites recorded in ``undo`` vanish on :meth:`drop_unsynced`."""
+    overwrites recorded in ``undo`` vanish on :meth:`drop_unsynced`.
 
-    __slots__ = ("synced_size", "undo")
+    The undo log is bounded: only the *first* overwrite of each synced byte
+    range is recorded (``covered`` tracks ranges already logged — their
+    pre-overwrite originals are what a rollback restores, so later rewrites
+    of the same bytes need no new entries). Total undo bytes per file can
+    therefore never exceed ``synced_size``, no matter how many times a
+    long-running workload rewrites the same region."""
+
+    __slots__ = ("synced_size", "undo", "covered", "undo_bytes")
 
     def __init__(self, synced_size: int):
         self.synced_size = synced_size
         self.undo = []  # list[(offset, original_bytes)] for overwrites below synced_size
+        self.covered = []  # sorted disjoint (start, end) ranges already in undo
+        self.undo_bytes = 0
+
+    def uncovered(self, start: int, end: int):
+        """Subranges of [start, end) not yet present in the undo log."""
+        out = []
+        pos = start
+        for s, e in self.covered:
+            if e <= pos:
+                continue
+            if s >= end:
+                break
+            if s > pos:
+                out.append((pos, s))
+            pos = max(pos, e)
+            if pos >= end:
+                break
+        if pos < end:
+            out.append((pos, end))
+        return out
+
+    def cover(self, start: int, end: int) -> None:
+        if start >= end:
+            return
+        ivs = self.covered + [(start, end)]
+        ivs.sort()
+        merged = [ivs[0]]
+        for s, e in ivs[1:]:
+            ls, le = merged[-1]
+            if s <= le:
+                merged[-1] = (ls, max(le, e))
+            else:
+                merged.append((s, e))
+        self.covered = merged
+
+    def clear_undo(self) -> None:
+        self.undo.clear()
+        self.covered.clear()
+        self.undo_bytes = 0
 
 
 class FaultInjectionEnv(Env):
@@ -223,6 +284,13 @@ class FaultInjectionEnv(Env):
         self._crash_path_substr: str | None = None
         self._crashed = False
         self.op_counts: dict[str, int] = {}
+        # replication-transport faults: (drop, duplicate, reorder, corrupt)
+        # probabilities applied per shipped frame
+        self._transport_faults = (0.0, 0.0, 0.0, 0.0)
+        self._held_frame: bytes | None = None  # frame delayed by a reorder
+        self.transport_stats = {
+            "dropped": 0, "duplicated": 0, "reordered": 0, "corrupted": 0,
+        }
 
     # ------------------------------------------------------------------
     # test-facing controls
@@ -274,9 +342,66 @@ class FaultInjectionEnv(Env):
             self._crash_countdown = -1
             self._crashed = False
 
+    def set_transport_faults(
+        self,
+        drop: float = 0.0,
+        duplicate: float = 0.0,
+        reorder: float = 0.0,
+        corrupt: float = 0.0,
+    ) -> None:
+        """Per-frame fault probabilities for :meth:`ship`. ``reorder`` holds
+        a frame back and delivers it after the next one (an adjacent swap);
+        ``corrupt`` flips one byte, which the frame CRC must catch."""
+        with self._lock:
+            self._transport_faults = (drop, duplicate, reorder, corrupt)
+
+    @property
+    def undo_bytes(self) -> int:
+        """Total bytes held in per-file overwrite undo logs (bounded: at most
+        one entry per synced byte — see :class:`_FileState`)."""
+        with self._lock:
+            seen, total = set(), 0
+            for st in self._files.values():
+                if id(st) in seen:  # hard links share one state object
+                    continue
+                seen.add(id(st))
+                total += st.undo_bytes
+            return total
+
+    def reset(self) -> None:
+        """Return the env to a pristine state: clear fault rules, disarm any
+        crash point, forget unsynced-write tracking, clear transport faults
+        and the held reorder frame, and zero all counters. Long-lived
+        harness loops call this between iterations so no state (including
+        the undo log) accumulates across runs."""
+        with self._lock:
+            self._rules.clear()
+            self._crash_countdown = -1
+            self._crash_ops = frozenset()
+            self._crash_path_substr = None
+            self._crashed = False
+            self._files.clear()
+            self._fd_paths.clear()
+            self._transport_faults = (0.0, 0.0, 0.0, 0.0)
+            self._held_frame = None
+            self.op_counts.clear()
+            for k in self.transport_stats:
+                self.transport_stats[k] = 0
+
     @property
     def crashed(self) -> bool:
         return self._crashed
+
+    def release_tracking(self, prefix: str) -> None:
+        """Disown tracked paths under ``prefix``: a completed checkpoint
+        image belongs to whoever it was made for (a replica, an operator's
+        backup target), so this env's ``drop_unsynced`` must not rewind
+        those files once another failure domain starts writing them.
+        Hard-link-shared state stays alive under the source path."""
+        sep = prefix if prefix.endswith(os.sep) else prefix + os.sep
+        with self._lock:
+            for path in [p for p in self._files if p.startswith(sep)]:
+                del self._files[path]
 
     def drop_unsynced(self) -> None:
         """Rewind every tracked file to its last-fsynced state (the on-disk
@@ -293,7 +418,7 @@ class FaultInjectionEnv(Env):
                     os.ftruncate(fd, st.synced_size)
                 finally:
                     os.close(fd)
-                st.undo.clear()
+                st.clear_undo()
             # state survives: synced sizes are still the truth for these paths
 
     def reset_tracking(self) -> None:
@@ -371,6 +496,8 @@ class FaultInjectionEnv(Env):
             if st is not None and size < st.synced_size:
                 st.synced_size = size
                 st.undo = [(o, b[: max(0, size - o)]) for o, b in st.undo if o < size]
+                st.undo_bytes = sum(len(b) for _, b in st.undo)
+                st.covered = [(s, min(e, size)) for s, e in st.covered if s < size]
 
     def _note_sync(self, path: str) -> None:
         with self._lock:
@@ -380,7 +507,7 @@ class FaultInjectionEnv(Env):
                     st.synced_size = os.path.getsize(path)
                 except OSError:
                     pass
-                st.undo.clear()
+                st.clear_undo()
 
     # ------------------------------------------------------------------
     # Env surface
@@ -455,10 +582,17 @@ class FaultInjectionEnv(Env):
                 st = self._files.get(path)
                 if st is not None and offset < st.synced_size:
                     # overwriting durable bytes: remember the original so a
-                    # simulated crash can undo the unsynced overwrite
+                    # simulated crash can undo the unsynced overwrite. Only
+                    # ranges not already logged need an entry — the oldest
+                    # original is what a rollback restores, so the undo log
+                    # stays bounded by synced_size however often the same
+                    # bytes are rewritten.
                     n = min(len(data), st.synced_size - offset)
-                    original = os.pread(fd, n, offset)
-                    st.undo.append((offset, original))
+                    for s, e in st.uncovered(offset, offset + n):
+                        original = os.pread(fd, e - s, s)
+                        st.undo.append((s, original))
+                        st.undo_bytes += len(original)
+                    st.cover(offset, offset + n)
         return os.pwrite(fd, data, offset)
 
     def truncate_fd(self, fd: int, size: int) -> None:
@@ -497,3 +631,32 @@ class FaultInjectionEnv(Env):
             st = self._files.get(src)
             if st is not None:
                 self._files[dst] = st
+
+    def ship(self, stream: str, blob: bytes) -> list:
+        # crash/rule gate first: a dead primary cannot send, and crash
+        # harnesses can arm kill points on the ship edge itself
+        self._check("ship", stream)
+        with self._lock:
+            drop, dup, reorder, corrupt = self._transport_faults
+            held, self._held_frame = self._held_frame, None
+            out = []
+            rnd = self._rng.random
+            if drop and rnd() < drop:
+                self.transport_stats["dropped"] += 1
+            else:
+                if corrupt and blob and rnd() < corrupt:
+                    i = self._rng.randrange(len(blob))
+                    blob = blob[:i] + bytes((blob[i] ^ 0xFF,)) + blob[i + 1:]
+                    self.transport_stats["corrupted"] += 1
+                if reorder and rnd() < reorder:
+                    # hold this frame back; it rides after the next send
+                    self._held_frame = blob
+                    self.transport_stats["reordered"] += 1
+                else:
+                    out.append(blob)
+                    if dup and rnd() < dup:
+                        out.append(blob)
+                        self.transport_stats["duplicated"] += 1
+            if held is not None:
+                out.append(held)
+            return out

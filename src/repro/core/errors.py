@@ -72,6 +72,13 @@ class SnapshotUnstableError(DBError):
     and one backoff round (sustained compaction churn)."""
 
 
+class ReplicaDivergedError(DBError):
+    """A follower's rolling stream CRC disagreed with the primary's: its
+    applied state has forked (byte flip, reorder, or lost frame that slipped
+    past the frame CRC). The replica stops applying and must re-bootstrap
+    from a fresh checkpoint image."""
+
+
 class CorruptionError(IOError):
     """A CRC-verified read found corrupt data. Carries enough identity for
     the ErrorHandler to quarantine the file (``sst_file_no`` or
@@ -152,6 +159,10 @@ class ErrorHandler:
 
     def check_writable(self) -> None:
         """Write-path gate: fail fast (typed) while the DB is read-only."""
+        if getattr(self.db, "_role", "primary") != "primary":
+            raise DBReadOnlyError(
+                "DB is a replica: user writes are rejected until promote()"
+            )
         e = self.error
         if e is not None:
             raise DBReadOnlyError(

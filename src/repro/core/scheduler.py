@@ -239,6 +239,7 @@ class BackgroundCoordinator:
         self._flush_inflight = False
         self._compactions_inflight = 0
         self._gc_inflight = False
+        self._repl_inflight = False  # single-flight follower apply/catch-up
         # candidate-set signature of a completed auto-GC pass that made no
         # progress: don't immediately requeue the exact same stuck work
         # (a new dead-ratio edge changes the signature and re-arms GC)
@@ -289,6 +290,41 @@ class BackgroundCoordinator:
                     self._compactions_inflight -= 1
                 break
         self._maybe_schedule_gc()
+        self.maybe_schedule_repl()
+
+    def maybe_schedule_repl(self) -> None:
+        """Follower apply/catch-up job (single-flight, flush-priority pool):
+        queued replication frames — or a detected gap that needs a WAL
+        catch-up read from the primary — become one drain pass. Re-armed at
+        every completion edge like the other job kinds, so a frame that
+        arrives mid-drain schedules the next pass instead of being lost."""
+        db = self.db
+        follower = getattr(db, "_follower", None)
+        if (
+            follower is None
+            or self._stopping
+            or getattr(db, "_closed", False)
+            or self.sched.error is not None
+            or not follower.has_work()
+        ):
+            return
+        with self._state_lock:
+            if self._repl_inflight:
+                return
+            self._repl_inflight = True
+        if not self.sched.submit("repl-apply", self._repl_job, PRI_HIGH, "repl_apply"):
+            with self._state_lock:
+                self._repl_inflight = False
+
+    def _repl_job(self) -> None:
+        db = self.db
+        try:
+            follower = getattr(db, "_follower", None)
+            if follower is not None:
+                db.errors.run_job(follower.drain, "repl_apply")
+        finally:
+            with self._state_lock:
+                self._repl_inflight = False
 
     def _pick_and_lock(self):
         db = self.db
@@ -361,6 +397,15 @@ class BackgroundCoordinator:
             or self._stopping
             or getattr(db, "_closed", False)
             or cfg.background_threads < 2
+            # replicas never GC: their value files mirror the primary's id
+            # space byte for byte, and a local rewrite would fork it — the
+            # primary's own GC rewrites arrive through the stream instead
+            or getattr(db, "_role", "primary") != "primary"
+            # a primary with live followers pauses auto-GC too: GC moves
+            # value bytes to new file ids without shipping WAL records, so
+            # already-shipped pointers would dangle on the replica side.
+            # Detach (or rebootstrap) resumes reclamation.
+            or (getattr(db, "_repl", None) is not None and db._repl.active)
         ):
             return
         with self._state_lock:
@@ -472,7 +517,7 @@ class BackgroundCoordinator:
     # -- idle / lifecycle -------------------------------------------------
     def _idle_locked(self, compactions: bool) -> bool:
         db = self.db
-        if db.immutables or self._flush_inflight:
+        if db.immutables or self._flush_inflight or self._repl_inflight:
             return False
         if self.sched._outstanding[PRI_HIGH] > 0:
             return False

@@ -273,6 +273,23 @@ class EngineStats:
         d.setdefault("bg_errors_transient_exhausted", 0)
         d.setdefault("corruptions_detected", 0)
         d.setdefault("files_quarantined", 0)
+        for k in (
+            "repl_batches_shipped",
+            "repl_bytes_shipped",
+            "repl_batches_applied",
+            "repl_frames_corrupt",
+            "repl_frames_duplicate",
+            "repl_catchups",
+            "repl_crc_checks",
+            "repl_divergence_detected",
+            "repl_rebootstraps",
+            "repl_ship_errors",
+            "repl_lag_warnings",
+            "repl_wals_retained",
+            "repl_value_fetch_misses",
+            "promotions",
+        ):
+            d.setdefault(k, 0)
         d.setdefault("resumes", 0)
         # canonical names for the write-amp trajectory (BENCH_writeamp.json):
         # device bytes compaction wrote vs. bytes the user actually stored

@@ -49,6 +49,22 @@ class WriteBatch:
         self._nbytes += len(start) + len(end)
         return self
 
+    @classmethod
+    def from_entries(
+        cls, entries: list[tuple[int, bytes, bytes]]
+    ) -> "WriteBatch":
+        """Rebuild a batch from decoded ``(type, key, value)`` entries —
+        the shape WAL replay and replication apply produce."""
+        batch = cls()
+        for type_, key, value in entries:
+            batch._ops.append((type_, key, value))
+            batch._nbytes += len(key) + len(value)
+        return batch
+
+    def __iter__(self):
+        """Yield ``(type, key, value)`` ops in insertion order."""
+        return iter(self._ops)
+
     def clear(self) -> None:
         """Drop all queued ops, making the batch reusable."""
         self._ops.clear()

@@ -591,3 +591,91 @@ def test_crash_matrix_checkpoint_link_edge(tmp_path):
         cdb = DB(ck, _cfg(None))
         cdb.scan(b"", 1 << 20)
         cdb.close()
+
+
+# ---------------------------------------------------------------------------
+# bounded undo log + reset()  (PR 8)
+# ---------------------------------------------------------------------------
+class TestUndoLogBound:
+    def test_repeated_overwrites_do_not_grow_undo(self, tmp_path):
+        """The drop-unsynced undo log keeps at most one entry per synced
+        byte: overwriting the same synced region N times must cost O(region),
+        not O(N * region) — the regression that made long harness loops
+        balloon memory."""
+        env = FaultInjectionEnv()
+        p = str(tmp_path / "f.bin")
+        fd = env.open_fd(p, os.O_RDWR | os.O_CREAT)
+        env.pwrite(fd, b"A" * 4096, 0)
+        env.fsync(fd)
+        env.pwrite(fd, b"B" * 4096, 0)
+        first = env.undo_bytes
+        assert first <= 4096
+        for i in range(200):
+            env.pwrite(fd, bytes([i % 256]) * 4096, 0)
+        assert env.undo_bytes == first  # interval already covered: no growth
+        env.drop_unsynced()
+        with env.open(p, "rb") as f:
+            assert f.read() == b"A" * 4096  # rewound to the synced image
+        env.close_fd(fd)
+
+    def test_reset_clears_all_tracking(self, tmp_path):
+        env = FaultInjectionEnv(seed=3)
+        p = str(tmp_path / "g.bin")
+        fd = env.open_fd(p, os.O_RDWR | os.O_CREAT)
+        env.pwrite(fd, b"x" * 1024, 0)
+        env.fsync(fd)
+        env.pwrite(fd, b"y" * 1024, 0)
+        env.set_crash_after(100, ops=("write",))
+        env.set_transport_faults(drop=0.5)
+        env.close_fd(fd)
+        assert env.undo_bytes > 0
+        env.reset()
+        assert env.undo_bytes == 0
+        assert not env.crashed
+        assert env._transport_faults == (0.0, 0.0, 0.0, 0.0)
+        assert env.op_counts == {} or all(v == 0 for v in env.op_counts.values())
+        # dropping after reset must not rewind the (now untracked) file
+        env.drop_unsynced()
+        with env.open(p, "rb") as f:
+            assert f.read() == b"y" * 1024
+
+
+# ---------------------------------------------------------------------------
+# resume() idempotency  (PR 8)
+# ---------------------------------------------------------------------------
+class TestResumeIdempotent:
+    def test_double_resume_is_noop(self, tmp_db_dir):
+        env = FaultInjectionEnv()
+        db = DB(tmp_db_dir, _cfg(env, memtable_size=4096))
+        _fill(db, 40)
+        env.add_fault(op="write", path_substr=".sst", count=10_000,
+                      error=errno.ENOSPC)
+        try:
+            for i in range(2000):
+                db.put(f"f{i:05d}".encode(), b"z" * 60)
+        except RuntimeError:
+            pass
+        assert _wait_latched(db)
+        env.clear_faults()
+        db.resume()
+        wals_after_first = sorted(
+            n for n in os.listdir(tmp_db_dir) if n.startswith("wal_")
+        )
+        db.resume()  # second call: not latched -> strict no-op
+        wals_after_second = sorted(
+            n for n in os.listdir(tmp_db_dir) if n.startswith("wal_")
+        )
+        assert wals_after_first == wals_after_second  # no double rotation
+        assert db.stats.snapshot()["resumes"] == 1
+        db.put(b"after", b"ok")
+        assert db.get(b"after") == b"ok"
+        db.close()
+
+    def test_resume_on_healthy_db_is_noop(self, tmp_db_dir):
+        db = DB(tmp_db_dir, _cfg(None))
+        db.put(b"a", b"1")
+        db.resume()
+        db.resume()
+        assert db.stats.snapshot().get("resumes", 0) == 0
+        assert db.get(b"a") == b"1"
+        db.close()

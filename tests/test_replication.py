@@ -1,0 +1,509 @@
+"""Primary/replica WAL shipping (PR 8).
+
+Covers the replication subsystem end to end: checkpoint bootstrap +
+stream attach, follower apply with value mirroring, transport faults
+(drop/duplicate/reorder/corrupt) bridged by WAL catch-up, rolling-CRC
+divergence detection + rebootstrap, failover promotion (durability
+invariant, idempotency), WAL retention while followers are attached,
+the all-findings integrity scrub report, incremental checkpoint
+chains, and a smoke run of the randomized failover harness.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import pytest
+
+from repro.core import (
+    DB,
+    DBConfig,
+    CorruptionError,
+    DBReadOnlyError,
+    FaultInjectionEnv,
+)
+from repro.core.replication import attach, bootstrap_replica
+from repro.testing.failover_harness import run_failover_loop
+
+
+def _cfg(env=None, wal_mode="sync", **kw):
+    cfg = DBConfig.bvlsm(
+        wal_mode=wal_mode,
+        value_threshold=kw.pop("value_threshold", 64),
+        memtable_size=kw.pop("memtable_size", 8192),
+        num_bvalue_queues=2,
+        **kw,
+    )
+    cfg.env = env
+    cfg.bg_error_backoff_ms = 1.0
+    return cfg
+
+
+def _pair(tmp_path, wal_mode="sync", seed_writes=30, penv=None, renv=None,
+          **cfg_kw):
+    """Primary with some data, bootstrapped replica, live link."""
+    primary = DB(str(tmp_path / "p"), _cfg(penv, wal_mode, **cfg_kw))
+    data = {}
+    for i in range(seed_writes):
+        k = f"seed{i:04d}".encode()
+        v = (f"val{i}_".encode() * 40)[: 200 if i % 3 else 24]
+        primary.put(k, v)
+        data[k] = v
+    replica = bootstrap_replica(
+        primary, str(tmp_path / "r"), cfg=_cfg(renv, wal_mode, **cfg_kw)
+    )
+    link = attach(primary, replica)
+    return primary, replica, link, data
+
+
+def _scan_all(db):
+    return {k: v for k, v in db.scan(b"", 1 << 20)}
+
+
+def _converge(link, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        link.nudge()
+        if link.wait_caught_up(timeout=1.0):
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# ship + apply
+# ---------------------------------------------------------------------------
+class TestShipApply:
+    def test_stream_converges_and_scans_match(self, tmp_path):
+        primary, replica, link, _ = _pair(tmp_path)
+        try:
+            for i in range(60):
+                primary.put(f"live{i:04d}".encode(), (b"x%d_" % i) * 50)
+            primary.delete(b"seed0001")
+            primary.delete_range(b"seed0010", b"seed0014")
+            assert _converge(link)
+            assert _scan_all(primary) == _scan_all(replica)
+            assert replica.get(b"seed0001") is None
+            assert replica.get(b"seed0012") is None
+        finally:
+            primary.close()
+            replica.close()
+
+    def test_replica_rejects_user_writes(self, tmp_path):
+        primary, replica, link, _ = _pair(tmp_path, seed_writes=3)
+        try:
+            with pytest.raises(DBReadOnlyError):
+                replica.put(b"nope", b"v")
+            with pytest.raises(DBReadOnlyError):
+                replica.delete(b"seed0000")
+        finally:
+            primary.close()
+            replica.close()
+
+    def test_bootstrap_image_preserves_l0_order(self, tmp_path):
+        """Two overlapping L0 flushes: the checkpoint's single manifest
+        edit must rebuild L0 newest-first, or the image resurrects old
+        versions (regression: replay inserts L0 adds at the front, so a
+        batched newest-first list came back reversed)."""
+        primary = DB(str(tmp_path / "p"), _cfg())
+        try:
+            primary.put(b"k", b"old")
+            primary.delete(b"gone")
+            primary.flush()
+            primary.put(b"k", b"new")
+            primary.put(b"gone", b"resurrected?")
+            primary.delete(b"gone")
+            primary.flush()
+            replica = bootstrap_replica(primary, str(tmp_path / "r"))
+            try:
+                assert replica.get(b"k") == b"new"
+                assert replica.get(b"gone") is None
+            finally:
+                replica.close()
+        finally:
+            primary.close()
+
+    def test_lag_and_status_reporting(self, tmp_path):
+        primary, replica, link, _ = _pair(tmp_path)
+        try:
+            for i in range(10):
+                primary.put(f"st{i:02d}".encode(), b"s" * 80)
+            assert _converge(link)
+            ps = primary.replication_status()
+            rs = replica.replication_status()
+            assert ps["role"] == "primary"
+            assert rs["role"] == "replica"
+            assert ps["shipped_seq"] == primary._seq
+            assert ps["min_acked_seq"] <= primary._seq
+            assert rs["applied_seq"] == replica._seq
+            assert rs["lag"] == 0
+            assert rs["diverged"] is False
+            assert link.lag == 0
+        finally:
+            primary.close()
+            replica.close()
+
+
+# ---------------------------------------------------------------------------
+# transport faults
+# ---------------------------------------------------------------------------
+class TestTransportFaults:
+    @pytest.mark.parametrize("wal_mode", ["sync", "async"])
+    def test_lossy_wire_converges_via_catch_up(self, tmp_path, wal_mode):
+        penv = FaultInjectionEnv(seed=7)
+        primary, replica, link, _ = _pair(
+            tmp_path, wal_mode=wal_mode, penv=penv,
+            renv=FaultInjectionEnv(seed=8),
+        )
+        try:
+            penv.set_transport_faults(
+                drop=0.3, duplicate=0.2, reorder=0.2, corrupt=0.15
+            )
+            for i in range(120):
+                primary.put(f"fault{i:04d}".encode(), (b"f%d_" % i) * 60)
+            penv.set_transport_faults()  # heal the wire, then converge
+            assert _converge(link)
+            assert _scan_all(primary) == _scan_all(replica)
+            assert not replica._follower.diverged
+            t = penv.transport_stats
+            assert sum(t.values()) > 0  # the wire actually misbehaved
+        finally:
+            primary.close()
+            replica.close()
+
+    def test_corrupt_frames_are_dropped_not_applied(self, tmp_path):
+        """A flipped byte must fail the frame CRC — the follower treats it
+        as a dropped frame (catch-up bridges the hole), never as data."""
+        penv = FaultInjectionEnv(seed=11)
+        primary, replica, link, _ = _pair(
+            tmp_path, penv=penv, renv=FaultInjectionEnv(seed=12)
+        )
+        try:
+            penv.set_transport_faults(corrupt=1.0)
+            for i in range(40):
+                primary.put(f"c{i:04d}".encode(), b"corrupt-wire" * 10)
+            penv.set_transport_faults()
+            assert _converge(link)
+            assert _scan_all(primary) == _scan_all(replica)
+            assert replica.stats.snapshot()["repl_frames_corrupt"] > 0
+            assert not replica._follower.diverged
+        finally:
+            primary.close()
+            replica.close()
+
+
+# ---------------------------------------------------------------------------
+# WAL retention
+# ---------------------------------------------------------------------------
+class TestRetention:
+    def test_unacked_wal_survives_flush_until_follower_acks(self, tmp_path):
+        """Flush normally deletes replayed WAL segments; with a follower
+        attached the primary must retain them until acked, so a slow
+        follower can always catch up from durable logs."""
+        primary, replica, link, _ = _pair(tmp_path, memtable_size=2048)
+        try:
+            # wedge the follower: stop applying, then push enough to
+            # rotate + flush WAL segments on the primary
+            replica._follower.sealed = True
+            for i in range(80):
+                primary.put(f"slow{i:04d}".encode(), b"r" * 200)
+            primary.flush()
+            st = primary.replication_status()
+            assert st["retained_wals"] > 0
+            # un-wedge: a fresh catch-up replays the retained logs
+            replica._follower.sealed = False
+            assert _converge(link)
+            assert _scan_all(primary) == _scan_all(replica)
+            primary.flush()
+            assert primary.replication_status()["retained_wals"] == 0
+        finally:
+            primary.close()
+            replica.close()
+
+    def test_detach_releases_retention(self, tmp_path):
+        primary, replica, link, _ = _pair(tmp_path, memtable_size=2048)
+        try:
+            assert _converge(link)
+            link.detach()
+            for i in range(60):
+                primary.put(f"post{i:04d}".encode(), b"d" * 150)
+            primary.flush()
+            assert primary.replication_status().get("retained_wals", 0) == 0
+        finally:
+            primary.close()
+            replica.close()
+
+
+# ---------------------------------------------------------------------------
+# divergence detection
+# ---------------------------------------------------------------------------
+class TestDivergence:
+    def test_tampered_state_is_flagged_and_rebootstrapped(self, tmp_path):
+        primary, replica, link, _ = _pair(tmp_path, repl_crc_interval=16)
+        try:
+            assert _converge(link)
+            # poison the follower's rolling CRC for a FUTURE run, then
+            # write through it: the completed run's digest can't match
+            interval = 16
+            target = primary._seq // interval + 1
+            with replica._follower._lock:
+                replica._follower._runs[target] = 0xDEAD
+            for i in range(interval * 3):
+                primary.put(f"div{i:04d}".encode(), b"z" * 100)
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                link.nudge()
+                if replica._follower.diverged:
+                    break
+                time.sleep(0.02)
+            assert replica._follower.diverged
+            assert replica._follower.needs_rebootstrap
+            assert primary.stats.snapshot()["repl_divergence_detected"] >= 0
+            replica = link.rebootstrap()
+            assert _converge(link)
+            assert _scan_all(primary) == _scan_all(replica)
+            assert not replica._follower.diverged
+        finally:
+            primary.close()
+            link.replica.close()
+
+    def test_clean_stream_never_flags(self, tmp_path):
+        primary, replica, link, _ = _pair(tmp_path, repl_crc_interval=8)
+        try:
+            for i in range(100):
+                primary.put(f"ok{i:04d}".encode(), b"y" * 80)
+            assert _converge(link)
+            assert replica.stats.snapshot()["repl_crc_checks"] > 0
+            assert not replica._follower.diverged
+        finally:
+            primary.close()
+            replica.close()
+
+
+# ---------------------------------------------------------------------------
+# failover promotion
+# ---------------------------------------------------------------------------
+class TestPromotion:
+    def test_failover_keeps_every_acked_sync_write(self, tmp_path):
+        penv = FaultInjectionEnv(seed=21)
+        primary, replica, link, data = _pair(
+            tmp_path, penv=penv, renv=FaultInjectionEnv(seed=22)
+        )
+        try:
+            for i in range(50):
+                k = f"acked{i:04d}".encode()
+                v = (b"a%d_" % i) * 60
+                primary.put(k, v)
+                data[k] = v
+            try:
+                primary.close(crash=True)
+            except Exception:
+                pass
+            penv.drop_unsynced()
+            penv.disarm_crash()
+            replica.promote()
+            assert replica.replication_status()["role"] == "primary"
+            for k, v in data.items():
+                assert replica.get(k) == v, k
+            replica.put(b"post-failover", b"accepted")
+            assert replica.get(b"post-failover") == b"accepted"
+        finally:
+            replica.close()
+
+    def test_promote_is_idempotent(self, tmp_path):
+        primary, replica, link, data = _pair(tmp_path, seed_writes=10)
+        try:
+            assert _converge(link)
+            primary.close()
+            replica.promote()
+            wals_after_first = sorted(
+                n for n in os.listdir(replica.path) if n.startswith("wal_")
+            )
+            replica.promote()  # second call: strict no-op
+            wals_after_second = sorted(
+                n for n in os.listdir(replica.path) if n.startswith("wal_")
+            )
+            assert wals_after_first == wals_after_second  # no double rotation
+            replica.put(b"still-works", b"yes")
+            assert replica.get(b"still-works") == b"yes"
+        finally:
+            replica.close()
+
+    def test_promote_on_primary_is_noop(self, tmp_path):
+        db = DB(str(tmp_path / "solo"), _cfg())
+        try:
+            db.put(b"a", b"1")
+            db.promote()
+            assert db.replication_status()["role"] == "primary"
+            assert db.get(b"a") == b"1"
+        finally:
+            db.close()
+
+
+# ---------------------------------------------------------------------------
+# incremental checkpoints (chain of 3)
+# ---------------------------------------------------------------------------
+class TestIncrementalCheckpoint:
+    def test_chain_of_three_links_unchanged_files(self, tmp_path):
+        db = DB(str(tmp_path / "db"), _cfg())
+        try:
+            data = {}
+            for i in range(20):
+                k = f"ck{i:04d}".encode()
+                v = (b"c%d_" % i) * 50
+                db.put(k, v)
+                data[k] = v
+            db.flush()
+            cp1 = str(tmp_path / "cp1")
+            db.checkpoint(cp1)
+
+            for i in range(20, 40):
+                k = f"ck{i:04d}".encode()
+                v = (b"c%d_" % i) * 50
+                db.put(k, v)
+                data[k] = v
+            db.flush()
+            cp2 = str(tmp_path / "cp2")
+            db.checkpoint(cp2, base=cp1)
+
+            # every SSTable cp1 already held is a hard link, not a copy
+            shared = [
+                n for n in os.listdir(cp1)
+                if n.endswith(".sst") and os.path.exists(os.path.join(cp2, n))
+            ]
+            assert shared, "chain test needs at least one carried-over table"
+            for n in shared:
+                assert os.path.samefile(
+                    os.path.join(cp1, n), os.path.join(cp2, n)
+                ), f"{n} was re-materialized instead of linked from base"
+
+            for i in range(40, 60):
+                k = f"ck{i:04d}".encode()
+                v = (b"c%d_" % i) * 50
+                db.put(k, v)
+                data[k] = v
+            db.flush()
+            cp3 = str(tmp_path / "cp3")
+            db.checkpoint(cp3, base=cp2)
+            for n in os.listdir(cp2):
+                if n.endswith(".sst") and os.path.exists(os.path.join(cp3, n)):
+                    assert os.path.samefile(
+                        os.path.join(cp2, n), os.path.join(cp3, n)
+                    )
+
+            # the end of the chain opens to exactly the live contents
+            img = DB(cp3, _cfg())
+            try:
+                assert _scan_all(img) == data
+            finally:
+                img.close()
+        finally:
+            db.close()
+
+    def test_base_link_skipped_when_sizes_differ(self, tmp_path):
+        """Same-name ⇒ same-content only holds for pristine images: a
+        base file whose size differs (e.g. a short mirrored value file)
+        must be re-copied, not linked."""
+        db = DB(str(tmp_path / "db"), _cfg())
+        try:
+            db.put(b"big", b"B" * 500)  # separated value
+            db.flush()
+            cp1 = str(tmp_path / "cp1")
+            # hardlink=False: we are about to mutate the image, and a
+            # hard-linked one shares inodes with the live DB
+            db.checkpoint(cp1, hardlink=False)
+            # truncate a value file in the base image to simulate a
+            # partially-mirrored replica store reused as a base
+            bv = os.path.join(cp1, "bvalue")
+            victim = next(
+                n for n in sorted(os.listdir(bv))
+                if n.endswith(".val") and os.path.getsize(os.path.join(bv, n))
+            )
+            with open(os.path.join(bv, victim), "r+b") as f:
+                f.truncate(max(0, os.path.getsize(os.path.join(bv, victim)) - 8))
+            cp2 = str(tmp_path / "cp2")
+            db.checkpoint(cp2, base=cp1)
+            img = DB(cp2, _cfg())
+            try:
+                assert img.get(b"big") == b"B" * 500
+            finally:
+                img.close()
+        finally:
+            db.close()
+
+
+# ---------------------------------------------------------------------------
+# integrity scrub: the all-findings report
+# ---------------------------------------------------------------------------
+class TestScrubReport:
+    def _corrupt(self, path, off=30, n=4):
+        with open(path, "r+b") as f:
+            f.seek(off)
+            b = f.read(n)
+            f.seek(off)
+            f.write(bytes(x ^ 0xFF for x in b))
+
+    def test_report_collects_every_finding(self, tmp_path):
+        db = DB(str(tmp_path / "db"), _cfg())
+        try:
+            # table A: inline values only (this one gets block rot — its
+            # pointers are skipped once quarantined, so the value probe
+            # must come from a different table)
+            for i in range(15):
+                db.put(f"a{i:04d}".encode(), b"inline")
+            db.flush()
+            db.wait_idle()
+            fno = db.versions.current.levels[0][0].file_no
+            # table B: separated values (its value file gets the rot)
+            for i in range(15):
+                db.put(f"b{i:04d}".encode(), (b"v%d_" % i) * 40)
+            db.flush()
+            db.wait_idle()
+            self._corrupt(os.path.join(db.path, f"{fno:06d}.sst"))
+            bv = os.path.join(db.path, "bvalue")
+            victim = next(
+                n for n in sorted(os.listdir(bv))
+                if os.path.getsize(os.path.join(bv, n))
+            )
+            self._corrupt(os.path.join(bv, victim), off=8)
+
+            report = db.verify_integrity()
+            assert len(report["findings"]) >= 2
+            kinds = {f["kind"] for f in report["findings"]}
+            assert "sst_block" in kinds and "bvalue" in kinds
+            for f in report["findings"]:
+                assert f["file"] is not None
+                assert f["error"]
+        finally:
+            db.close()
+
+    def test_fail_fast_raises_on_first(self, tmp_path):
+        db = DB(str(tmp_path / "db"), _cfg())
+        try:
+            for i in range(10):
+                db.put(f"f{i:04d}".encode(), b"x" * 30)
+            db.flush()
+            db.wait_idle()
+            fno = db.versions.current.levels[0][0].file_no
+            self._corrupt(os.path.join(db.path, f"{fno:06d}.sst"))
+            with pytest.raises(CorruptionError):
+                db.verify_integrity(fail_fast=True)
+        finally:
+            db.close()
+
+
+# ---------------------------------------------------------------------------
+# randomized failover harness (smoke; CI runs the long loop)
+# ---------------------------------------------------------------------------
+def test_failover_harness_smoke():
+    report = run_failover_loop(iters=8, seed=123)
+    assert report["iterations"] == 8
+    assert report["failures"] == []
+
+
+def test_failover_iteration_deterministic(tmp_path):
+    from repro.testing.failover_harness import run_iteration
+
+    a = run_iteration(5, "sync", str(tmp_path / "a"))
+    b = run_iteration(5, "sync", str(tmp_path / "b"))
+    assert a["scenario"] == b["scenario"]
+    assert a["violations"] == b["violations"] == []

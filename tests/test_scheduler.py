@@ -406,14 +406,22 @@ def test_auto_gc_triggers_after_compaction(tmp_db_dir):
 def test_pick_never_truncates_overlaps(tmp_db_dir):
     db = _db(tmp_db_dir)
     try:
-        _fill(db, 1500, value_size=512)
-        db.flush()
-        db.compact_all()  # builds a multi-level structure
-        v = db.versions.current
-        level = next(
-            (l for l in range(1, len(v.levels) - 1) if v.levels[l] and v.levels[l + 1]),
-            None,
-        )
+        # build a structure with two adjacent populated levels; compaction
+        # job interleaving is nondeterministic, so compact_all sometimes
+        # settles everything into ONE level — keep feeding fresh keyspace
+        # until an adjacent pair exists
+        level = None
+        for round_ in range(6):
+            _fill(db, 1500, value_size=512, seed=round_, prefix=f"r{round_}/")
+            db.flush()
+            db.compact_all()
+            v = db.versions.current
+            level = next(
+                (l for l in range(1, len(v.levels) - 1) if v.levels[l] and v.levels[l + 1]),
+                None,
+            )
+            if level is not None:
+                break
         assert level is not None, [len(lv) for lv in v.levels]
         # an absurdly small cap must steer the pick, never shrink the
         # overlap set — a truncated set would leave the merged output
