@@ -35,6 +35,8 @@ def _rows_for(name: str, res: dict) -> list[tuple]:
                 f"{c['workload']}/v{c.get('format', '?')}/"
                 f"{'cache' if c.get('cache') else 'nocache'}"
             )
+            if "cache_policy" in c:  # PR-9 2Q-vs-LRU mixed cells
+                label += f"/{c['cache_policy']}"
             rows.append((name, label, c.get("ops_per_s"), None, None))
         elif "threads" in c:  # writepath
             label = f"{c.get('wal', '?')}/t{c['threads']}/{c.get('mode', '?')}"

@@ -5,12 +5,16 @@ PR-3 read-stack grid:
 
 * workload — ``uniform`` (random over the whole keyspace) vs ``zipfian``
   (YCSB-style hot set, theta 0.99: the workload a block cache exists for),
-  plus ``scan`` (``scan(start, 10)`` from uniform-random starts) and
+  plus ``scan`` (``scan(start, 10)`` from uniform-random starts),
   ``cursor`` (PR-7 iterator: ``seek(start)`` + 10 × ``next()`` on a pinned
-  snapshot view — the streaming path ``scan`` is now a wrapper over);
+  snapshot view — the streaming path ``scan`` is now a wrapper over), and
+  ``multiget`` (PR-9 batched path: the same zipfian key stream issued as
+  ``multi_get`` batches of 64 — one memtable/version resolve, vectorized
+  bloom probes, and block-coalesced table reads per batch);
 * cache — shared block cache on (default capacity) vs ``block_cache_bytes=0``;
-* format — SSTable block format ``v2`` (restart points, intra-block binary
-  search) vs ``v1`` (the pre-PR-3 linear-decode blocks).
+* format — SSTable block format ``v4`` (prefix-compressed keys inside
+  restart intervals) vs ``v2`` (restart points, intra-block binary search)
+  vs ``v1`` (the pre-PR-3 linear-decode blocks).
 
 Each (format, cache) variant gets its own DB, filled identically (inline
 values — the bench isolates the key/metadata path from BValue separation)
@@ -45,7 +49,25 @@ Emits ``BENCH_readpath.json``. Row schema (one row = one ``cells`` entry)::
 * ``cursor_cache_speedup_v2`` — cursor walks, cache on ÷ off (v2);
 * ``cursor_vs_scan_v2_cache_on`` — cursor walk ÷ ``scan`` ops/s, v2 with
   the cache on; ``scan`` streams from the same cursor, so this ratio is
-  the wrapper overhead and should sit near 1.0.
+  the wrapper overhead and should sit near 1.0;
+* ``multiget_speedup_v4`` — the PR-9 headline: batch-64 ``multi_get``
+  keys/s ÷ sequential ``get`` ops/s, same zipfian stream, v4 cache-on
+  (acceptance floor 1.5; the batch amortizes per-op snapshot/version
+  resolution and probes all table blooms in one numpy pass);
+* ``uniform_v4_over_v2_cache_off`` — uniform point-gets, v4 ÷ v2 with the
+  cache disabled: prefix-compressed blocks must NOT regress scalar gets
+  (restart entries are self-parseable, so binary search is unchanged and
+  only the short intra-interval walk decodes prefixes);
+* ``mixed_2q_over_lru_hit_rate`` — from the mixed cells: point-get hit
+  rate under 2Q ÷ under plain LRU when a cursor sweep of the whole
+  keyspace is interleaved with hot-set point-gets against a cache far
+  smaller than the sweep (scan resistance: must be > 1).
+
+Mixed cells (``workload == "mixed"``) run OUTSIDE the main grid: two
+identical v4 DBs differing only in ``block_cache_policy`` serve rounds of
+hot-set point-gets punctuated by full-keyspace cursor sweeps; the recorded
+``hit_rate`` counts the point-get phases only (deltas around each phase),
+because the sweep phase misses almost everything under either policy.
 
 The summary deliberately carries NO cache-on v1-vs-v2 ratio: warm cached
 blocks serve from materialized key→entry dicts, a code path identical for
@@ -70,7 +92,11 @@ from .common import zipf_indices
 VALUE_SIZE = 100  # inline (< value_threshold): isolates the key/block path
 KEY_FMT = "user%012d"
 
+MULTIGET_BATCH = 64
+
 VARIANTS = [  # (format_version, cache_enabled)
+    (4, True),
+    (4, False),
     (2, True),
     (2, False),
     (1, True),
@@ -78,24 +104,23 @@ VARIANTS = [  # (format_version, cache_enabled)
 ]
 
 
-def _build_db(fmt: int, cache: bool, records: int) -> tuple[DB, str]:
+def _build_db(fmt: int, cache: bool, records: int, **overrides) -> tuple[DB, str]:
     path = tempfile.mkdtemp(prefix=f"rp_v{fmt}_{'c' if cache else 'n'}_")
-    db = DB(
-        path,
-        DBConfig(
-            separation_mode="wal",
-            wal_mode="off",  # fill speed; reads never touch the WAL
-            value_threshold=4096,
-            memtable_size=256 << 10,  # small: force rotations + compactions
-            # drain L0 completely: compaction timing is nondeterministic, and
-            # two variants ending with different L0 file counts would pay
-            # different per-get candidate/bloom costs — the grid must compare
-            # formats and caching over IDENTICAL tree shapes.
-            l0_compaction_trigger=1,
-            sstable_format_version=fmt,
-            block_cache_bytes=(8 << 20) if cache else 0,
-        ),
+    kw = dict(
+        separation_mode="wal",
+        wal_mode="off",  # fill speed; reads never touch the WAL
+        value_threshold=4096,
+        memtable_size=256 << 10,  # small: force rotations + compactions
+        # drain L0 completely: compaction timing is nondeterministic, and
+        # two variants ending with different L0 file counts would pay
+        # different per-get candidate/bloom costs — the grid must compare
+        # formats and caching over IDENTICAL tree shapes.
+        l0_compaction_trigger=1,
+        sstable_format_version=fmt,
+        block_cache_bytes=(8 << 20) if cache else 0,
     )
+    kw.update(overrides)
+    db = DB(path, DBConfig(**kw))
     val = b"\x5a" * VALUE_SIZE
     for i in range(records):
         db.put((KEY_FMT % i).encode(), val)
@@ -121,6 +146,17 @@ def _time_scans(db: DB, starts: list[bytes], count: int) -> float:
     return time.monotonic() - t0
 
 
+def _time_multi_gets(db: DB, keys: list[bytes], batch: int = MULTIGET_BATCH) -> float:
+    mg = db.multi_get
+    t0 = time.monotonic()
+    for i in range(0, len(keys), batch):
+        chunk = keys[i : i + batch]
+        got = mg(chunk)
+        if any(v is None for v in got):
+            raise RuntimeError("benchmark key missing")
+    return time.monotonic() - t0
+
+
 def _time_cursors(db: DB, starts: list[bytes], count: int) -> float:
     t0 = time.monotonic()
     for s in starts:
@@ -131,6 +167,63 @@ def _time_cursors(db: DB, starts: list[bytes], count: int) -> float:
                 n += 1
                 ok = cur.next()
     return time.monotonic() - t0
+
+
+def _run_mixed_policy(records: int, rounds: int = 10, hot_gets: int = 200) -> list[dict]:
+    """Scan-resistance cells: hot-set point-gets interleaved with full
+    cursor sweeps, cache ~2x+ smaller than the swept data, 2Q vs LRU.
+
+    Geometry matters here: 512 B blocks make the sweep span hundreds of
+    blocks while the hot set (first 80 records) stays inside a ~20-block
+    working set, and the 128 KiB cache is sized so the hot set fits in Am
+    but a single sweep overflows the whole budget — the exact regime where
+    LRU loses its working set and 2Q must not."""
+    rng = np.random.default_rng(7)
+    hot = [(KEY_FMT % i).encode() for i in
+           rng.integers(0, min(80, records), size=hot_gets)]
+    cache_bytes = 128 << 10
+    cells = []
+    for policy in ("2q", "lru"):
+        db, path = _build_db(4, True, records,
+                             block_cache_policy=policy,
+                             block_cache_bytes=cache_bytes,
+                             block_size=512)
+        try:
+            hits = misses = 0
+            t_get = 0.0
+            _time_gets(db, hot)  # warm: earn Am residency before measuring
+            for _ in range(rounds):
+                with db.iterator() as cur:  # the sweep a cache must survive
+                    ok = cur.seek(b"")
+                    while ok:
+                        ok = cur.next()
+                st0 = db.stats.snapshot()
+                t_get += _time_gets(db, hot)
+                st1 = db.stats.snapshot()
+                hits += st1["block_cache_hits"] - st0["block_cache_hits"]
+                misses += st1["block_cache_misses"] - st0["block_cache_misses"]
+            total = hits + misses
+            cells.append({
+                "workload": "mixed",
+                "format": 4,
+                "cache": True,
+                "cache_policy": policy,
+                "n": rounds * hot_gets,
+                "seconds": t_get,
+                "ops_per_s": rounds * hot_gets / t_get,
+                "hit_rate": hits / total if total else 0.0,
+                "cache_bytes": cache_bytes,
+            })
+            print(
+                f"mixed    v4 policy={policy:3s}: "
+                f"{cells[-1]['ops_per_s']:9.0f} ops/s  "
+                f"pointget_hit_rate={cells[-1]['hit_rate']:.2f}",
+                flush=True,
+            )
+        finally:
+            db.close()
+            shutil.rmtree(path, ignore_errors=True)
+    return cells
 
 
 def run(records: int = 8000, ops: int = 12000, scans: int = 600,
@@ -155,6 +248,7 @@ def run(records: int = 8000, ops: int = 12000, scans: int = 600,
         workloads = {
             "zipfian": lambda db: (len(zipf_keys), _time_gets(db, zipf_keys)),
             "uniform": lambda db: (len(uni_keys), _time_gets(db, uni_keys)),
+            "multiget": lambda db: (len(zipf_keys), _time_multi_gets(db, zipf_keys)),
             "scan": lambda db: (len(starts), _time_scans(db, starts, scan_count)),
             "cursor": lambda db: (len(starts), _time_cursors(db, starts, scan_count)),
         }
@@ -204,19 +298,31 @@ def run(records: int = 8000, ops: int = 12000, scans: int = 600,
             if c["workload"] == workload and c["format"] == fmt and c["cache"] == cache
         )["ops_per_s"]
 
+    mixed = _run_mixed_policy(records)
+    mixed_rate = {c["cache_policy"]: c["hit_rate"] for c in mixed}
+    cells.extend(mixed)
+
     summary = {
         "zipfian_cache_speedup_v2": cell("zipfian", 2, True) / cell("zipfian", 2, False),
         "zipfian_cache_speedup_v1": cell("zipfian", 1, True) / cell("zipfian", 1, False),
+        "zipfian_cache_speedup_v4": cell("zipfian", 4, True) / cell("zipfian", 4, False),
         "uniform_cache_speedup_v2": cell("uniform", 2, True) / cell("uniform", 2, False),
         "uniform_v2_over_v1_cache_off": cell("uniform", 2, False) / cell("uniform", 1, False),
+        "uniform_v4_over_v2_cache_off": cell("uniform", 4, False) / cell("uniform", 2, False),
         "scan_cache_speedup_v2": cell("scan", 2, True) / cell("scan", 2, False),
         "cursor_cache_speedup_v2": cell("cursor", 2, True) / cell("cursor", 2, False),
         "cursor_vs_scan_v2_cache_on": cell("cursor", 2, True) / cell("scan", 2, True),
+        "multiget_speedup_v4": cell("multiget", 4, True) / cell("zipfian", 4, True),
+        "multiget_speedup_v4_cache_off": cell("multiget", 4, False) / cell("zipfian", 4, False),
+        "mixed_2q_hit_rate": mixed_rate["2q"],
+        "mixed_lru_hit_rate": mixed_rate["lru"],
+        "mixed_2q_over_lru_hit_rate": mixed_rate["2q"] / max(mixed_rate["lru"], 1e-9),
     }
     return {
         "config": {
             "records": records, "ops": ops, "scans": scans,
             "scan_count": scan_count, "value_size": VALUE_SIZE, "repeat": repeat,
+            "multiget_batch": MULTIGET_BATCH,
         },
         "cells": cells,
         "summary": summary,

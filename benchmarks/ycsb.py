@@ -8,6 +8,13 @@ and reports the shared block-cache hit rate; the ``bvlsm-blockcache``
 variant re-runs BVLSM with ``block_cache_bytes=0`` so the block cache's
 contribution to read/scan latency is isolated the same way the BVCache
 ablation isolates big-value caching.
+
+``--workload multiget`` (PR 9) runs the batched-read variant instead:
+read-only ``multi_get`` batches of 8/64/256 keys over uniform and zipfian
+key streams against a preloaded BVLSM store, reporting per-batch p50/p99
+latency and keys/s next to a sequential-``get`` baseline over the same
+streams. ``--format-version`` pins ``sstable_format_version`` for the
+store (any workload), so v2-vs-v4 batched reads are one flag apart.
 """
 from __future__ import annotations
 
@@ -17,13 +24,92 @@ import time
 
 import numpy as np
 
+from repro.core.sstable import FORMAT_VERSION
+
 from .common import cleanup, gen_value, make_db, zipf_indices
+
+
+MULTIGET_BATCHES = (8, 64, 256)
+
+
+def run_multiget(records: int = 5000, ops: int = 4000, value_size: int = 8192,
+                 wal: str = "async", format_version: int | None = None) -> list[dict]:
+    """Batched-read grid: dist x batch, per-batch p50/p99 + keys/s, with a
+    sequential-get baseline row (batch=1) per distribution."""
+    out = []
+    rng = np.random.default_rng(42)
+    overrides = {}
+    if format_version is not None:
+        overrides["sstable_format_version"] = format_version
+    db, path = make_db("bvlsm", wal, **overrides)
+    try:
+        val = gen_value(value_size, 3)
+        for i in range(records):
+            db.put(f"user{i:012d}".encode(), val)
+        db.flush()
+        db.wait_idle()
+        streams = {
+            "zipfian": zipf_indices(rng, records, ops),
+            "uniform": rng.integers(0, records, size=ops),
+        }
+        for dist, idx in streams.items():
+            keys = [f"user{i:012d}".encode() for i in idx]
+            for k in keys[: ops // 4]:  # warm both caches identically
+                db.get(k)
+            # baseline: the same stream, one get per key
+            lat = []
+            t0 = time.monotonic()
+            for k in keys:
+                t1 = time.monotonic()
+                v = db.get(k)
+                lat.append(time.monotonic() - t1)
+                assert v is not None
+            base_s = time.monotonic() - t0
+            base_keys_s = ops / base_s
+            rows = [(1, lat, base_keys_s)]
+            for batch in MULTIGET_BATCHES:
+                lat = []
+                t0 = time.monotonic()
+                for i in range(0, ops, batch):
+                    chunk = keys[i : i + batch]
+                    t1 = time.monotonic()
+                    got = db.multi_get(chunk)
+                    lat.append(time.monotonic() - t1)
+                    assert all(v is not None for v in got)
+                rows.append((batch, lat, ops / (time.monotonic() - t0)))
+            st = db.stats.snapshot()
+            for batch, lat, keys_s in rows:
+                a = np.array(lat) * 1e6
+                rec = {
+                    "bench": "ycsb_multiget",
+                    "system": "bvlsm",
+                    "wal": wal,
+                    "format": format_version if format_version is not None else FORMAT_VERSION,
+                    "dist": dist,
+                    "batch": batch,
+                    "batch_p50_us": float(np.percentile(a, 50)),
+                    "batch_p99_us": float(np.percentile(a, 99)),
+                    "keys_per_s": keys_s,
+                    "speedup_vs_get": keys_s / base_keys_s,
+                    "block_cache_hit_rate": st["block_cache_hit_rate"],
+                }
+                out.append(rec)
+                label = "get" if batch == 1 else f"multi_get x{batch}"
+                print(
+                    f"ycsb-mget {dist:8s} {label:14s}: {keys_s:9.0f} keys/s  "
+                    f"p50={rec['batch_p50_us']:7.1f}us p99={rec['batch_p99_us']:8.1f}us  "
+                    f"({rec['speedup_vs_get']:.2f}x)",
+                    flush=True,
+                )
+    finally:
+        cleanup(db, path)
+    return out
 
 
 def run(records: int = 5000, ops: int = 4000, value_size: int = 8192,
         wal: str = "async", systems=("rocksdb", "blobdb", "bvlsm"),
         bvcache_ablation: bool = True, block_cache_ablation: bool = True,
-        scan_count: int = 10) -> list[dict]:
+        scan_count: int = 10, format_version: int | None = None) -> list[dict]:
     out = []
     rng = np.random.default_rng(42)
     idx = zipf_indices(rng, records, ops)
@@ -43,6 +129,8 @@ def run(records: int = 5000, ops: int = 4000, value_size: int = 8192,
     for system, wal_mode, overrides in variants:
         real_system = system.split("_sync")[0] if "_sync" in system else system
         real_system = real_system.split("-blockcache")[0]
+        if format_version is not None:
+            overrides = {**overrides, "sstable_format_version": format_version}
         db, path = make_db(real_system, wal_mode, **overrides)
         try:
             ins_lat = []
@@ -113,9 +201,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--records", type=int, default=5000)
     ap.add_argument("--ops", type=int, default=4000)
+    ap.add_argument("--workload", choices=("a", "multiget"), default="a",
+                    help="'a' = YCSB-A grid; 'multiget' = batched-read grid")
+    ap.add_argument("--format-version", type=int, default=None,
+                    help="pin sstable_format_version for the store(s)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    res = run(args.records, args.ops)
+    if args.workload == "multiget":
+        res = run_multiget(args.records, args.ops, format_version=args.format_version)
+    else:
+        res = run(args.records, args.ops, format_version=args.format_version)
     if args.out:
         json.dump(res, open(args.out, "w"), indent=2)
 

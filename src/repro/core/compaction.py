@@ -562,6 +562,22 @@ class Compactor:
         db = self.db
         cfg = db.cfg
         limiter = db.rate_limiter
+        # meter the merge's block READS against the unified budget at LOW
+        # priority, charged at pread time (cache hits never pay). Batched
+        # into IO_CHUNK lumps like the write side so the token bucket's
+        # lock isn't taken once per 4 KiB block.
+        meter = None
+        pending_read = 0
+        if cfg.compaction_read_metering and limiter.enabled:
+
+            def meter(nbytes: int) -> None:
+                nonlocal pending_read
+                pending_read += nbytes
+                if pending_read >= IO_CHUNK:
+                    limiter.request(pending_read, PRI_LOW)
+                    db.stats.add("compaction_read_metered_bytes", pending_read)
+                    pending_read = 0
+
         iters = []
         shard_tombs: list[tuple[int, bytes, bytes]] = []
         for f in inputs + overlaps:
@@ -576,7 +592,9 @@ class Compactor:
                 if a2 < b2:
                     shard_tombs.append((ts, a2, b2))
             iters.append(
-                r.iter_from(lo, fill_cache=fill) if lo is not None else r.iter_all(fill_cache=fill)
+                r.iter_from(lo, fill_cache=fill, meter=meter)
+                if lo is not None
+                else r.iter_all(fill_cache=fill, meter=meter)
             )
 
         def bucket(seq):
@@ -710,4 +728,7 @@ class Compactor:
                     pass
             raise
         limiter.request(pending_io, PRI_LOW)
+        if pending_read:
+            limiter.request(pending_read, PRI_LOW)
+            db.stats.add("compaction_read_metered_bytes", pending_read)
         return metas

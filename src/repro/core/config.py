@@ -166,13 +166,18 @@ class DBConfig:
     # --- sstable ---
     block_size: int = 4096
     compression: bool = False
-    # on-disk block format the WRITERS emit: 3 = v2 + range-tombstone side
-    # block and multi-version (user_key, seq desc) runs, 2 = restart-point
-    # blocks (intra-block binary search), 1 = the pre-restart linear format.
-    # Readers always decode all three, so mixed-version DB directories are
-    # fine — but range deletes require v3 (delete_range raises below it).
-    sstable_format_version: int = 3
+    # on-disk block format the WRITERS emit: 4 = v3 + prefix-compressed
+    # keys inside restart intervals, 3 = v2 + range-tombstone side block
+    # and multi-version (user_key, seq desc) runs, 2 = restart-point blocks
+    # (intra-block binary search), 1 = the pre-restart linear format.
+    # Readers always decode all four, so mixed-version DB directories are
+    # fine — but range deletes require v3+ (delete_range raises below it).
+    sstable_format_version: int = 4
     block_restart_interval: int = 16  # entries per restart point (v2 blocks)
+    # --- batched reads ---
+    # DB.multi_get slices caller batches to this size so one huge batch
+    # can't pin a version/memtable set for an unbounded stretch.
+    multi_get_max_batch: int = 1024
     # --- MVCC: snapshots / cursors / range deletes / checkpoint ---
     # hard cap on concurrently live Snapshot objects (cursors pin one
     # each). Every live snapshot widens memtable/compaction version
@@ -199,6 +204,21 @@ class DBConfig:
     # a one-shot merge can't evict the foreground working set. False lets
     # compaction warm the cache (useful when compaction output is hot).
     block_cache_compaction_bypass: bool = True
+    # admission policy: "2q" (default) holds first-touch blocks in a
+    # probationary FIFO (A1in) and only promotes to the main LRU (Am) on
+    # re-reference — or on readmission while the block's key is still in
+    # the A1out ghost history — so one-shot cursor sweeps can't flush the
+    # point-get working set. "lru" restores the plain LRU of PR 3.
+    block_cache_policy: str = "2q"  # 2q | lru
+    # fraction of each shard's capacity reserved for the A1in probationary
+    # queue (2Q only); the ghost list remembers ~cap/avg_block_size
+    # recently evicted probationary keys at zero byte cost.
+    block_cache_a1_fraction: float = 0.25
+    # charge compaction's block READS against the unified I/O budget at
+    # LOW priority when the bucket is enabled (bg_io_bytes_per_sec > 0),
+    # so a read-heavy merge can no longer starve foreground unseen. False
+    # restores write-only metering.
+    compaction_read_metering: bool = True
     # --- BValue multi-queue store (paper §III-C) ---
     num_bvalue_queues: int = 4
     bvalue_dispatch: str = "round_robin"  # round_robin | least_loaded

@@ -63,6 +63,7 @@ background output bytes paced by the shared token bucket
 """
 from __future__ import annotations
 
+import bisect
 import os
 import threading
 import time
@@ -474,11 +475,16 @@ class DB:
         self._persist_ewma: float | None = None
         self._mt_pool = None  # lazy ThreadPoolExecutor for sharded apply
 
-        # shared decoded-block cache (read path): one LRU for every SSTable
-        # reader — foreground gets, scans, and (read-through only, by
-        # default) compaction. None when disabled so readers skip lookups.
+        # shared decoded-block cache (read path): one 2Q/LRU for every
+        # SSTable reader — foreground gets, scans, and (read-through only,
+        # by default) compaction. None when disabled so readers skip lookups.
         self.block_cache = (
-            BlockCache(self.cfg.block_cache_bytes, self.cfg.block_cache_shards)
+            BlockCache(
+                self.cfg.block_cache_bytes,
+                self.cfg.block_cache_shards,
+                policy=self.cfg.block_cache_policy,
+                a1_fraction=self.cfg.block_cache_a1_fraction,
+            )
             if self.cfg.block_cache_bytes > 0
             else None
         )
@@ -1312,6 +1318,125 @@ class DB:
         except CorruptionError as e:
             self.errors.on_corruption(e)  # quarantine the value-log file
             raise
+
+    def multi_get(
+        self, keys, snapshot: Snapshot | None = None
+    ) -> list[bytes | None]:
+        """Batched point lookup: resolve many keys in one pass, returning a
+        list of values (``None`` for absent/deleted) aligned with ``keys``.
+
+        Semantically identical to ``[self.get(k, snapshot) for k in keys]``
+        but structured for batch efficiency: the (memtables, version) pair
+        is snapshotted ONCE per chunk; per level, every still-unresolved
+        key is probed against a candidate table's bloom filter in a single
+        vectorized call (:meth:`BloomFilter.may_contain_many`); and keys
+        landing in the same data block decode it once
+        (:meth:`SSTableReader.get_many`). Chunks are capped at
+        ``DBConfig.multi_get_max_batch`` so one huge batch can't pin a
+        version for an unbounded stretch."""
+        keys = [bytes(k) for k in keys]
+        if not keys:
+            return []
+        read_seq = MAX_SEQ if snapshot is None else snapshot.seq
+        self.stats.add("multi_gets")
+        self.stats.add("multi_get_keys", len(keys))
+        out: dict[bytes, bytes | None] = {}
+        cap = max(1, self.cfg.multi_get_max_batch)
+        for i in range(0, len(keys), cap):
+            # dedup (order-preserving): each distinct key resolves once
+            chunk = list(dict.fromkeys(keys[i : i + cap]))
+            # same lock-free retry protocol as ``get`` (see there): a walk
+            # torn by a concurrent compaction retries the whole chunk on a
+            # fresh (memtables, version) pair.
+            for _attempt in range(8):
+                with self.mutex:
+                    tables = [self.mem, *reversed(self.immutables)]
+                    version = self.versions.current
+                try:
+                    resolved = self._multi_lookup_at(
+                        chunk, read_seq, tables, version
+                    )
+                except (OSError, ValueError) as e:
+                    if self.versions.current is version:
+                        if isinstance(e, CorruptionError):
+                            self.errors.on_corruption(e)
+                        raise  # stable snapshot: real I/O or corruption
+                    continue  # snapshot superseded mid-walk — retry
+                # misses are only trustworthy on an unmoved version; under
+                # sustained churn accept the last answer rather than spin
+                if self.versions.current is version or _attempt == 7:
+                    out.update(resolved)
+                    break
+        return [out.get(k) for k in keys]
+
+    def _multi_lookup_at(self, keys, read_seq: int, tables, version) -> dict:
+        """One batched MVCC lookup over a fixed (memtables, version) pair.
+        Returns ``{key: value-or-None}`` for every key. Level by level:
+        keys already resolved at a shallower level drop out (deeper data is
+        strictly older), in-level files still contribute range-tombstone
+        seqs for keys they cover (same invariant as ``_lookup_at``: the
+        max covering tombstone must include the hit's own level)."""
+        tomb = dict.fromkeys(keys, 0)
+        hit: dict[bytes, tuple | None] = dict.fromkeys(keys)
+        # memtables stay scalar — pure in-memory probes, strictly newer
+        # than any table data
+        pending = []
+        for key in keys:
+            for t in tables:
+                ts = t.covering_tombstone_seq(key, read_seq)
+                if ts > tomb[key]:
+                    tomb[key] = ts
+                found, seq, type_, value = t.get_at(key, read_seq)
+                if found:
+                    hit[key] = (seq, type_, value)
+                    break
+            if hit[key] is None:
+                pending.append(key)
+        snap_seq = None if read_seq == MAX_SEQ else read_seq
+        for level, files in enumerate(version.levels):
+            pending = [k for k in pending if hit[k] is None]
+            if not pending or not files:
+                continue
+            if level == 0:
+                # L0 files overlap; probe in list order (newest first)
+                groups = [
+                    (i, [k for k in pending if f.smallest <= k <= f.largest])
+                    for i, f in enumerate(files)
+                ]
+            else:
+                # sorted level: bisect each key to its file; bounds extended
+                # by range tombstones can make two files TOUCH on one key —
+                # keep walking while smallest <= key (at most one extra),
+                # earlier file first (it holds the newer versions)
+                largests = [f.largest for f in files]
+                gm: dict[int, list[bytes]] = {}
+                for k in pending:
+                    fi = bisect.bisect_left(largests, k)
+                    while fi < len(files) and files[fi].smallest <= k:
+                        gm.setdefault(fi, []).append(k)
+                        fi += 1
+                groups = sorted(gm.items())
+            for fi, ks in groups:
+                if not ks:
+                    continue
+                reader = self.versions.reader(files[fi].file_no)
+                if reader.range_tombstones:
+                    for k in ks:
+                        ts = reader.max_tombstone_seq(k, read_seq)
+                        if ts > tomb[k]:
+                            tomb[k] = ts
+                probe = [k for k in ks if hit[k] is None]
+                if probe:
+                    for k, ent in reader.get_many(probe, read_seq=snap_seq).items():
+                        hit[k] = ent
+        out = {}
+        for k in keys:
+            h = hit[k]
+            if h is None or h[0] < tomb[k] or h[1] == kTypeDeletion:
+                out[k] = None
+            else:
+                out[k] = self._resolve(k, h[1], h[2])
+        return out
 
     def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
         """Return up to ``count`` live ``(key, value)`` pairs with

@@ -13,8 +13,17 @@ File layout::
   entry boundary, one per ``restart_interval`` entries. Point lookups
   binary-search the restart array (decoding only one key per probe) and
   then decode at most ``restart_interval`` entries — replacing v1's
-  full-block linear decode. Entries are not prefix-compressed, so every
-  restart offset is self-parseable.
+  full-block linear decode. v2/v3 entries are not prefix-compressed, so
+  every entry boundary is self-parseable.
+
+  **Format v4** prefix-compresses keys inside each restart interval
+  (LevelDB-style): ``varint(shared) varint(non_shared) key_suffix
+  varint(seq) type(1B) varint(vlen) value`` where ``shared`` is the byte
+  length of the prefix reused from the PREVIOUS entry's key. Every restart
+  entry writes ``shared = 0`` (full key), so restart offsets stay
+  self-parseable and the v2 restart binary search works unchanged; only
+  the linear walk between restarts becomes stateful (it rebuilds keys from
+  the running previous key).
 * filter block — :class:`~repro.core.bloom.BloomFilter` over user keys.
 * index block — msgpack list of ``(last_key, offset, length[, crc32])``;
   the optional 4th element is the block's crc32, verified on read under
@@ -25,12 +34,14 @@ File layout::
   index block and the footer. Empty list when the table has none.
 * footer — v1: fixed 40 B ``filter_off, filter_len, index_off, index_len,
   magic``; v2: fixed 48 B with a ``version`` field before a new magic;
-  v3: fixed 64 B adding ``range_off, range_len`` before the version field.
-  Readers dispatch on the trailing magic, so v1 tables written by older
-  code keep decoding forever (compat rule: readers support every version
-  ≤ FORMAT_VERSION; writers emit ``DBConfig.sstable_format_version``).
+  v3/v4: fixed 64 B adding ``range_off, range_len`` before the version
+  field (v4 shares the v3 footer layout and magic — the version field
+  disambiguates). Readers dispatch on the trailing magic, so v1 tables
+  written by older code keep decoding forever (compat rule: readers
+  support every version ≤ FORMAT_VERSION; writers emit
+  ``DBConfig.sstable_format_version``).
 
-A user key may appear MULTIPLE times within a table (format v3 / MVCC):
+A user key may appear MULTIPLE times within a table (format v3+ / MVCC):
 entries are sorted by (user_key asc, seq desc), so the first occurrence of
 a key is its newest version — point lookups still resolve on the first hit.
 Single-version tables behave exactly as before.
@@ -76,7 +87,15 @@ _MAGIC_V3 = 0xB7_15_3D_CA_FE_10_57_03
 _U32 = struct.Struct("<I")
 
 #: newest on-disk format this build writes (and the max it can read)
-FORMAT_VERSION = 3
+FORMAT_VERSION = 4
+
+
+def _shared_prefix_len(a: bytes, b: bytes) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
 
 
 @dataclass(slots=True)
@@ -143,20 +162,41 @@ class SSTableWriter:
         if self.smallest is None:
             self.smallest = key
         dup = key == self.largest
+        prev_key = self.largest
         self.largest = key
         self._last_seq = seq
-        ent = b"".join(
-            (
-                encode_varint(len(key)),
-                key,
-                encode_varint(seq),
-                bytes([type_]),
-                encode_varint(len(value)),
-                value,
-            )
-        )
-        if len(self._block) % self.restart_interval == 0:
+        at_restart = len(self._block) % self.restart_interval == 0
+        if at_restart:
             self._restarts.append(self._block_bytes)
+        if self.format_version >= 4:
+            # prefix-compress against the previous entry IN THIS BLOCK;
+            # restart entries always carry the full key (shared = 0) so
+            # restart offsets stay self-parseable
+            shared = 0
+            if not at_restart and self._block:
+                shared = _shared_prefix_len(prev_key, key)
+            ent = b"".join(
+                (
+                    encode_varint(shared),
+                    encode_varint(len(key) - shared),
+                    key[shared:],
+                    encode_varint(seq),
+                    bytes([type_]),
+                    encode_varint(len(value)),
+                    value,
+                )
+            )
+        else:
+            ent = b"".join(
+                (
+                    encode_varint(len(key)),
+                    key,
+                    encode_varint(seq),
+                    bytes([type_]),
+                    encode_varint(len(value)),
+                    value,
+                )
+            )
         self._block.append(ent)
         self._block_bytes += len(ent)
         if not dup:  # bloom + last-key tracking want distinct user keys
@@ -268,6 +308,31 @@ def _entry_key(raw: bytes, pos: int) -> bytes:
     return raw[pos : pos + klen]
 
 
+def _parse_entry_pfx(raw: bytes, pos: int, prev_key: bytes) -> tuple[bytes, int, int, bytes, int]:
+    """Decode one prefix-compressed (v4) entry at ``pos``; the key is
+    rebuilt from ``prev_key``'s shared prefix + the stored suffix."""
+    shared, pos = decode_varint(raw, pos)
+    non_shared, pos = decode_varint(raw, pos)
+    suffix = raw[pos : pos + non_shared]
+    key = prev_key[:shared] + suffix if shared else suffix
+    pos += non_shared
+    seq, pos = decode_varint(raw, pos)
+    type_ = raw[pos]
+    pos += 1
+    vlen, pos = decode_varint(raw, pos)
+    value = raw[pos : pos + vlen]
+    pos += vlen
+    return key, seq, type_, value, pos
+
+
+def _restart_key_pfx(raw: bytes, pos: int) -> bytes:
+    """Decode only the user key of the v4 entry at a RESTART offset
+    (``shared`` is 0 there, so the stored suffix is the whole key)."""
+    _shared, pos = decode_varint(raw, pos)
+    klen, pos = decode_varint(raw, pos)
+    return raw[pos : pos + klen]
+
+
 class Block:
     """One decoded data block: entry bytes plus (v2) the restart array.
 
@@ -280,7 +345,7 @@ class Block:
     """
 
     __slots__ = (
-        "raw", "limit", "restarts", "_gets", "_entries", "_keys", "_kv",
+        "raw", "limit", "restarts", "prefixed", "_gets", "_entries", "_keys", "_kv",
         "_mat_extra", "_cache", "_cache_key",
     )
 
@@ -289,6 +354,7 @@ class Block:
             raise IOError(f"unknown block encoding {blob[0]}")
         raw = _decompress(blob)
         self.restarts: tuple[int, ...] | None = None
+        self.prefixed = False  # v4 prefix-compressed entries
         self.limit = len(raw)
         self.raw = raw
         self._gets = 0
@@ -308,6 +374,7 @@ class Block:
             trailer = 4 + 4 * n_restarts
             blk.restarts = struct.unpack_from(f"<{n_restarts}I", raw, len(raw) - trailer)
             blk.limit = len(raw) - trailer
+        blk.prefixed = version >= 4
         return blk
 
     @property
@@ -330,22 +397,64 @@ class Block:
 
     def _lazy_get(self, key: bytes):
         raw, limit = self.raw, self.limit
+        prefixed = self.prefixed
         pos = 0
         if self.restarts:
             # binary search the restart array: find the LAST restart whose
             # key is strictly BELOW the target; only one key is decoded per
             # probe. (``<`` not ``<=``: with multi-version duplicate-key
             # runs a restart can land mid-run, and starting there would
-            # return an older version instead of the newest.)
+            # return an older version instead of the newest.) Restart
+            # entries always store their full key, prefixed or not.
+            restart_key = _restart_key_pfx if prefixed else _entry_key
             restarts = self.restarts
             lo, hi = 0, len(restarts) - 1
             while lo < hi:
                 mid = (lo + hi + 1) // 2
-                if _entry_key(raw, restarts[mid]) < key:
+                if restart_key(raw, restarts[mid]) < key:
                     lo = mid
                 else:
                     hi = mid - 1
             pos = restarts[lo]
+        if prefixed:
+            # in-place key reconstruction: one bytearray mutated per entry
+            # (`del buf[shared:]` + append suffix) instead of slice+concat
+            # allocations, and values of skipped entries are never sliced —
+            # this walk is HOT (every cache-off get) and must not lose to
+            # the uncompressed v2 walk it replaces
+            buf = bytearray()
+            while pos < limit:
+                # varints inlined for the one-byte case (shared/non_shared
+                # are bounded by the key length, vlen by the block size —
+                # almost always < 128): the function-call overhead per
+                # entry is what this loop's throughput lives and dies by
+                shared = raw[pos]
+                if shared < 0x80:
+                    pos += 1
+                else:
+                    shared, pos = decode_varint(raw, pos)
+                non_shared = raw[pos]
+                if non_shared < 0x80:
+                    pos += 1
+                else:
+                    non_shared, pos = decode_varint(raw, pos)
+                del buf[shared:]
+                buf += raw[pos : pos + non_shared]
+                pos += non_shared
+                seq, pos = decode_varint(raw, pos)
+                type_ = raw[pos]
+                pos += 1
+                vlen = raw[pos]
+                if vlen < 0x80:
+                    pos += 1
+                else:
+                    vlen, pos = decode_varint(raw, pos)
+                if buf == key:
+                    return key, seq, type_, raw[pos : pos + vlen]
+                if buf > key:
+                    return None
+                pos += vlen
+            return None
         while pos < limit:
             k, seq, type_, value, pos = _parse_entry(raw, pos)
             if k == key:
@@ -355,12 +464,7 @@ class Block:
         return None
 
     def _materialize(self) -> None:
-        entries = []
-        pos = 0
-        raw, limit = self.raw, self.limit
-        while pos < limit:
-            k, seq, type_, value, pos = _parse_entry(raw, pos)
-            entries.append((k, seq, type_, value))
+        entries = list(self._scan(0))
         # publication order matters: other threads gate on _kv (get) and
         # _entries (iteration), so every side structure must be complete
         # before EITHER gate field is assigned — _keys first, _kv next,
@@ -384,36 +488,48 @@ class Block:
             cache.recharge(self._cache_key, self)
 
     # -- iteration ------------------------------------------------------
+    def _scan(self, pos: int):
+        """Yield entries from ``pos`` to the block end. ``pos`` must be an
+        entry boundary — and, for prefixed (v4) blocks, a RESTART boundary
+        (mid-interval entries don't carry their full key)."""
+        raw, limit = self.raw, self.limit
+        if self.prefixed:
+            prev = b""
+            while pos < limit:
+                k, seq, type_, value, pos = _parse_entry_pfx(raw, pos, prev)
+                prev = k
+                yield k, seq, type_, value
+        else:
+            while pos < limit:
+                k, seq, type_, value, pos = _parse_entry(raw, pos)
+                yield k, seq, type_, value
+
     def __iter__(self):
         if self._entries is not None:
             yield from self._entries
             return
-        pos = 0
-        raw, limit = self.raw, self.limit
-        while pos < limit:
-            k, seq, type_, value, pos = _parse_entry(raw, pos)
-            yield k, seq, type_, value
+        yield from self._scan(0)
 
     def iter_from(self, start: bytes):
         if self._entries is not None:
             yield from self._entries[bisect.bisect_left(self._keys, start):]
             return
-        raw, limit = self.raw, self.limit
         pos = 0
         if self.restarts:
+            raw = self.raw
+            restart_key = _restart_key_pfx if self.prefixed else _entry_key
             restarts = self.restarts
             lo, hi = 0, len(restarts) - 1
             while lo < hi:
                 mid = (lo + hi + 1) // 2
-                if _entry_key(raw, restarts[mid]) < start:
+                if restart_key(raw, restarts[mid]) < start:
                     lo = mid
                 else:
                     hi = mid - 1
             pos = restarts[lo]
-        while pos < limit:
-            k, seq, type_, value, pos = _parse_entry(raw, pos)
-            if k >= start:
-                yield k, seq, type_, value
+        for ent in self._scan(pos):
+            if ent[0] >= start:
+                yield ent
 
     def largest_below(self, bound: bytes | None) -> bytes | None:
         """Largest user key strictly below ``bound`` in this block (reverse
@@ -495,7 +611,7 @@ class SSTableReader:
         self.index = [(bytes(e[0]), e[1], e[2]) for e in raw_index]
         self.block_crcs = [e[3] if len(e) > 3 else None for e in raw_index]
 
-    def _read_block(self, idx: int, fill_cache: bool = True) -> Block:
+    def _read_block(self, idx: int, fill_cache: bool = True, meter=None) -> Block:
         cache = self.cache
         if cache is not None:
             key = (self.file_no, idx)
@@ -504,6 +620,10 @@ class SSTableReader:
             if blk is not None:
                 return blk
         _, off, length = self.index[idx]
+        if meter is not None:
+            # charge the I/O budget for the bytes about to leave the disk —
+            # cache hits above never reach here, so only real preads pay
+            meter(length)
         # positional read: one reader object is shared by foreground gets
         # and background flush/compaction iterators, and a seek+read pair
         # would interleave offsets between threads (silently decoding the
@@ -584,12 +704,56 @@ class SSTableReader:
         multi-version run. Returns (found, seq, type, value)."""
         if not self.bloom.may_contain(key):
             return False, 0, 0, b""
+        return self._get_at_nobloom(key, read_seq)
+
+    def _get_at_nobloom(self, key: bytes, read_seq: int):
         for k, seq, type_, value in self.iter_from(key):
             if k != key:
                 break
             if seq <= read_seq:
                 return True, seq, type_, value
         return False, 0, 0, b""
+
+    def get_many(self, keys, read_seq: int | None = None) -> dict:
+        """Batch point lookup: all ``keys`` against this table in one pass.
+
+        Returns ``{key: (seq, type, value)}`` for the keys present (newest
+        version, or newest with ``seq <= read_seq`` when given). The whole
+        batch is bloom-probed in ONE vectorized call, survivors are grouped
+        by data block, and each block is fetched/decoded once no matter how
+        many keys land in it.
+        """
+        out: dict = {}
+        index = self.index
+        if not index or not keys:
+            return out
+        mask = self.bloom.may_contain_many(keys)
+        n_blocks = len(index)
+        by_block: dict[int, list[bytes]] = {}
+        for key, maybe in zip(keys, mask):
+            if not maybe:
+                continue
+            b = self._seek_block(key)
+            if b >= n_blocks or index[b][0] < key:
+                continue
+            by_block.setdefault(b, []).append(key)
+        if read_seq is None:
+            for b, ks in by_block.items():
+                blk = self._read_block(b)
+                for key in ks:
+                    ent = blk.get(key)
+                    if ent is not None:
+                        out[key] = (ent[1], ent[2], ent[3])
+        else:
+            # snapshot reads walk multi-version runs that may span blocks;
+            # bloom negatives are already gone and block fetches still
+            # coalesce through the cache
+            for ks in by_block.values():
+                for key in ks:
+                    found, seq, type_, value = self._get_at_nobloom(key, read_seq)
+                    if found:
+                        out[key] = (seq, type_, value)
+        return out
 
     def max_tombstone_seq(self, key: bytes, read_seq: int) -> int:
         """Max seq of a range tombstone in THIS table covering ``key`` and
@@ -619,16 +783,16 @@ class SSTableReader:
     def __iter__(self):
         yield from self.iter_all()
 
-    def iter_all(self, fill_cache: bool = True):
+    def iter_all(self, fill_cache: bool = True, meter=None):
         for i in range(len(self.index)):
-            yield from self._read_block(i, fill_cache)
+            yield from self._read_block(i, fill_cache, meter)
 
-    def iter_from(self, start: bytes, fill_cache: bool = True):
+    def iter_from(self, start: bytes, fill_cache: bool = True, meter=None):
         lo = self._seek_block(start)
         if lo < len(self.index):
-            yield from self._read_block(lo, fill_cache).iter_from(start)
+            yield from self._read_block(lo, fill_cache, meter).iter_from(start)
         for i in range(lo + 1, len(self.index)):
-            yield from self._read_block(i, fill_cache)
+            yield from self._read_block(i, fill_cache, meter)
 
     def close(self) -> None:
         self._f.close()

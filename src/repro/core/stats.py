@@ -302,5 +302,7 @@ class EngineStats:
             d.update(
                 block_cache_hits=0, block_cache_misses=0, block_cache_evictions=0,
                 block_cache_bytes=0, block_cache_entries=0, block_cache_hit_rate=0.0,
+                block_cache_promotions=0, block_cache_ghost_hits=0,
+                block_cache_a1_bytes=0,
             )
         return d

@@ -1,0 +1,556 @@
+"""Batched read path (PR 9): DB.multi_get, vectorized bloom probes,
+SSTable format v4 (prefix-compressed keys), the v1-v4 compat matrix, 2Q
+scan-resistant cache admission, and compaction read metering."""
+import os
+import random
+
+import pytest
+
+from repro.core import DB, DBConfig
+from repro.core.blockcache import BlockCache
+from repro.core.bloom import BloomFilter, _hash2
+from repro.core.sstable import (
+    FORMAT_VERSION,
+    SSTableReader,
+    SSTableWriter,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hyp_st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container ships without hypothesis; seeded fallback below
+    HAVE_HYPOTHESIS = False
+
+SMALL = dict(
+    memtable_size=64 << 10,
+    level1_max_bytes=256 << 10,
+    value_threshold=512,
+    bvcache_bytes=64 << 10,
+    l0_compaction_trigger=2,
+)
+
+
+def mk(tmp, **kw):
+    cfg = {"separation_mode": "wal", "wal_mode": "sync", **SMALL, **kw}
+    return DB(tmp, DBConfig(**cfg))
+
+
+# ---------------------------------------------------------------------------
+# format v4: prefix-compressed keys
+# ---------------------------------------------------------------------------
+
+ITEMS = [(f"user{i:06d}".encode(), i + 1, 1, bytes([i % 251]) * (i % 97)) for i in range(400)]
+
+
+def _write_table(path, *, format_version, items=ITEMS, block_size=256,
+                 restart_interval=16, compression=False):
+    w = SSTableWriter(path, block_size=block_size, compression=compression,
+                      format_version=format_version, restart_interval=restart_interval)
+    for k, s, t, v in items:
+        w.add(k, s, t, v)
+    return w.finish(1)
+
+
+@pytest.mark.parametrize("restart_interval", [1, 2, 7, 16])
+def test_v4_roundtrip(tmp_path, restart_interval):
+    path = str(tmp_path / "t.sst")
+    meta = _write_table(path, format_version=4, restart_interval=restart_interval)
+    assert meta.entries == len(ITEMS)
+    r = SSTableReader(path)
+    assert r.format_version == 4
+    for k, s, t, v in ITEMS:
+        assert r.get(k) == (True, s, t, v)
+    assert [tuple(e) for e in r] == [tuple(e) for e in ITEMS]
+    assert [k for k, *_ in r.iter_from(b"user000123")] == [k for k, *_ in ITEMS[123:]]
+    r.close()
+
+
+def test_v4_actually_compresses_shared_prefixes(tmp_path):
+    """The point of v4: long-common-prefix key sets must shrink on disk."""
+    items = [(f"tenant/alpha/user/{i:08d}".encode(), i + 1, 1, b"v") for i in range(500)]
+    p3, p4 = str(tmp_path / "a.sst"), str(tmp_path / "b.sst")
+    m3 = _write_table(p3, format_version=3, items=items)
+    m4 = _write_table(p4, format_version=4, items=items)
+    assert m4.size < m3.size * 0.8, (m3.size, m4.size)
+    r = SSTableReader(p4)
+    for k, s, t, v in items[::13]:
+        assert r.get(k) == (True, s, t, v)
+    r.close()
+
+
+def test_v4_restart_boundary_edge_keys(tmp_path):
+    """Keys ON restart boundaries carry shared=0 (self-parseable); probes
+    for the restart key itself, its immediate prefix-sharing neighbours,
+    and absent keys that sort just before/after a restart must all resolve
+    through the restart binary search."""
+    # one block, restart every 4 entries → entries 0,4,8,... are restarts
+    items = [(b"pfx" + bytes([65 + i // 10]) + f"{i:04d}".encode(), i + 1, 1, b"v%d" % i)
+             for i in range(64)]
+    path = str(tmp_path / "t.sst")
+    _write_table(path, format_version=4, items=items, block_size=1 << 20,
+                 restart_interval=4)
+    r = SSTableReader(path)
+    assert len(r.index) == 1
+    r.bloom.bits = bytearray(b"\xff" * len(r.bloom.bits))  # exercise the block search
+    for i, (k, s, t, v) in enumerate(items):
+        assert r.get(k) == (True, s, t, v), (i, k)
+    for i in (0, 4, 8, 60):  # absent keys hugging restart entries
+        k = items[i][0]
+        assert r.get(k[:-1] + b"!")[0] is False  # sorts before (ord('!')<ord('0'))
+        assert r.get(k + b"x")[0] is False  # sorts just after
+    assert r.get(b"a")[0] is False and r.get(b"zzz")[0] is False
+    # iter_from landing mid-interval must rebuild keys from the restart
+    for start_i in (1, 3, 5, 7, 63):
+        got = [k for k, *_ in r.iter_from(items[start_i][0])]
+        assert got == [k for k, *_ in items[start_i:]], start_i
+    r.close()
+
+
+def test_v4_multiversion_runs(tmp_path):
+    """(user_key asc, seq desc) duplicate runs under prefix compression:
+    consecutive identical keys share their whole prefix; newest must win on
+    point gets, get_at must reach the older version."""
+    items = []
+    for i in range(40):
+        k = f"dup{i:04d}".encode()
+        items.append((k, 1000 - i * 2, 1, b"new%d" % i))
+        items.append((k, 500 - i * 2, 1, b"old%d" % i))
+    path = str(tmp_path / "t.sst")
+    _write_table(path, format_version=4, items=items, block_size=128,
+                 restart_interval=3)
+    r = SSTableReader(path)
+    for i in range(40):
+        k = f"dup{i:04d}".encode()
+        assert r.get(k) == (True, 1000 - i * 2, 1, b"new%d" % i)
+        assert r.get_at(k, 700 - i * 2) == (True, 500 - i * 2, 1, b"old%d" % i)
+    r.close()
+
+
+def test_v4_empty_and_single_key_tables(tmp_path):
+    # empty table: zero entries, still a valid file
+    p = str(tmp_path / "empty.sst")
+    w = SSTableWriter(p, format_version=4)
+    meta = w.finish(1)
+    assert meta.entries == 0
+    r = SSTableReader(p)
+    assert r.get(b"anything") == (False, 0, 0, b"")
+    assert list(r) == []
+    assert r.get_many([b"a", b"b"]) == {}
+    r.close()
+    # single-key table; also the single-entry-per-block degenerate case
+    p2 = str(tmp_path / "one.sst")
+    _write_table(p2, format_version=4, items=[(b"only", 7, 1, b"val")],
+                 block_size=1, restart_interval=1)
+    r = SSTableReader(p2)
+    assert r.get(b"only") == (True, 7, 1, b"val")
+    assert r.get(b"onl")[0] is False and r.get(b"onlyx")[0] is False
+    assert r.get_many([b"only", b"nope"]) == {b"only": (7, 1, b"val")}
+    r.close()
+
+
+@pytest.mark.parametrize("fmt", [1, 2, 3, 4])
+def test_compat_matrix_roundtrip(tmp_path, fmt):
+    """Every supported format round-trips the same entry set through the
+    same reader surface (get / iterate / iter_from / get_many)."""
+    path = str(tmp_path / "t.sst")
+    _write_table(path, format_version=fmt)
+    r = SSTableReader(path)
+    assert r.format_version == fmt
+    for k, s, t, v in ITEMS[::7]:
+        assert r.get(k) == (True, s, t, v)
+    assert [tuple(e) for e in r] == [tuple(e) for e in ITEMS]
+    probe = [k for k, *_ in ITEMS[::11]] + [b"absent%d" % i for i in range(10)]
+    got = r.get_many(probe)
+    assert got == {k: (s, t, v) for k, s, t, v in ITEMS[::11]}
+    r.close()
+
+
+def test_compat_matrix_cross_version_directory(tmp_db_dir):
+    """A DB directory accreting tables from v1, v2, v3 and v4 writers must
+    serve every key under the current (v4-writing) engine — the on-disk
+    compat rule in practice."""
+    vals = {}
+    for fmt in (1, 2, 3, 4):
+        # high trigger: keep each format's table alive (no L0 rewrite)
+        db = mk(tmp_db_dir, sstable_format_version=fmt, l0_compaction_trigger=100)
+        try:
+            for i in range(120):
+                k = f"f{fmt}k{i:04d}".encode()
+                v = bytes([(fmt * 40 + i) % 251]) * (48 if i % 3 else 700)
+                db.put(k, v)
+                vals[k] = v
+            db.flush()
+        finally:
+            db.close()
+    db = mk(tmp_db_dir, l0_compaction_trigger=100)  # default writer (v4)
+    try:
+        versions = {
+            SSTableReader(os.path.join(tmp_db_dir, f)).format_version
+            for f in os.listdir(tmp_db_dir) if f.endswith(".sst")
+        }
+        assert {1, 4} <= versions, versions  # oldest + newest coexist
+        for k, v in vals.items():
+            assert db.get(k) == v, k
+        # batched path agrees across the mixed-format directory
+        probe = sorted(vals)[::5] + [b"zz-absent"]
+        assert db.multi_get(probe) == [vals.get(k) for k in probe]
+        db.compact_all()  # rewrites into v4; everything still serves
+        for k, v in list(vals.items())[::11]:
+            assert db.get(k) == v
+    finally:
+        db.close()
+
+
+def test_writer_rejects_unknown_version(tmp_path):
+    with pytest.raises(ValueError, match="unsupported sstable format_version"):
+        SSTableWriter(str(tmp_path / "t.sst"), format_version=FORMAT_VERSION + 1)
+
+
+# ---------------------------------------------------------------------------
+# vectorized bloom probes
+# ---------------------------------------------------------------------------
+
+def _legacy_filter(keys, nbits=1000, k=6):
+    """Replicate the pre-PR-3 builder: arbitrary (non-pow2) nbits, % probes."""
+    bits = bytearray((nbits + 7) // 8)
+    for key in keys:
+        h1, h2 = _hash2(key)
+        for i in range(k):
+            b = (h1 + i * h2) % nbits
+            bits[b >> 3] |= 1 << (b & 7)
+    return BloomFilter(k, nbits, bits)
+
+
+def _assert_batch_matches_scalar(bf, probe):
+    got = bf.may_contain_many(probe)
+    want = [bf.may_contain(k) for k in probe]
+    assert list(got) == want
+
+
+def test_bloom_vectorized_equals_scalar_seeded():
+    """Exhaustive seeded sweep of the property
+    ``may_contain_many(keys) == [may_contain(k) for k in keys]`` across
+    pow2 and legacy %-sized encodings, member and non-member keys, and
+    batch sizes 0/1/2/odd/large."""
+    rng = random.Random(0xB70011)
+    for trial in range(25):
+        members = [rng.randbytes(rng.randint(1, 40)) for _ in range(rng.randint(1, 300))]
+        filters = [
+            BloomFilter.build(members, bits_per_key=rng.choice([4, 10, 16])),
+            _legacy_filter(members, nbits=rng.choice([1000, 777, 4097]), k=rng.randint(1, 8)),
+            BloomFilter.decode(BloomFilter.build(members).encode()),
+        ]
+        probe = members[:: max(1, len(members) // 7)] + [
+            rng.randbytes(rng.randint(1, 40)) for _ in range(30)
+        ]
+        rng.shuffle(probe)
+        for bf in filters:
+            for batch in ([], probe[:1], probe[:2], probe[:13], probe):
+                _assert_batch_matches_scalar(bf, batch)
+            assert all(bf.may_contain_many(members))  # no false negatives
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        members=hyp_st.lists(hyp_st.binary(min_size=1, max_size=32), min_size=1, max_size=80),
+        probe=hyp_st.lists(hyp_st.binary(min_size=1, max_size=32), max_size=60),
+        nbits=hyp_st.integers(min_value=64, max_value=5000),
+        k=hyp_st.integers(min_value=1, max_value=10),
+    )
+    def test_bloom_vectorized_equals_scalar_property(members, probe, nbits, k):
+        for bf in (BloomFilter.build(members), _legacy_filter(members, nbits=nbits, k=k)):
+            _assert_batch_matches_scalar(bf, probe + members)
+
+
+def test_get_many_coalesces_block_reads(tmp_path, monkeypatch):
+    """N keys in the same block must cost ONE pread, not N."""
+    import repro.core.sstable as sstable_mod
+
+    path = str(tmp_path / "t.sst")
+    _write_table(path, format_version=4, block_size=1 << 20)  # one data block
+    r = SSTableReader(path)  # no cache: every block read is a pread
+    assert len(r.index) == 1
+    calls = []
+    real_pread = os.pread
+    monkeypatch.setattr(
+        sstable_mod.os, "pread",
+        lambda *a, **kw: (calls.append(a), real_pread(*a, **kw))[1],
+    )
+    probe = [k for k, *_ in ITEMS[::3]]
+    got = r.get_many(probe)
+    assert len(got) == len(probe)
+    assert len(calls) == 1, len(calls)  # one block fetch for the whole batch
+    r.close()
+
+
+# ---------------------------------------------------------------------------
+# 2Q scan-resistant admission
+# ---------------------------------------------------------------------------
+
+class _FakeBlock:
+    def __init__(self, charge=300):
+        self.charge = charge
+
+
+def test_2q_scan_does_not_flush_hot_set():
+    """Hot (re-referenced → Am) blocks must survive a long one-shot sweep;
+    the sweep churns only the probationary A1in fraction."""
+    c = BlockCache(10_000, shards=1, policy="2q", a1_fraction=0.25)
+    hot = [(1, i) for i in range(10)]
+    for k in hot:
+        c.put(k, _FakeBlock(300))
+    for k in hot:
+        assert c.get(k) is not None  # re-reference → promoted to Am
+    st = c.stats()
+    assert st["block_cache_promotions"] == len(hot)
+    for i in range(200):  # a cursor-sweep's worth of one-shot blocks
+        c.put((2, i), _FakeBlock(300))
+    for k in hot:
+        assert c.peek(k) is not None, k  # the working set survived
+    st = c.stats()
+    assert st["block_cache_bytes"] <= 10_000
+    # sweep blocks lived and died in probation: none earned Am, and the
+    # survivors occupy exactly the probationary (A1in) bytes
+    resident_sweep = sum(c.peek((2, i)) is not None for i in range(200))
+    assert resident_sweep * 300 == st["block_cache_a1_bytes"]
+    assert resident_sweep <= (10_000 - len(hot) * 300) // 300
+
+
+def test_lru_policy_is_flushed_by_scan():
+    """Contrast case: plain LRU loses the hot set to the same sweep — the
+    behavior 2Q exists to fix."""
+    c = BlockCache(10_000, shards=1, policy="lru")
+    hot = [(1, i) for i in range(10)]
+    for k in hot:
+        c.put(k, _FakeBlock(300))
+        assert c.get(k) is not None
+    for i in range(200):
+        c.put((2, i), _FakeBlock(300))
+    assert all(c.peek(k) is None for k in hot)
+
+
+def test_2q_ghost_readmission_promotes():
+    """A block evicted from probation whose key is still remembered by the
+    A1out ghost list must be admitted straight to Am on re-insert."""
+    c = BlockCache(3_000, shards=1, policy="2q", a1_fraction=0.5)
+    c.put((1, 0), _FakeBlock(1000))
+    for i in range(1, 6):  # push (1,0) out of A1in into the ghost
+        c.put((1, i), _FakeBlock(1000))
+    assert c.peek((1, 0)) is None
+    c.put((1, 0), _FakeBlock(1000))  # readmission while ghost-remembered
+    st = c.stats()
+    assert st["block_cache_ghost_hits"] >= 1
+    # now in Am: a fresh sweep can't evict it before A1in drains
+    c.put((3, 1), _FakeBlock(1000))
+    c.put((3, 2), _FakeBlock(1000))
+    assert c.peek((1, 0)) is not None
+
+
+def test_2q_accounting_exact_across_paths():
+    """size_bytes must return to exactly zero after mixed put/get/promote/
+    evict/evict_file traffic — byte-accounting drift is permanent."""
+    rng = random.Random(7)
+    c = BlockCache(8_000, shards=2, policy="2q")
+    for step in range(2000):
+        op = rng.random()
+        key = (rng.randint(1, 5), rng.randint(0, 30))
+        if op < 0.5:
+            c.put(key, _FakeBlock(rng.randint(50, 900)))
+        elif op < 0.8:
+            c.get(key)
+        else:
+            c.evict_file(key[0])
+    st = c.stats()
+    assert st["block_cache_bytes"] <= 8_000
+    for f in range(1, 6):
+        c.evict_file(f)
+    assert c.size_bytes == 0
+    assert c.stats()["block_cache_a1_bytes"] == 0
+
+
+def test_recharge_after_concurrent_evict_is_noop():
+    """Regression (satellite): recharging a block that evict_file already
+    dropped must NOT re-apply its delta — the lock-held identity check
+    keeps size_bytes exact instead of permanently inflated."""
+    c = BlockCache(100_000, shards=1, policy="2q")
+    blk = _FakeBlock(500)
+    c.put((1, 0), blk)
+    c.put((2, 0), _FakeBlock(400))
+    before = c.size_bytes
+    assert before == 900
+    c.evict_file(1)  # concurrent eviction wins the race
+    blk.charge = 50_000  # block materialized meanwhile
+    c.recharge((1, 0), blk)  # stale recharge: must be a no-op
+    assert c.size_bytes == 400
+    # same for a replaced entry: the key is resident but holds ANOTHER block
+    blk2 = _FakeBlock(500)
+    c.put((2, 0), blk2)  # replaces the 400-byte entry; size is now 500
+    old = _FakeBlock(999)
+    c.recharge((2, 0), old)  # stale: different block object under that key
+    assert c.size_bytes == 500
+    # a LEGITIMATE recharge still applies (and still evicts if over budget)
+    blk2.charge = 700
+    c.recharge((2, 0), blk2)
+    assert c.size_bytes == 700
+
+
+def test_blockcache_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="unknown block cache policy"):
+        BlockCache(1000, policy="arc")
+
+
+# ---------------------------------------------------------------------------
+# DB.multi_get
+# ---------------------------------------------------------------------------
+
+def test_multi_get_equals_sequential_gets(tmp_db_dir):
+    """Differential: multi_get must agree with [get(k) for k] across
+    memtable hits, flushed tables, point deletes, range deletes, separated
+    values, and absent keys — with compaction churn in between."""
+    rng = random.Random(1234)
+    db = mk(tmp_db_dir)
+    try:
+        model = {}
+        keys = [f"k{i:05d}".encode() for i in range(1500)]
+        for i in range(5000):
+            k = rng.choice(keys)
+            r = rng.random()
+            if r < 0.72:
+                v = (b"v%d" % i) * rng.choice([1, 2, 120])  # inline + separated
+                db.put(k, v)
+                model[k] = v
+            elif r < 0.88:
+                db.delete(k)
+                model.pop(k, None)
+            else:
+                lo = rng.choice(keys)
+                hi = lo + b"\x7f"
+                db.delete_range(lo, hi)
+                for mk_ in [m for m in model if lo <= m < hi]:
+                    del model[mk_]
+            if i == 2500:
+                db.flush()
+        probe = rng.sample(keys, 400) + [b"zz%04d" % i for i in range(40)]
+        rng.shuffle(probe)
+        got = db.multi_get(probe)
+        assert got == [db.get(k) for k in probe]
+        assert got == [model.get(k) for k in probe]
+        db.flush()
+        db.compact_all()
+        assert db.multi_get(probe) == [model.get(k) for k in probe]
+    finally:
+        db.close()
+
+
+def test_multi_get_snapshot_reads(tmp_db_dir):
+    db = mk(tmp_db_dir)
+    try:
+        keys = [f"s{i:04d}".encode() for i in range(200)]
+        for k in keys:
+            db.put(k, b"before-" + k)
+        db.flush()
+        snap = db.snapshot()
+        for k in keys[:100]:
+            db.put(k, b"after")
+        db.delete(keys[150])
+        db.flush()
+        db.compact_all()
+        got = db.multi_get(keys, snapshot=snap)
+        assert got == [b"before-" + k for k in keys]
+        assert got == [db.get(k, snapshot=snap) for k in keys]
+        latest = db.multi_get(keys)
+        assert latest[:100] == [b"after"] * 100
+        assert latest[150] is None
+    finally:
+        db.close()
+
+
+def test_multi_get_duplicates_order_and_chunking(tmp_db_dir):
+    """Output aligns with the input order, duplicates resolve consistently,
+    and batches larger than multi_get_max_batch split transparently."""
+    db = mk(tmp_db_dir, multi_get_max_batch=16)
+    try:
+        for i in range(100):
+            db.put(b"c%03d" % i, b"val%03d" % i)
+        db.flush()
+        probe = [b"c%03d" % (i % 50) for i in range(90)] + [b"missing"] * 3
+        got = db.multi_get(probe)
+        assert got == [db.get(k) for k in probe]
+        assert db.multi_get([]) == []
+        st = db.stats.snapshot()
+        assert st["multi_gets"] >= 1
+        assert st["multi_get_keys"] >= len(probe)
+    finally:
+        db.close()
+
+
+def test_multi_get_vs_format_matrix(tmp_db_dir):
+    """multi_get over a directory mixing every table format."""
+    vals = {}
+    for fmt in (2, 3, 4):
+        db = mk(tmp_db_dir, sstable_format_version=fmt)
+        try:
+            for i in range(150):
+                k = f"m{fmt}-{i:04d}".encode()
+                vals[k] = b"x" * (i % 60 + 1)
+                db.put(k, vals[k])
+            db.flush()
+        finally:
+            db.close()
+    db = mk(tmp_db_dir)
+    try:
+        probe = sorted(vals)[::3]
+        assert db.multi_get(probe) == [vals[k] for k in probe]
+    finally:
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# compaction read metering
+# ---------------------------------------------------------------------------
+
+def _churn(db, n=3000, val=b"y" * 64):
+    for i in range(n):
+        db.put(b"w%05d" % (i % 1000), val)
+    db.flush()
+    db.compact_all()
+
+
+def test_compaction_reads_metered_at_pri_low(tmp_db_dir):
+    db = mk(tmp_db_dir, wal_mode="off", bg_io_bytes_per_sec=500 << 20)
+    try:
+        _churn(db)
+        st = db.stats.snapshot()
+        assert st.get("compaction_count", 0) >= 1
+        metered = st.get("compaction_read_metered_bytes", 0)
+        assert metered > 0
+        # sanity: metered reads can't exceed what compaction reports reading
+        assert metered <= st["compaction_read_bytes"] * 1.1 + (256 << 10)
+    finally:
+        db.close()
+
+
+def test_compaction_read_metering_off_by_knob(tmp_db_dir):
+    db = mk(tmp_db_dir, wal_mode="off", bg_io_bytes_per_sec=500 << 20,
+            compaction_read_metering=False)
+    try:
+        _churn(db)
+        st = db.stats.snapshot()
+        assert st.get("compaction_count", 0) >= 1
+        assert st.get("compaction_read_metered_bytes", 0) == 0
+    finally:
+        db.close()
+
+
+def test_compaction_read_metering_noop_without_budget(tmp_db_dir):
+    """With the limiter disabled (rate 0) the meter must not engage at all."""
+    db = mk(tmp_db_dir, wal_mode="off")
+    try:
+        _churn(db, n=1500)
+        assert db.stats.snapshot().get("compaction_read_metered_bytes", 0) == 0
+    finally:
+        db.close()
