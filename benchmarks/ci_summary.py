@@ -38,6 +38,13 @@ def _rows_for(name: str, res: dict) -> list[tuple]:
             if "cache_policy" in c:  # PR-9 2Q-vs-LRU mixed cells
                 label += f"/{c['cache_policy']}"
             rows.append((name, label, c.get("ops_per_s"), None, None))
+        elif "shards" in c:  # ycsb sharding (before "threads": cells carry both)
+            label = (
+                f"shards={c['shards']}/"
+                f"{'devmodel' if c.get('device_model') else 'raw'}/"
+                f"{c.get('speedup_vs_1shard', 0):.2f}x"
+            )
+            rows.append((name, label, c.get("write_ops_s"), None, None))
         elif "threads" in c:  # writepath
             label = f"{c.get('wal', '?')}/t{c['threads']}/{c.get('mode', '?')}"
             rows.append((name, label, c.get("ops_per_s"), None, c.get("write_amp")))
@@ -54,6 +61,14 @@ def _rows_for(name: str, res: dict) -> list[tuple]:
             rows.append((name, label, c.get("ops_per_s"), None, None))
         else:
             rows.append((name, "cell", c.get("ops_per_s"), c.get("cv"), c.get("write_amp")))
+    summ = res.get("summary")
+    if isinstance(summ, dict) and "agg_write_speedup" in summ:  # sharding
+        rows.append((
+            name,
+            f"summary/{summ.get('shards', '?')}-shard "
+            f"{summ['agg_write_speedup']:.2f}x write",
+            None, None, None,
+        ))
     for c in res.get("engine", []):  # stability
         rows.append((name, f"engine/{c.get('system', '?')}", None, c.get("cv"), None))
     for c in res.get("ablation", []):

@@ -139,10 +139,11 @@ def _time_gets(db: DB, keys: list[bytes]) -> float:
 
 
 def _time_scans(db: DB, starts: list[bytes], count: int) -> float:
-    scan = db.scan
+    rng = db.range
     t0 = time.monotonic()
     for s in starts:
-        scan(s, count)
+        for _ in rng(s, limit=count):
+            pass
     return time.monotonic() - t0
 
 

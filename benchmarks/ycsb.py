@@ -15,21 +15,193 @@ key streams against a preloaded BVLSM store, reporting per-batch p50/p99
 latency and keys/s next to a sequential-``get`` baseline over the same
 streams. ``--format-version`` pins ``sstable_format_version`` for the
 store (any workload), so v2-vs-v4 batched reads are one flag apart.
+
+``--workload sharding`` (PR 10) measures :class:`ShardedDB` scaling:
+16 concurrent writers push 64 KiB values at sync-WAL stores of 1 and N
+shards (``--shards``), reporting aggregate write throughput, overall and
+per-shard p99, and batched ``multi_get`` fan-out keys/s. Each cell runs
+twice: once under :class:`DeviceModelEnv` — fsync costs a fixed device
+latency and is serialized **per file**, modelling one flash channel per
+shard the way the paper's multi-queue analysis assumes independent
+BValue queues (§III-C) — and once against the raw filesystem. On a
+GIL-bound single box the raw cells mostly show Python overhead, so the
+headline ``agg_write_speedup`` comes from the device-model cells where
+the benefit of sharding is real fsync-channel parallelism, not thread
+scheduling noise.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import shutil
+import tempfile
+import threading
 import time
 
 import numpy as np
 
+from repro.core import DBConfig, ShardedDB
+from repro.core.env import Env
 from repro.core.sstable import FORMAT_VERSION
 
-from .common import cleanup, gen_value, make_db, zipf_indices
+from .common import cleanup, gen_keys, gen_value, make_db, zipf_indices
 
 
 MULTIGET_BATCHES = (8, 64, 256)
+
+
+class DeviceModelEnv(Env):
+    """Every fsync costs ``delay_s`` of device time and fsyncs to the SAME
+    file serialize (one flash channel per file); fsyncs to different files
+    overlap. A 1-shard store funnels every commit through one WAL channel;
+    an N-shard store gets N independent channels — exactly the hardware
+    claim sharding makes."""
+
+    def __init__(self, delay_s: float):
+        self.delay_s = delay_s
+        self._locks: dict = {}
+        self._mu = threading.Lock()
+
+    def _lock_for(self, f):
+        try:
+            name = f.name
+        except Exception:
+            name = str(f)
+        with self._mu:
+            lk = self._locks.get(name)
+            if lk is None:
+                lk = self._locks[name] = threading.Lock()
+            return lk
+
+    def fsync(self, f) -> None:
+        with self._lock_for(f):
+            time.sleep(self.delay_s)
+            super().fsync(f)
+
+
+def _sharding_cell(shards: int, ops: int, value_size: int, threads: int,
+                   device_fsync_us: float, read_batch: int) -> dict:
+    path = tempfile.mkdtemp(prefix=f"bench_shard{shards}_")
+    cfg = DBConfig.bvlsm(
+        wal_mode="sync",
+        value_threshold=4096,
+        memtable_size=8 << 20,
+        level1_max_bytes=32 << 20,
+        num_bvalue_queues=2,
+        bvcache_bytes=8 << 20,
+        env=DeviceModelEnv(device_fsync_us * 1e-6) if device_fsync_us else None,
+    )
+    s = ShardedDB.open(path, shards=shards, config=cfg)
+    try:
+        keys = gen_keys(ops, "rand", seed=11)
+        val = gen_value(value_size, 7)
+        sinks: list[list[tuple[bytes, float]]] = [[] for _ in range(threads)]
+        errors: list[BaseException] = []
+
+        def worker(part: list[bytes], sink: list) -> None:
+            try:
+                for k in part:
+                    t1 = time.monotonic()
+                    s.put(k, val)
+                    sink.append((k, time.monotonic() - t1))
+            except BaseException as e:
+                errors.append(e)
+
+        ts = [
+            threading.Thread(target=worker, args=(keys[i::threads], sinks[i]))
+            for i in range(threads)
+        ]
+        t0 = time.monotonic()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        s.flush()
+        write_s = time.monotonic() - t0
+        if errors:
+            raise errors[0]
+
+        by_shard: list[list[float]] = [[] for _ in range(shards)]
+        all_lat: list[float] = []
+        for sink in sinks:
+            for k, lat in sink:
+                by_shard[s.shard_of(k)].append(lat)
+                all_lat.append(lat)
+
+        rng = np.random.default_rng(5)
+        mget_keys = [keys[i] for i in rng.permutation(ops)]
+        t0 = time.monotonic()
+        for i in range(0, ops, read_batch):
+            got = s.multi_get(mget_keys[i : i + read_batch])
+            assert all(v is not None for v in got)
+        mget_keys_s = ops / (time.monotonic() - t0)
+        router = s.stats()["router"]
+    finally:
+        s.close()
+        shutil.rmtree(path, ignore_errors=True)
+
+    def p99(a):
+        return float(np.percentile(np.array(a) * 1e3, 99)) if a else 0.0
+
+    return {
+        "bench": "ycsb_sharding",
+        "shards": shards,
+        "threads": threads,
+        "device_fsync_us": device_fsync_us,
+        "value_size": value_size,
+        "ops": ops,
+        "write_ops_s": ops / write_s,
+        "write_mb_s": ops * value_size / 1e6 / write_s,
+        "write_p99_ms": p99(all_lat),
+        "per_shard_p99_ms": [p99(a) for a in by_shard],
+        "per_shard_ops": [len(a) for a in by_shard],
+        "mget_keys_s": mget_keys_s,
+        "router": router,
+    }
+
+
+def run_sharding(ops: int = 1600, value_size: int = 64 * 1024,
+                 shards: int = 4, threads: int = 16,
+                 device_fsync_us: float = 2000.0,
+                 read_batch: int = 64) -> dict:
+    """Sharding scaling grid: {device-model, raw-fs} x {1, N shards}. The
+    gate metric (``agg_write_speedup``) compares aggregate write throughput
+    of the N-shard cell to the 1-shard cell under the device model."""
+    out = []
+    for tau_us, modelled in ((device_fsync_us, True), (0.0, False)):
+        base_ops_s = None
+        for n in (1, shards):
+            cell = _sharding_cell(n, ops, value_size, threads, tau_us,
+                                  read_batch)
+            if base_ops_s is None:
+                base_ops_s = cell["write_ops_s"]
+            cell["speedup_vs_1shard"] = cell["write_ops_s"] / base_ops_s
+            cell["device_model"] = modelled
+            out.append(cell)
+            tag = f"tau={tau_us:.0f}us" if modelled else "raw-fs"
+            print(
+                f"ycsb-shard {tag:12s} shards={n}: "
+                f"{cell['write_ops_s']:7.1f} ops/s "
+                f"({cell['write_mb_s']:6.1f} MB/s) "
+                f"p99={cell['write_p99_ms']:7.1f}ms "
+                f"shard-p99={[round(x, 1) for x in cell['per_shard_p99_ms']]} "
+                f"mget={cell['mget_keys_s']:7.0f} keys/s "
+                f"[{cell['speedup_vs_1shard']:.2f}x]",
+                flush=True,
+            )
+    modelled = [c for c in out if c["device_model"]]
+    summary = {
+        "shards": shards,
+        "agg_write_speedup": modelled[-1]["speedup_vs_1shard"],
+        "agg_mget_speedup": modelled[-1]["mget_keys_s"] / modelled[0]["mget_keys_s"],
+        "device_fsync_us": device_fsync_us,
+    }
+    print(
+        f"ycsb-shard summary: {shards}-shard aggregate write speedup "
+        f"{summary['agg_write_speedup']:.2f}x under the device model",
+        flush=True,
+    )
+    return {"cells": out, "summary": summary}
 
 
 def run_multiget(records: int = 5000, ops: int = 4000, value_size: int = 8192,
@@ -158,7 +330,7 @@ def run(records: int = 5000, ops: int = 4000, value_size: int = 8192,
             scan_lat = []
             for i in scan_idx:
                 t0 = time.monotonic()
-                got = db.scan(f"user{i:012d}".encode(), scan_count)
+                got = list(db.range(f"user{i:012d}".encode(), limit=scan_count))
                 scan_lat.append(time.monotonic() - t0)
                 assert got
             cache = db.bvcache.stats()
@@ -201,14 +373,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--records", type=int, default=5000)
     ap.add_argument("--ops", type=int, default=4000)
-    ap.add_argument("--workload", choices=("a", "multiget"), default="a",
-                    help="'a' = YCSB-A grid; 'multiget' = batched-read grid")
+    ap.add_argument("--workload", choices=("a", "multiget", "sharding"),
+                    default="a",
+                    help="'a' = YCSB-A grid; 'multiget' = batched-read grid; "
+                         "'sharding' = ShardedDB write-scaling grid")
     ap.add_argument("--format-version", type=int, default=None,
                     help="pin sstable_format_version for the store(s)")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count for the sharding workload's N-shard cell")
+    ap.add_argument("--threads", type=int, default=16,
+                    help="writer threads for the sharding workload")
+    ap.add_argument("--device-fsync-us", type=float, default=2000.0,
+                    help="modelled per-fsync device latency (sharding workload)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.workload == "multiget":
         res = run_multiget(args.records, args.ops, format_version=args.format_version)
+    elif args.workload == "sharding":
+        res = run_sharding(args.ops, shards=args.shards, threads=args.threads,
+                           device_fsync_us=args.device_fsync_us)
     else:
         res = run(args.records, args.ops, format_version=args.format_version)
     if args.out:

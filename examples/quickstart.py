@@ -2,18 +2,18 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the public API (put/get/scan/delete), then the paper's core effect:
+Shows the public API (put/get/range/delete), then the paper's core effect:
 identical workload through the three systems, with write amplification and
 the Key-ValueOffset separation visible in the engine stats.
 """
 import shutil
 import tempfile
 
-from repro.core import DB, DBConfig, WriteBatch
+from repro.core import DB, DBConfig, ShardedDB, WriteBatch
 
 # --- 1. basic API ----------------------------------------------------------
 d = tempfile.mkdtemp(prefix="bvlsm_quickstart_")
-db = DB(d, DBConfig.bvlsm(wal_mode="sync", value_threshold=4096))
+db = DB.open(d, DBConfig.bvlsm(wal_mode="sync", value_threshold=4096))
 
 db.put(b"user/1", b"small value")  # < threshold: stays inline
 db.put(b"user/2", b"B" * 65536)  # 64 KiB: separated at WAL time
@@ -22,13 +22,13 @@ print("get user/1:", db.get(b"user/1"))
 print("get user/2:", len(db.get(b"user/2")), "bytes (via BValue store)")
 db.delete(b"user/1")
 print("after delete:", db.get(b"user/1"))
-print("scan user/:", [(k, len(v)) for k, v in db.scan(b"user/", 10)])
+print("range user/:", [(k, len(v)) for k, v in db.range(b"user/", end=b"user0")])
 
 # atomic multi-op batch: one WAL record, one fsync, all-or-nothing on crash
 batch = WriteBatch()
 batch.put(b"user/4", b"D" * 8192).put(b"user/5", b"small").delete(b"user/3")
 db.write(batch)
-print("after batch:", [(k, len(v)) for k, v in db.scan(b"user/", 10)])
+print("after batch:", [(k, len(v)) for k, v in db.range(b"user/", end=b"user0")])
 
 db.flush()
 print("\nengine stats:", {k: v for k, v in db.stats.snapshot().items() if "bytes" in k})
@@ -36,10 +36,20 @@ print("BVCache:", db.bvcache.stats())
 db.close()
 
 # crash-safety: reopen and read back
-db2 = DB(d, DBConfig.bvlsm(wal_mode="sync"))
+db2 = DB.open(d, DBConfig.bvlsm(wal_mode="sync"))
 assert db2.get(b"user/2") == b"B" * 65536
 print("\nreopened after close — data intact")
 db2.close()
+shutil.rmtree(d)
+
+# same surface, horizontally sharded: N independent engines behind one router
+d = tempfile.mkdtemp(prefix="bvlsm_quickstart_sharded_")
+sdb = ShardedDB.open(d, shards=4, config=DBConfig.bvlsm(wal_mode="sync"))
+for i in range(8):
+    sdb.put(f"user/{i}".encode(), b"E" * 8192)
+print("\nsharded range:", [k for k, _ in sdb.range(b"user/", limit=8)])
+print("per-shard writes:", [s["user_writes"] for s in sdb.stats()["per_shard"]])
+sdb.close()
 shutil.rmtree(d)
 
 # --- 2. the paper's effect: one workload, three systems ---------------------

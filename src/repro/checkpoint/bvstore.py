@@ -28,7 +28,7 @@ import jax
 import msgpack
 import numpy as np
 
-from repro.core import DB, DBConfig
+from repro.core import DB, DBConfig, KVStore
 
 CHUNK = 4 << 20  # 4 MiB value chunks (page-aligned batches downstream)
 
@@ -45,7 +45,15 @@ class BVCheckpointStore:
         num_queues: int = 4,
         sync_values: bool = False,
         env=None,
+        db: KVStore | None = None,
     ):
+        """``db`` injects any :class:`~repro.core.api.KVStore` (a ``DB``
+        or a ``ShardedDB``) — the store takes ownership (``close()``
+        closes it) and ``path``/``num_queues``/``sync_values``/``env``
+        are ignored. Default: a fresh single-engine ``DB`` at ``path``."""
+        if db is not None:
+            self.db = db
+            return
         cfg = DBConfig.bvlsm(
             wal_mode="sync",  # metadata commits are synchronous
             value_threshold=4096,
@@ -55,7 +63,20 @@ class BVCheckpointStore:
         )
         cfg.sync_flush_io = sync_values
         cfg.env = env  # pluggable filesystem (fault-injection tests)
-        self.db = DB(path, cfg)
+        self.db = DB.open(path, cfg)
+
+    def _value_barrier(self) -> None:
+        """Every async BValue write durable before a META record commits.
+        Engine-aware fast path (per-queue flush, no memtable rotation)
+        for ``DB``/``ShardedDB``; a generic KVStore pays a full flush."""
+        engines = getattr(self.db, "shards", None)
+        if engines is None:
+            engines = [self.db]
+        if all(hasattr(e, "bvalue") for e in engines):
+            for e in engines:
+                e.bvalue.flush()
+        else:
+            self.db.flush()
 
     # ------------------------------------------------------------------
     # save
@@ -93,7 +114,7 @@ class BVCheckpointStore:
                 hashes[path] = (h, step)
             manifest.append(entry)
         # barrier: every async BValue write durable before META commits
-        self.db.bvalue.flush()
+        self._value_barrier()
         meta = {
             "step": step,
             "time": time.time(),
@@ -117,11 +138,9 @@ class BVCheckpointStore:
     # load
     # ------------------------------------------------------------------
     def steps(self) -> list[int]:
-        out = []
-        for k, _ in self.db.scan(b"meta/", 1 << 20):
-            if k.startswith(b"meta/"):
-                out.append(int(k[5:]))
-        return sorted(out)
+        return sorted(
+            int(k[5:]) for k, _ in self.db.range(b"meta/", end=b"meta0")
+        )
 
     def latest_step(self) -> int | None:
         s = self.steps()
@@ -192,11 +211,14 @@ class BVCheckpointStore:
         makes the image incremental: files already present in the base are
         hard-linked from it instead of from the live store. Returns
         ``directory``."""
-        self.db.checkpoint(directory, base=base)
+        if base is None:
+            self.db.checkpoint(directory)
+        else:  # incremental images are a single-DB feature
+            self.db.checkpoint(directory, base=base)
         return directory
 
     def stats(self) -> dict:
-        return self.db.stats.snapshot()
+        return self.db.stats()
 
     def close(self) -> None:
         self.db.close()

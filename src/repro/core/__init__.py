@@ -11,6 +11,7 @@ severity-classified (transient → bounded retry, hard → read-only mode until
 ``DB.resume()``, corruption → file quarantine), and ``FaultInjectionEnv``
 drives the crash/fault test matrix.
 """
+from .api import KVStore
 from .config import DBConfig
 from .db import DB, Cursor, Snapshot
 from .env import DEFAULT_ENV, Env, FaultInjectionEnv, FaultRule
@@ -30,12 +31,25 @@ from .replication import (
     attach,
     bootstrap_replica,
 )
+from .sharded import (
+    HashPartitioner,
+    MergedCursor,
+    RangePartitioner,
+    ShardedDB,
+    ShardedSnapshot,
+)
 from .writebatch import WriteBatch
 
 __all__ = [
     "DB",
+    "ShardedDB",
+    "KVStore",
     "Snapshot",
+    "ShardedSnapshot",
     "Cursor",
+    "MergedCursor",
+    "HashPartitioner",
+    "RangePartitioner",
     "DBConfig",
     "ValueOffset",
     "WriteBatch",

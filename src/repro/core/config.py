@@ -264,6 +264,21 @@ class DBConfig:
     # same CRC over what it applied and re-bootstraps on mismatch instead
     # of silently forking.
     repl_crc_interval: int = 128
+    # --- sharding router (core.sharded.ShardedDB; docs §Sharding) ---
+    # each shard gets block_cache_bytes/N and bvcache_bytes/N so a sharded
+    # store consumes the same total cache memory the config names. False
+    # gives every shard the full budget (N× total memory — deliberate
+    # over-provisioning for benchmarks or small N).
+    shard_divide_cache_budget: bool = True
+    # cross-shard WriteBatch durability log (ROUTER_LOG): once it grows
+    # past this size with no batch in flight, the router flushes the
+    # shards (their WALs then cover everything logged) and truncates it.
+    router_log_max_bytes: int = 4 << 20
+    # fan multi-shard operations (write apply, multi_get, flush/checkpoint
+    # barriers) across a small thread pool instead of looping serially —
+    # per-shard WAL fsyncs overlap. False keeps the router single-threaded
+    # (deterministic orderings for debugging).
+    router_parallel_fanout: bool = True
     # --- misc ---
     paranoid_checks: bool = False  # CRC-verify SSTable block + BValue reads
     sync_flush_io: bool = True

@@ -67,6 +67,7 @@ import bisect
 import os
 import threading
 import time
+import warnings
 from collections import deque
 
 import msgpack
@@ -681,6 +682,14 @@ class DB:
         )
         self.mem.wal_no = self._wal_no
         self._wal_no += 1
+
+    @classmethod
+    def open(cls, path: str, config: DBConfig | None = None, **kw) -> "DB":
+        """Canonical constructor: open (creating if absent) the store at
+        ``path``. Equivalent to ``DB(path, config)`` — the bare constructor
+        keeps working — but ``open()`` is the one documented spelling,
+        mirrored by ``ShardedDB.open(path, shards=N, config=None)``."""
+        return cls(path, config, **kw)
 
     # ------------------------------------------------------------------
     # write path
@@ -1438,26 +1447,63 @@ class DB:
                 out[k] = self._resolve(k, h[1], h[2])
         return out
 
-    def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
-        """Return up to ``count`` live ``(key, value)`` pairs with
-        ``key >= start``, in ascending key order — a merged view across
-        memtables and every level, tombstones elided, separated values
-        resolved.
+    def range(
+        self,
+        start: bytes = b"",
+        end: bytes | None = None,
+        limit: int | None = None,
+        snapshot: Snapshot | None = None,
+    ):
+        """Stream live ``(key, value)`` pairs with ``start <= key``
+        (``< end`` when given), ascending, up to ``limit`` — the canonical
+        range-read surface (``scan(start, count)`` is a deprecated shim
+        over it).
 
-        Streams from a pinned :class:`Cursor`, so the walk can no longer
-        be torn by a concurrent compaction (the cursor pins the version and
-        a snapshot for its whole lifetime) — the historical bounded-retry
-        loop collapsed to one attempt. The retry scaffold (and the typed
-        :class:`SnapshotUnstableError`) remains for alternate
-        ``_scan_attempts`` implementations that can still report a torn
-        snapshot by returning None.
+        A generator over a pinned :class:`Cursor`: the walk cannot be torn
+        by concurrent flush/compaction/GC (the cursor pins the version and
+        a read-point snapshot for its whole lifetime), memory stays O(1)
+        in the result size, and abandoning the generator early closes the
+        cursor (``GeneratorExit`` unwinds the ``with``). The cursor — and
+        with it the read point, when no ``snapshot`` is passed — is only
+        taken when iteration actually starts, standard generator
+        semantics.
 
         Iterator fan-out is lazy: L0 files overlap so each contributes its
         own iterator, but every sorted level (L1+) feeds the heap merge ONE
         concatenating iterator that binary-searches the file list and opens
         a file only when the merge cursor actually reaches it — a short
-        scan touches O(levels) files, not O(all files).
+        range read touches O(levels) files, not O(all files).
         """
+        if limit is not None and limit <= 0:
+            return
+        n = 0
+        with Cursor(self, snapshot) as cur:
+            ok = cur.seek(start)
+            while ok:
+                key = cur.key
+                if end is not None and key >= end:
+                    return
+                yield key, cur.value
+                n += 1
+                if limit is not None and n >= limit:
+                    return
+                ok = cur.next()
+
+    def scan(self, start: bytes, count: int) -> list[tuple[bytes, bytes]]:
+        """Deprecated: use ``range(start, limit=count)``.
+
+        Kept as a shim (materializes the same result list) so old callers
+        keep working; the historical bounded-retry scaffold (and the typed
+        :class:`SnapshotUnstableError`) stays with it for alternate
+        ``_scan_attempts`` implementations that can still report a torn
+        snapshot by returning None.
+        """
+        warnings.warn(
+            "DB.scan(start, count) is deprecated; use "
+            "DB.range(start, limit=count)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         for _round in range(2):
             if _round:
                 time.sleep(0.005)  # one backoff round, then give up typed

@@ -151,7 +151,7 @@ class BValueGC:
             # (and, via resume, every later slice): the LSM view is the
             # truth, so collect (key -> pointer) per candidate.
             live_ptrs = {fid: [] for fid in cands}
-            for n, (key, _) in enumerate(db.scan(b"", 1 << 30)):
+            for n, (key, _) in enumerate(db.range()):
                 if (n & 1023) == 0 and self._stopping():
                     return self._stats()  # closing: don't finish an O(DB) walk
                 rec = self._pointer_for(key)

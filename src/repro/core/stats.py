@@ -306,3 +306,9 @@ class EngineStats:
                 block_cache_a1_bytes=0,
             )
         return d
+
+    # ``db.stats`` is this object (attribute access keeps working for every
+    # existing caller); making it callable lets ``db.stats()`` satisfy the
+    # KVStore protocol's ``stats() -> dict`` the same way ShardedDB's real
+    # method does.
+    __call__ = snapshot

@@ -14,12 +14,15 @@ The mapping onto the paper:
 """
 from __future__ import annotations
 
+import io
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.api import KVStore
 
 
 class OutOfPages(RuntimeError):
@@ -145,3 +148,39 @@ class HostPageCache:
         self.hits += 1
         self._map.move_to_end(key)
         return hit[0]
+
+
+class PageSpillStore:
+    """Durable tier below :class:`HostPageCache`: pages evicted from host
+    RAM spill into any :class:`~repro.core.api.KVStore` — one engine
+    (``DB``) or a sharded one (``ShardedDB``), the serving stack doesn't
+    care. A KV page is exactly the paper's big value, so spills ride the
+    WAL-time separated value path; ``restore_many`` uses the store's
+    batched ``multi_get`` (per-shard bloom-probe batching under a
+    sharded store). Pages serialize via ``np.save`` (self-describing
+    dtype/shape, no pickle)."""
+
+    def __init__(self, store: KVStore, prefix: bytes = b"kvpage/"):
+        self.store = store
+        self.prefix = prefix
+
+    def _key(self, key: tuple) -> bytes:
+        return self.prefix + "/".join(str(p) for p in key).encode()
+
+    def spill(self, key: tuple, page: np.ndarray) -> None:
+        buf = io.BytesIO()
+        np.save(buf, np.ascontiguousarray(page), allow_pickle=False)
+        self.store.put(self._key(key), buf.getvalue())
+
+    def restore(self, key: tuple) -> np.ndarray | None:
+        raw = self.store.get(self._key(key))
+        if raw is None:
+            return None
+        return np.load(io.BytesIO(raw), allow_pickle=False)
+
+    def restore_many(self, keys: list[tuple]) -> list[np.ndarray | None]:
+        raws = self.store.multi_get([self._key(k) for k in keys])
+        return [
+            None if r is None else np.load(io.BytesIO(r), allow_pickle=False)
+            for r in raws
+        ]

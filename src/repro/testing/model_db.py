@@ -29,7 +29,7 @@ import shutil
 import tempfile
 import time
 
-from repro.core import DB, DBConfig, WriteBatch
+from repro.core import DB, DBConfig, ShardedDB, WriteBatch
 
 LATEST = (1 << 56) - 1  # MAX_SEQ: the "no snapshot" read point
 
@@ -148,22 +148,31 @@ def _mkcfg(rng: random.Random) -> DBConfig:
 
 
 def _check_point_reads(db, model, read_pairs, keys, rng, diverge):
-    """Compare a sample of gets at every live read point."""
+    """Compare a sample of gets at every live read point — via single
+    ``get`` and via ``multi_get`` (which a ShardedDB fans out per shard),
+    so the batched path is differentially checked too."""
     for snap, mseq in read_pairs:
-        for k in rng.sample(keys, min(6, len(keys))):
-            want = model.get(k, LATEST if mseq is None else mseq)
+        sample = rng.sample(keys, min(6, len(keys)))
+        want = [model.get(k, LATEST if mseq is None else mseq) for k in sample]
+        for k, w in zip(sample, want):
             got = db.get(k, snapshot=snap)
-            if got != want:
+            if got != w:
                 diverge.append(
                     f"get({k!r}) @ {'latest' if mseq is None else mseq}: "
-                    f"model {want!r} != db {got!r}"
+                    f"model {w!r} != db {got!r}"
                 )
+        got_many = db.multi_get(sample, snapshot=snap)
+        if got_many != want:
+            diverge.append(
+                f"multi_get({sample!r}) @ {'latest' if mseq is None else mseq}: "
+                f"model {want!r} != db {got_many!r}"
+            )
 
 
 def _check_scan(db, model, snap, mseq, start, count, diverge):
     want = model.scan(start, count, LATEST if mseq is None else mseq)
     if snap is None:
-        got = db.scan(start, count)
+        got = list(db.range(start, limit=count))
     else:
         got = []
         with db.iterator(snap) as cur:
@@ -207,16 +216,30 @@ def _check_reverse(db, model, snap, mseq, bound, steps, diverge):
             mb = cur.key
 
 
-def run_example(seed: int, base_dir: str, n_ops: int = 60, trace=None) -> list[str]:
+def run_example(
+    seed: int, base_dir: str, n_ops: int = 60, trace=None, shards: int = 0
+) -> list[str]:
     """One differential example: fresh DB + model, ``n_ops`` random ops
     with cross-checks after each. Returns divergence strings (empty = ok).
     ``trace`` (a callable taking one string) logs each op as it executes —
     replay a diverging seed with ``trace=print`` to see the exact op
-    sequence; it consumes no randomness, so the stream is unchanged."""
+    sequence; it consumes no randomness, so the stream is unchanged.
+
+    ``shards > 0`` runs the same spec against a ``ShardedDB`` of that
+    many engines (hash partitioning): every batch then exercises the
+    cross-shard commit protocol, every range delete spans shard
+    boundaries, and every scan/reverse walk goes through the merged
+    cursor — the model doesn't change at all, which is the point."""
     t = trace if trace is not None else (lambda s: None)
     rng = random.Random(seed)
     path = os.path.join(base_dir, f"ex{seed}")
-    db = DB(path, _mkcfg(rng))
+
+    def _open(p: str):
+        if shards > 0:
+            return ShardedDB.open(p, shards=shards, config=_mkcfg(rng))
+        return DB.open(p, _mkcfg(rng))
+
+    db = _open(path)
     model = ModelDB()
     keys = [f"k{i:03d}".encode() for i in range(rng.randrange(12, 40))]
     # live read points: [(db Snapshot | None, model seq | None)]; the
@@ -272,7 +295,10 @@ def run_example(seed: int, base_dir: str, n_ops: int = 60, trace=None) -> list[s
             elif r < 0.74:
                 if len(snaps) < 4:
                     snaps.append((db.snapshot(), model.snapshot()))
-                    t(f"snapshot db={snaps[-1][0].seq} model={snaps[-1][1]}")
+                    dseq = getattr(snaps[-1][0], "seq", None)
+                    if dseq is None:  # ShardedSnapshot: one seq per shard
+                        dseq = snaps[-1][0].seqs
+                    t(f"snapshot db={dseq} model={snaps[-1][1]}")
                 elif snaps:
                     s, _ = snaps.pop(rng.randrange(len(snaps)))
                     s.release()
@@ -294,14 +320,14 @@ def run_example(seed: int, base_dir: str, n_ops: int = 60, trace=None) -> list[s
                 t("reopen")
                 db.flush()
                 db.close()
-                db = DB(path, _mkcfg(rng))
+                db = _open(path)
             else:
                 t("checkpoint")
                 ck = os.path.join(base_dir, f"ck{seed}_{_op}")
                 db.checkpoint(ck)
-                cdb = DB(ck, _mkcfg(rng))
+                cdb = _open(ck)
                 try:
-                    got = cdb.scan(b"", 1 << 20)
+                    got = list(cdb.range())
                     want = model.items_at(LATEST)
                     if got != want:
                         diverge.append(
@@ -339,14 +365,18 @@ def run_example(seed: int, base_dir: str, n_ops: int = 60, trace=None) -> list[s
 
 
 def run_differential(
-    examples: int = 500, seed: int = 0, n_ops: int = 60, verbose: bool = False
+    examples: int = 500,
+    seed: int = 0,
+    n_ops: int = 60,
+    verbose: bool = False,
+    shards: int = 0,
 ) -> dict:
     base = tempfile.mkdtemp(prefix="mvccdiff_")
     failures: list[list[str]] = []
     t0 = time.monotonic()
     try:
         for i in range(examples):
-            d = run_example(seed * 1_000_003 + i, base, n_ops)
+            d = run_example(seed * 1_000_003 + i, base, n_ops, shards=shards)
             if d:
                 failures.append(d)
             if verbose and ((i + 1) % 50 == 0 or d):
@@ -355,6 +385,7 @@ def run_differential(
         shutil.rmtree(base, ignore_errors=True)
     return {
         "examples": examples,
+        "shards": shards,
         "failures": failures,
         "seconds": round(time.monotonic() - t0, 2),
     }
@@ -365,12 +396,18 @@ def main(argv=None) -> int:
     ap.add_argument("--examples", type=int, default=500)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ops", type=int, default=60)
+    ap.add_argument(
+        "--shards", type=int, default=0,
+        help="run the spec against a ShardedDB of N engines (0 = plain DB)",
+    )
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
-    rep = run_differential(args.examples, args.seed, args.ops, args.verbose)
+    rep = run_differential(
+        args.examples, args.seed, args.ops, args.verbose, shards=args.shards
+    )
     print(
-        f"{rep['examples']} examples, {len(rep['failures'])} diverging, "
-        f"{rep['seconds']}s"
+        f"{rep['examples']} examples (shards={rep['shards']}), "
+        f"{len(rep['failures'])} diverging, {rep['seconds']}s"
     )
     for f in rep["failures"]:
         for line in f:

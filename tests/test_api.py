@@ -1,0 +1,243 @@
+"""KVStore conformance: every behavioural contract of the client surface,
+parameterized over BOTH implementations (one ``DB`` engine, a 3-shard
+``ShardedDB``) — the protocol is only real if the same test body passes
+against each."""
+import warnings
+
+import pytest
+
+from repro.core import DB, DBConfig, KVStore, ShardedDB, WriteBatch
+
+BIG = 4096  # >= value_threshold below → separated values exercised too
+
+
+def _cfg() -> DBConfig:
+    return DBConfig.bvlsm(
+        value_threshold=256,
+        memtable_size=256 << 10,
+        num_bvalue_queues=2,
+        block_cache_bytes=1 << 20,
+        bvcache_bytes=1 << 20,
+    )
+
+
+@pytest.fixture(params=["db", "sharded"])
+def store(request, tmp_path):
+    path = str(tmp_path / "store")
+    if request.param == "db":
+        s = DB.open(path, _cfg())
+    else:
+        s = ShardedDB.open(path, shards=3, config=_cfg())
+    yield s
+    s.close()
+
+
+def _reopen(store, path):
+    store.close()
+    if isinstance(store, ShardedDB):
+        return ShardedDB.open(path)  # count/partitioner come from ROUTER
+    return DB.open(path, _cfg())
+
+
+def test_satisfies_protocol(store):
+    assert isinstance(store, KVStore)
+
+
+def test_put_get_delete_roundtrip(store):
+    store.put(b"small", b"v1")
+    store.put(b"big", b"x" * BIG)
+    assert store.get(b"small") == b"v1"
+    assert store.get(b"big") == b"x" * BIG
+    assert store.get(b"absent") is None
+    store.delete(b"small")
+    assert store.get(b"small") is None
+
+
+def test_multi_get_alignment(store):
+    keys = [f"k{i:03d}".encode() for i in range(40)]
+    for i, k in enumerate(keys):
+        store.put(k, f"v{i}".encode() * (200 if i % 5 == 0 else 1))
+    probe = keys[::3] + [b"missing1", keys[0], b"missing2"]
+    got = store.multi_get(probe)
+    assert got == [store.get(k) for k in probe]
+    assert store.multi_get([]) == []
+
+
+def test_delete_range(store):
+    for i in range(30):
+        store.put(f"k{i:03d}".encode(), b"v")
+    store.delete_range(b"k005", b"k015")
+    assert [k for k, _ in store.range()] == [
+        f"k{i:03d}".encode() for i in list(range(5)) + list(range(15, 30))
+    ]
+
+
+def test_write_batch_applies_all(store):
+    for i in range(20):
+        store.put(f"k{i:03d}".encode(), b"old")
+    wb = WriteBatch()
+    for i in range(10):
+        wb.put(f"k{i:03d}".encode(), f"new{i}".encode())
+    wb.delete(b"k000").delete_range(b"k015", b"k020")
+    store.write(wb)
+    assert store.get(b"k000") is None  # later op in the batch wins
+    assert store.get(b"k016") is None  # pre-batch value range-deleted
+    assert store.get(b"k007") == b"new7"
+    assert store.get(b"k012") == b"old"
+
+
+def test_range_bounds_and_limit(store):
+    keys = [f"k{i:03d}".encode() for i in range(50)]
+    for k in keys:
+        store.put(k, b"v" + k)
+    assert [k for k, _ in store.range()] == keys
+    assert [k for k, _ in store.range(b"k010", end=b"k013")] == [
+        b"k010", b"k011", b"k012",
+    ]
+    assert [k for k, _ in store.range(b"k045", limit=3)] == [
+        b"k045", b"k046", b"k047",
+    ]
+    assert list(store.range(limit=0)) == []
+    assert list(store.range(b"zzz")) == []
+    # abandoning the generator early must not leak the cursor/snapshot
+    for _ in store.range():
+        break
+    assert [k for k, _ in store.range(limit=1)] == [b"k000"]
+
+
+def test_scan_shim_warns_and_matches_range(store):
+    for i in range(10):
+        store.put(f"k{i:03d}".encode(), b"v")
+    with pytest.warns(DeprecationWarning):
+        legacy = store.scan(b"k002", 4)
+    assert legacy == list(store.range(b"k002", limit=4))
+
+
+def test_iterator_seek_next_prev(store):
+    keys = [f"k{i:03d}".encode() for i in range(30)]
+    for k in keys:
+        store.put(k, b"v" + k)
+    with store.iterator() as cur:
+        assert cur.seek_to_first() and cur.key == b"k000"
+        assert cur.seek(b"k010") and cur.key == b"k010" and cur.value == b"vk010"
+        assert cur.next() and cur.key == b"k011"
+        assert cur.prev() and cur.key == b"k010"
+        assert cur.prev() and cur.key == b"k009"
+        assert cur.next() and cur.key == b"k010"
+        assert not cur.seek(b"zzz")
+        assert cur.prev() and cur.key == keys[-1]  # invalid prev = seek-to-last
+        walked = [cur.key]
+        while cur.prev():
+            walked.append(cur.key)
+        assert walked == keys[::-1]
+
+
+def test_snapshot_isolation(store):
+    store.put(b"a", b"1")
+    store.put(b"b", b"big" * 200)
+    snap = store.snapshot()
+    try:
+        store.put(b"a", b"2")
+        store.delete(b"b")
+        store.put(b"c", b"3")
+        assert store.get(b"a", snapshot=snap) == b"1"
+        assert store.get(b"b", snapshot=snap) == b"big" * 200
+        assert store.get(b"c", snapshot=snap) is None
+        assert store.multi_get([b"a", b"b", b"c"], snapshot=snap) == [
+            b"1", b"big" * 200, None,
+        ]
+        assert [k for k, _ in store.range(snapshot=snap)] == [b"a", b"b"]
+        assert store.get(b"a") == b"2"
+    finally:
+        snap.release()
+
+
+def test_snapshot_context_manager(store):
+    store.put(b"x", b"1")
+    with store.snapshot() as snap:
+        store.put(b"x", b"2")
+        assert store.get(b"x", snapshot=snap) == b"1"
+
+
+def test_checkpoint_then_open_copy(store, tmp_path):
+    for i in range(25):
+        store.put(f"k{i:03d}".encode(), f"v{i}".encode() * (300 if i % 4 else 1))
+    store.delete_range(b"k020", b"k023")
+    ck = str(tmp_path / "ck")
+    store.checkpoint(ck)
+    store.put(b"post-ckpt", b"not in the image")
+    copy = ShardedDB.open(ck) if isinstance(store, ShardedDB) else DB.open(ck, _cfg())
+    try:
+        want = [kv for kv in store.range() if kv[0] != b"post-ckpt"]
+        assert list(copy.range()) == want
+    finally:
+        copy.close()
+
+
+def test_stats_is_callable_dict(store):
+    store.put(b"k", b"v")
+    st = store.stats()
+    assert isinstance(st, dict)
+    # both implementations expose the user-write counter (ShardedDB under
+    # "aggregate" plus untouched per-shard dicts)
+    if isinstance(store, ShardedDB):
+        assert st["aggregate"]["user_writes"] == 1
+        assert len(st["per_shard"]) == 3
+    else:
+        assert st["user_writes"] == 1
+
+
+def test_flush_then_reopen_durable(store, tmp_path):
+    path = str(tmp_path / "store")
+    for i in range(15):
+        store.put(f"k{i:03d}".encode(), b"v" * (400 if i % 2 else 4))
+    store.flush()
+    store = _reopen(store, path)
+    try:
+        assert len(list(store.range())) == 15
+    finally:
+        store.close()
+
+
+def test_verify_integrity_clean(store):
+    for i in range(10):
+        store.put(f"k{i:03d}".encode(), b"v" * 500)
+    store.flush()
+    rep = store.verify_integrity()
+    assert rep["corruptions"] == []
+
+
+def test_bvstore_accepts_injected_kvstore(store):
+    """checkpoint/bvstore rides any KVStore: save/load a tiny pytree
+    through the injected store (DB and ShardedDB alike)."""
+    np = pytest.importorskip("numpy")
+    from repro.checkpoint.bvstore import BVCheckpointStore
+
+    cs = BVCheckpointStore("ignored", db=store)
+    state = {"w": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    cs.save(3, state)
+    assert cs.steps() == [3]
+    loaded, meta = cs.load(3)
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(loaded["['w']"], state["w"])
+    # do NOT cs.close(): the fixture owns the store's lifetime
+
+
+def test_page_spill_store_roundtrip(store):
+    np = pytest.importorskip("numpy")
+    from repro.serving.kv_cache import PageSpillStore
+
+    spill = PageSpillStore(store)
+    pages = {
+        (layer, seq, p): np.random.default_rng(layer + p).standard_normal(
+            (8, 16)
+        ).astype(np.float32)
+        for layer in range(2) for seq in (7,) for p in range(3)
+    }
+    for key, page in pages.items():
+        spill.spill(key, page)
+    got = spill.restore_many(list(pages) + [(9, 9, 9)])
+    for (key, page), g in zip(pages.items(), got):
+        np.testing.assert_array_equal(g, page)
+    assert got[-1] is None
+    np.testing.assert_array_equal(spill.restore((0, 7, 0)), pages[(0, 7, 0)])

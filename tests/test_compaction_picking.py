@@ -85,7 +85,7 @@ def test_trivial_move_promotes_without_rewrite(tmp_db_dir):
         # the same physical table serves reads from its new level
         for k, val in vals.items():
             assert db.get(k) == val, k
-        out = db.scan(b"", 1000)
+        out = list(db.range(limit=1000))
         keys = [k for k, _ in out]
         assert keys == sorted(keys) and len(keys) == 200
     finally:
@@ -109,7 +109,7 @@ def test_trivial_move_survives_crash_reopen(tmp_db_dir):
         assert live == on_disk
         for k, val in vals.items():
             assert db2.get(k) == val, k
-        keys = [k for k, _ in db2.scan(b"", 1000)]
+        keys = [k for k, _ in db2.range(limit=1000)]
         assert keys == sorted(keys) and len(keys) == 150
     finally:
         db2.close()

@@ -214,7 +214,7 @@ def test_scan_merges_all_levels(tmp_db_dir):
         db.flush()
         for i in range(50, 150):
             db.put(f"s{i:04d}".encode(), b"y" * 700)  # overwrite + extend
-        got = db.scan(b"s0040", 30)
+        got = list(db.range(b"s0040", limit=30))
         assert [k for k, _ in got] == [f"s{i:04d}".encode() for i in range(40, 70)]
         for k, v in got:
             i = int(k[1:])
@@ -315,7 +315,7 @@ def test_engine_matches_model_dict(ops, mode):
         for k, v in model.items():
             assert db.get(k) == v
         # scan equivalence
-        got = dict(db.scan(b"", 1000))
+        got = dict(db.range(limit=1000))
         assert got == model
         # reopen equivalence
         db.close()

@@ -201,7 +201,7 @@ def test_scan_streams_from_cursor(tmp_db_dir):
         for i in range(30):
             db.put(f"k{i:03d}".encode(), f"v{i}".encode())
         db.flush()
-        got = db.scan(b"k010", 5)
+        got = list(db.range(b"k010", limit=5))
         assert [k for k, _ in got] == [f"k{i:03d}".encode() for i in range(10, 15)]
         assert got[0][1] == b"v10"
     finally:
@@ -231,7 +231,7 @@ def test_range_tombstone_visibility(tmp_db_dir):
         db.compact_all()
         assert db.get(b"b") is None
         assert db.get(b"b", snapshot=snap) == b"v_b"
-        assert [k for k, _ in db.scan(b"", 10)] == [b"a", b"d"]
+        assert [k for k, _ in db.range(limit=10)] == [b"a", b"d"]
         snap.release()
     finally:
         db.close()

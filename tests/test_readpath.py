@@ -144,7 +144,7 @@ def test_v1_db_directory_compat(tmp_db_dir):
         for k, v in vals.items():
             assert db.get(k) == v
         assert db.get(b"k0007") is None
-        got = db.scan(b"k0100", 20)
+        got = list(db.range(b"k0100", limit=20))
         assert [k for k, _ in got] == sorted(k for k in vals if k >= b"k0100")[:20]
         assert [v for _, v in got] == [vals[k] for k, _ in got]
         # mixed-version directory: new flushes are v2, old v1 files still serve
@@ -319,12 +319,12 @@ def test_scan_correct_with_and_without_cache(tmp_db_dir):
                 expect[k] = v
             db.flush()
             db.compact_all()
-            got = db.scan(b"k0100", 50)
+            got = list(db.range(b"k0100", limit=50))
             want = sorted(k for k in expect if k >= b"k0100")[:50]
             assert [k for k, _ in got] == want
             assert all(v == expect[k] for k, v in got)
             # re-scan hits the now-cached blocks and must agree
-            assert db.scan(b"k0100", 50) == got
+            assert list(db.range(b"k0100", limit=50)) == got
         finally:
             db.close()
 
@@ -370,7 +370,7 @@ def test_lazy_scan_opens_few_files(tmp_db_dir, monkeypatch):
             return real(self, start, *a, **kw)
 
         monkeypatch.setattr(SSTableReader, "iter_from", counting_iter_from)
-        out = db.scan(b"k00250", 10)
+        out = list(db.range(b"k00250", limit=10))
         assert [k for k, _ in out] == [f"k{i:05d}".encode() for i in range(250, 260)]
         assert all(v == b"new" for _, v in out)  # L1 shadows L2
         # one file per populated level (L1 + L2), +2 slack for a concat

@@ -287,10 +287,14 @@ class TestErrorClassification:
 
         monkeypatch.setattr(DB, "_scan_attempts", flaky)
         with pytest.raises(SnapshotUnstableError):
-            db.scan(b"", 10)
+            with pytest.warns(DeprecationWarning):
+                db.scan(b"", 10)
         assert calls["n"] == 2, "expected one bounded backoff round"
         monkeypatch.setattr(DB, "_scan_attempts", real)
-        assert len(db.scan(b"", 10)) == 10
+        # the deprecated shim still returns the same rows range() streams
+        with pytest.warns(DeprecationWarning):
+            legacy = db.scan(b"", 10)
+        assert legacy == list(db.range(limit=10)) and len(legacy) == 10
         db.close()
 
 
@@ -535,7 +539,7 @@ def test_checkpoint_crash_before_manifest_rename_leaves_non_db(tmp_path):
         ck2 = str(tmp_path / "ck2")
         db.checkpoint(ck2)
         cdb = DB(ck2, _cfg(None))
-        assert len(cdb.scan(b"", 1 << 20)) == len(data)
+        assert len(list(cdb.range())) == len(data)
         cdb.close()
     finally:
         db.close()
@@ -585,11 +589,11 @@ def test_crash_matrix_checkpoint_link_edge(tmp_path):
         except Exception:
             break
     db = _kill_and_reopen(db, env, main, memtable_size=4096)
-    db.scan(b"", 1 << 20)
+    list(db.range())
     db.close()
     for ck in committed:
         cdb = DB(ck, _cfg(None))
-        cdb.scan(b"", 1 << 20)
+        list(cdb.range())
         cdb.close()
 
 

@@ -57,7 +57,7 @@ def _pair(tmp_path, wal_mode="sync", seed_writes=30, penv=None, renv=None,
 
 
 def _scan_all(db):
-    return {k: v for k, v in db.scan(b"", 1 << 20)}
+    return dict(db.range())
 
 
 def _converge(link, timeout=10.0):

@@ -66,7 +66,7 @@ def test_subcompactions_split_and_preserve_reads(tmp_db_dir):
         for k, v in vals.items():
             assert db.get(k) == v, k
         # merged view stays sorted and deduped across shard boundaries
-        out = db.scan(b"", 5000)
+        out = list(db.range(limit=5000))
         keys = [k for k, _ in out]
         assert keys == sorted(set(keys))
         assert len(keys) == 1500

@@ -1,0 +1,334 @@
+"""ShardedDB router internals: placement, the cross-shard batch commit
+protocol (intent log, crash replay, truncation), merged-cursor ordering
+across shard boundaries, manifest mismatch detection, per-shard cache
+budgets. The KVStore-level behaviour shared with ``DB`` lives in
+``test_api.py``; the randomized differential proof in
+``repro.testing.model_db --shards N``."""
+import os
+
+import pytest
+
+from repro.core import (
+    DB,
+    DBConfig,
+    HashPartitioner,
+    RangePartitioner,
+    ShardedDB,
+    WriteBatch,
+)
+from repro.core.sharded import ROUTER_LOG_NAME, ROUTER_NAME, _RouterLog
+from repro.core.env import DEFAULT_ENV
+
+
+def _cfg(**kw) -> DBConfig:
+    base = dict(
+        value_threshold=128,
+        memtable_size=256 << 10,
+        num_bvalue_queues=2,
+        block_cache_bytes=4 << 20,
+        bvcache_bytes=4 << 20,
+    )
+    base.update(kw)
+    return DBConfig.bvlsm(**base)
+
+
+def _fill(s, n=60, prefix="k"):
+    data = {}
+    for i in range(n):
+        k = f"{prefix}{i:04d}".encode()
+        v = f"v{i}".encode() * (40 if i % 7 == 0 else 1)
+        s.put(k, v)
+        data[k] = v
+    return data
+
+
+# ---------------------------------------------------------------------------
+# partitioners
+# ---------------------------------------------------------------------------
+class TestPartitioners:
+    def test_hash_is_deterministic_and_spreads(self):
+        p = HashPartitioner(4)
+        keys = [f"user{i}".encode() for i in range(400)]
+        homes = [p.shard_of(k) for k in keys]
+        assert homes == [p.shard_of(k) for k in keys]
+        counts = [homes.count(i) for i in range(4)]
+        assert all(c > 40 for c in counts), counts  # roughly uniform
+        # an interval scatters: every shard gets the full range
+        assert p.shards_for_range(b"a", b"z") == [
+            (i, b"a", b"z") for i in range(4)
+        ]
+
+    def test_range_shard_of_and_clipping(self):
+        p = RangePartitioner([b"g", b"p"])
+        assert p.num_shards == 3
+        assert p.shard_of(b"a") == 0
+        assert p.shard_of(b"g") == 1  # boundary belongs to the right shard
+        assert p.shard_of(b"zz") == 2
+        assert p.shards_for_range(b"a", b"c") == [(0, b"a", b"c")]
+        assert p.shards_for_range(b"e", b"r") == [
+            (0, b"e", b"g"), (1, b"g", b"p"), (2, b"p", b"r"),
+        ]
+        # end exactly on a boundary: the right-hand shard gets nothing
+        assert p.shards_for_range(b"e", b"g") == [(0, b"e", b"g")]
+        assert p.shards_for_range(b"g", b"p") == [(1, b"g", b"p")]
+
+    def test_range_boundary_validation(self):
+        with pytest.raises(ValueError):
+            RangePartitioner([b"p", b"g"])  # unsorted
+        with pytest.raises(ValueError):
+            ShardedDB.open("unused", shards=3, partitioner="range",
+                           boundaries=[b"m"])  # needs shards-1 boundaries
+        with pytest.raises(ValueError):
+            ShardedDB.open("unused", shards=2, partitioner="nope")
+
+    def test_routing_matches_placement(self, tmp_path):
+        s = ShardedDB.open(str(tmp_path / "s"), shards=3, config=_cfg())
+        data = _fill(s, 60)
+        for k, v in data.items():
+            home = s.shard_of(k)
+            assert s.shards[home].get(k) == v
+            for i, shard in enumerate(s.shards):
+                if i != home:
+                    assert shard.get(k) is None
+        s.close()
+
+
+# ---------------------------------------------------------------------------
+# range-partitioned stores
+# ---------------------------------------------------------------------------
+class TestRangePartitioned:
+    def test_order_and_clipped_delete_range(self, tmp_path):
+        s = ShardedDB.open(
+            str(tmp_path / "s"), shards=3, config=_cfg(),
+            partitioner="range", boundaries=[b"k0020", b"k0040"],
+        )
+        data = _fill(s, 60)
+        assert [k for k, _ in s.range()] == sorted(data)
+        # spans shards 1 and 2; shard 0 must see no tombstone at all
+        s.delete_range(b"k0030", b"k0050")
+        survivors = [k for k in sorted(data)
+                     if not (b"k0030" <= k < b"k0050")]
+        assert [k for k, _ in s.range()] == survivors
+        assert s.shards[0].stats()["user_writes"] == 20  # puts only, no tomb
+        # reopen restores the persisted boundaries
+        s.close()
+        s = ShardedDB.open(str(tmp_path / "s"))
+        assert isinstance(s.partitioner, RangePartitioner)
+        assert s.partitioner.boundaries == [b"k0020", b"k0040"]
+        assert [k for k, _ in s.range()] == survivors
+        s.close()
+
+    def test_merged_cursor_walks_across_boundaries(self, tmp_path):
+        s = ShardedDB.open(
+            str(tmp_path / "s"), shards=2, config=_cfg(),
+            partitioner="range", boundaries=[b"k0010"],
+        )
+        keys = sorted(_fill(s, 20))
+        with s.iterator() as cur:
+            # forward across the shard boundary
+            assert cur.seek(b"k0008") and cur.key == b"k0008"
+            walked = [cur.key]
+            while len(walked) < 6 and cur.next():
+                walked.append(cur.key)
+            assert walked == keys[8:14]
+            # reverse back across it
+            assert cur.prev() and cur.key == b"k0012"
+            assert cur.prev() and cur.key == b"k0011"
+            assert cur.prev() and cur.key == b"k0010"
+            assert cur.prev() and cur.key == b"k0009"
+        s.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-shard batch protocol
+# ---------------------------------------------------------------------------
+class TestCrossShardBatches:
+    def test_single_shard_batch_skips_the_log(self, tmp_path):
+        s = ShardedDB.open(str(tmp_path / "s"), shards=3, config=_cfg())
+        k = b"solo-key"
+        wb = WriteBatch().put(k, b"1").put(k, b"2").delete(k)
+        s.write(wb)
+        st = s.stats()
+        assert st["router"]["single_shard_batches"] == 1
+        assert st["router"]["cross_shard_batches"] == 0
+        assert st["router_log_bytes"] == 0
+        s.close()
+
+    def test_torn_batch_completed_at_reopen(self, tmp_path):
+        path = str(tmp_path / "s")
+        s = ShardedDB.open(path, shards=3, config=_cfg())
+        _fill(s, 30)
+        # crash between apply and commit: one shard's write dies, the
+        # intent is durable, no commit record follows
+        victim = s.shards[2]
+        victim.write = lambda batch: (_ for _ in ()).throw(
+            RuntimeError("simulated crash mid fan-out")
+        )
+        wb = WriteBatch()
+        for i in range(30):
+            wb.put(f"k{i:04d}".encode(), b"TORN")
+        with pytest.raises(RuntimeError):
+            s.write(wb)
+        s.close(crash=True)
+
+        s = ShardedDB.open(path, config=_cfg())
+        assert s.stats()["router"]["replayed_batches"] == 1
+        for i in range(30):
+            assert s.get(f"k{i:04d}".encode()) == b"TORN", i
+        assert s.stats()["router_log_bytes"] == 0  # truncated after replay
+        s.close()
+        # second reopen: nothing left to replay
+        s = ShardedDB.open(path, config=_cfg())
+        assert s.stats()["router"]["replayed_batches"] == 0
+        s.close()
+
+    def test_intent_without_commit_in_raw_log(self, tmp_path):
+        """Belt and braces: hand-write an intent record (no commit) into
+        ROUTER_LOG and check open() applies it — the replay path does not
+        depend on how the intent got there."""
+        path = str(tmp_path / "s")
+        s = ShardedDB.open(path, shards=2, config=_cfg())
+        targets = {i: s.shard_of(f"x{i}".encode()) for i in range(12)}
+        assert set(targets.values()) == {0, 1}, "want keys on both shards"
+        s.close()
+        log = _RouterLog(os.path.join(path, ROUTER_LOG_NAME), DEFAULT_ENV)
+        ops: dict[int, list] = {}
+        for i, shard in targets.items():
+            ops.setdefault(shard, []).append([1, b"x%d" % i, b"injected"])
+        log.append(
+            {"t": "i", "id": 77, "ops": sorted(ops.items())}, sync=True
+        )
+        log.close()
+        s = ShardedDB.open(path, config=_cfg())
+        assert s.stats()["router"]["replayed_batches"] == 1
+        for i in range(12):
+            assert s.get(b"x%d" % i) == b"injected"
+        s.close()
+
+    def test_torn_tail_of_log_is_dropped(self, tmp_path):
+        path = str(tmp_path / "s")
+        s = ShardedDB.open(path, shards=2, config=_cfg())
+        s.close()
+        with open(os.path.join(path, ROUTER_LOG_NAME), "ab") as f:
+            f.write(b"\x01\x02\x03")  # garbage shorter than a frame header
+        s = ShardedDB.open(path, config=_cfg())  # must not raise
+        assert s.stats()["router"]["replayed_batches"] == 0
+        s.put(b"k", b"v")
+        assert s.get(b"k") == b"v"
+        s.close()
+
+    def test_log_truncates_past_budget(self, tmp_path):
+        cfg = _cfg(router_log_max_bytes=2048)
+        s = ShardedDB.open(str(tmp_path / "s"), shards=3, config=cfg)
+        for round_ in range(8):
+            wb = WriteBatch()
+            for i in range(30):
+                wb.put(f"k{i:04d}".encode(), b"r%d" % round_ + b"x" * 64)
+            s.write(wb)
+        st = s.stats()
+        assert st["router"]["log_truncations"] >= 1
+        assert st["router_log_bytes"] <= 2048 + 4096  # at most one batch over
+        for i in range(30):
+            assert s.get(f"k{i:04d}".encode()).startswith(b"r7")
+        s.close()
+
+    def test_async_wal_mode_batches(self, tmp_path):
+        s = ShardedDB.open(
+            str(tmp_path / "s"), shards=3, config=_cfg(wal_mode="async")
+        )
+        wb = WriteBatch()
+        for i in range(40):
+            wb.put(f"k{i:04d}".encode(), b"async")
+        s.write(wb)
+        assert all(v == b"async" for v in s.multi_get(
+            [f"k{i:04d}".encode() for i in range(40)]
+        ))
+        s.close()
+
+
+# ---------------------------------------------------------------------------
+# manifest / lifecycle
+# ---------------------------------------------------------------------------
+class TestManifest:
+    def test_open_without_shards_on_fresh_path_raises(self, tmp_path):
+        with pytest.raises(ValueError, match="pass shards"):
+            ShardedDB.open(str(tmp_path / "nope"))
+
+    def test_shard_count_mismatch(self, tmp_path):
+        path = str(tmp_path / "s")
+        ShardedDB.open(path, shards=4, config=_cfg()).close()
+        with pytest.raises(ValueError, match="shard-count mismatch"):
+            ShardedDB.open(path, shards=2)
+        s = ShardedDB.open(path)  # unspecified adopts the manifest
+        assert s.num_shards == 4
+        s.close()
+        s = ShardedDB.open(path, shards=4)  # matching is fine
+        s.close()
+
+    def test_partitioner_mismatch(self, tmp_path):
+        path = str(tmp_path / "s")
+        ShardedDB.open(path, shards=4, config=_cfg()).close()
+        with pytest.raises(ValueError, match="partitioner mismatch"):
+            ShardedDB.open(path, partitioner="range", boundaries=None)
+
+    def test_checkpoint_image_is_a_sharded_store(self, tmp_path):
+        s = ShardedDB.open(str(tmp_path / "s"), shards=3, config=_cfg())
+        data = _fill(s, 40)
+        ck = str(tmp_path / "ck")
+        s.checkpoint(ck)
+        assert os.path.exists(os.path.join(ck, ROUTER_NAME))
+        assert not os.path.exists(os.path.join(ck, ROUTER_LOG_NAME))
+        s.put(b"later", b"not in image")
+        copy = ShardedDB.open(ck)
+        assert dict(copy.range()) == data
+        copy.close()
+        s.close()
+
+    def test_cache_budget_division(self, tmp_path):
+        cfg = _cfg(block_cache_bytes=8 << 20, bvcache_bytes=4 << 20)
+        s = ShardedDB.open(str(tmp_path / "a"), shards=4, config=cfg)
+        assert all(
+            sh.cfg.block_cache_bytes == 2 << 20
+            and sh.cfg.bvcache_bytes == 1 << 20
+            for sh in s.shards
+        )
+        assert cfg.block_cache_bytes == 8 << 20  # caller's config untouched
+        s.close()
+        cfg2 = _cfg(shard_divide_cache_budget=False, block_cache_bytes=8 << 20)
+        s = ShardedDB.open(str(tmp_path / "b"), shards=4, config=cfg2)
+        assert all(sh.cfg.block_cache_bytes == 8 << 20 for sh in s.shards)
+        s.close()
+
+    def test_maintenance_fanout(self, tmp_path):
+        s = ShardedDB.open(str(tmp_path / "s"), shards=2, config=_cfg())
+        for i in range(40):
+            s.put(f"k{i:04d}".encode(), b"v" * 300)  # separated values
+        for i in range(0, 40, 2):
+            s.delete(f"k{i:04d}".encode())
+        s.flush()
+        s.compact_all()
+        s.wait_idle()
+        rep = s.gc_collect(threshold=0.01)
+        assert len(rep["per_shard"]) == 2
+        assert [k for k, _ in s.range()] == [
+            f"k{i:04d}".encode() for i in range(1, 40, 2)
+        ]
+        st = s.stats()
+        assert st["aggregate"]["user_writes"] == sum(
+            p["user_writes"] for p in st["per_shard"]
+        )
+        s.close()
+
+    def test_serial_fanout_mode(self, tmp_path):
+        s = ShardedDB.open(
+            str(tmp_path / "s"), shards=3,
+            config=_cfg(router_parallel_fanout=False),
+        )
+        assert s._pool is None
+        data = _fill(s, 30)
+        wb = WriteBatch()
+        for k in data:
+            wb.put(k, b"serial")
+        s.write(wb)
+        assert all(v == b"serial" for v in s.multi_get(list(data)))
+        s.close()
